@@ -1,0 +1,68 @@
+"""Checkpoint compression benchmark: zlib vs wavelet+zlib codecs.
+
+Honest accounting: LM weight matrices are not smooth signals, so the DWT
+mostly helps via the int16 quantization (2x) plus mild band decorrelation;
+optimizer second moments and embeddings compress best.  Reported per-codec
+ratio and save/restore round-trip fidelity.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.launch.train import init_train_state
+
+
+def run() -> list:
+    rows = []
+    cfg = reduced(get_config("stablelm-1.6b"))
+    state = init_train_state(cfg, seed=0)
+    # give the optimizer state realistic (non-zero, smooth-ish) statistics
+    state["opt"] = state["opt"]._replace(
+        m=jax.tree_util.tree_map(lambda p: p.astype(jnp.float32) * 0.01, state["params"]),
+        v=jax.tree_util.tree_map(
+            lambda p: jnp.abs(p.astype(jnp.float32)) * 1e-4 + 1e-8, state["params"]
+        ),
+    )
+    for codec in ("z", "wz"):
+        with tempfile.TemporaryDirectory() as td:
+            mgr = CheckpointManager(td, keep=1, codec=codec)
+            t0 = time.perf_counter()
+            mgr.save(1, state, blocking=True)
+            t_save = time.perf_counter() - t0
+            rep = mgr.compression_report(1)
+            step, restored = mgr.restore(1, template=state)
+            if codec == "z":
+                exact = all(
+                    bool(jnp.array_equal(a, b))
+                    for a, b in zip(
+                        jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(restored),
+                    )
+                )
+                rows.append(("ckpt.z.lossless_roundtrip", int(exact), "must be 1"))
+            else:
+                errs = [
+                    float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+                    / (float(jnp.max(jnp.abs(a.astype(jnp.float32)))) + 1e-12)
+                    for a, b in zip(
+                        jax.tree_util.tree_leaves(state["params"]),
+                        jax.tree_util.tree_leaves(restored["params"]),
+                    )
+                ]
+                rows.append(
+                    ("ckpt.wz.max_rel_error", round(max(errs), 6),
+                     "bounded by int16 quantization (~3e-5)")
+                )
+            rows.append(
+                (f"ckpt.{codec}.ratio", round(rep["ratio"], 3),
+                 f"raw {rep['raw_bytes']} -> {rep['stored_bytes']}")
+            )
+            rows.append((f"ckpt.{codec}.save_s", round(t_save, 3), "blocking save"))
+    return rows

@@ -1,0 +1,85 @@
+"""Generate the EXPERIMENTS.md tables from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.experiments_tables > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [
+        "| arch | cell | status | compile s | peak mem/dev (GiB) | HLO flops (global) | wire bytes/dev | collective ops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if d["status"] == "SKIP":
+            lines.append(
+                f"| {d['arch']} | {d['cell']} | SKIP | - | - | - | - | {d['reason'][:40]} |"
+            )
+            continue
+        if d["status"] != "OK":
+            lines.append(f"| {d['arch']} | {d['cell']} | FAIL | - | - | - | - | {d.get('error','')[:40]} |")
+            continue
+        mem = d["memory_analysis"]["peak_bytes_est"]
+        coll = d["collectives"]
+        ops = " ".join(f"{k}:{v}" for k, v in sorted(coll.get("counts", {}).items()))
+        flops = d["roofline"]["hlo_flops"]
+        lines.append(
+            f"| {d['arch']} | {d['cell']} | OK | {d['compile_s']} | {fmt_bytes(mem)} "
+            f"| {flops:.3e} | {coll['wire_bytes_per_device']:.3e} | {ops[:60]} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = [
+        "| arch | cell | compute s | memory s | collective s | dominant | MODEL flops | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(ARTIFACTS.glob("*__pod16x16.json")):
+        d = json.loads(f.read_text())
+        if d["status"] != "OK":
+            if d["status"] == "SKIP":
+                lines.append(f"| {d['arch']} | {d['cell']} | - | - | - | SKIP | - | - | {d['reason'][:45]} |")
+            continue
+        r = d["roofline"]
+        note = _note_for(r)
+        lines.append(
+            f"| {d['arch']} | {d['cell']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_ratio']:.3f} | {note} |"
+        )
+    return "\n".join(lines)
+
+
+def _note_for(r) -> str:
+    d = r["dominant"]
+    if d == "collective":
+        return "reduce TP all-gathers / shard differently"
+    if d == "memory":
+        return "fuse/chunk big fp32 intermediates (CE, scores)"
+    return "cut remat + masked-attn waste"
+
+
+def main() -> None:
+    print("## Dry-run - single pod (16x16 = 256 chips)\n")
+    print(dryrun_table("pod16x16"))
+    print("\n## Dry-run - multi pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table("pod2x16x16"))
+    print("\n## Roofline (single-pod, probe-corrected)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

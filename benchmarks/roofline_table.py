@@ -1,0 +1,45 @@
+"""Roofline summary from the dry-run artifacts (single-pod, per assignment).
+
+Run ``python -m repro.launch.dryrun --all`` first; this bench aggregates
+artifacts/dryrun/*.json into the §Roofline table.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_reports(mesh: str = "pod16x16"):
+    out = []
+    for f in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        data = json.loads(f.read_text())
+        out.append(data)
+    return out
+
+
+def run() -> list:
+    rows = []
+    reports = load_reports()
+    if not reports:
+        return [("roofline.missing", 0, "run python -m repro.launch.dryrun --all first")]
+    n_ok = sum(1 for r in reports if r["status"] == "OK")
+    n_skip = sum(1 for r in reports if r["status"] == "SKIP")
+    n_fail = sum(1 for r in reports if r["status"] == "FAIL")
+    rows.append(("roofline.cells_ok", n_ok, f"skip {n_skip} fail {n_fail} (single-pod)"))
+    for r in reports:
+        if r["status"] != "OK":
+            continue
+        rl = r["roofline"]
+        key = f"{r['arch']}.{r['cell']}"
+        total = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        rows.append(
+            (
+                f"roofline.{key}.dominant_s",
+                f"{total:.4f}",
+                f"{rl['dominant']} | C {rl['compute_s']:.4f} M {rl['memory_s']:.4f} "
+                f"N {rl['collective_s']:.4f} | useful {rl['useful_ratio']:.3f}",
+            )
+        )
+    return rows

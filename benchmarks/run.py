@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure + framework-level
+benches. Prints ``name,value,notes`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig5,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+ALL = ["table2", "table3", "fig5", "gradsync", "ckpt", "roofline"]
+
+
+def _load(name: str):
+    if name == "table2":
+        from benchmarks import table2_opcounts as m
+    elif name == "table3":
+        from benchmarks import table3_timing as m
+    elif name == "fig5":
+        from benchmarks import fig5_lossless as m
+    elif name == "gradsync":
+        from benchmarks import grad_compression as m
+    elif name == "ckpt":
+        from benchmarks import ckpt_compression as m
+    elif name == "roofline":
+        from benchmarks import roofline_table as m
+    else:
+        raise KeyError(name)
+    return m
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else ALL
+
+    print("name,value,notes")
+    failures = 0
+    for name in names:
+        try:
+            rows = _load(name).run()
+            for key, value, notes in rows:
+                print(f"{key},{value},{notes}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}.ERROR,{type(e).__name__},{e}")
+            traceback.print_exc(file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""Multi-pod training with wavelet-codec gradient sync (the paper's
+transform in the distributed-optimization path).
+
+Runs on 8 emulated host devices as a (pod=2, data=2, model=2) mesh and
+compares the compressed-sync step against the full-fidelity baseline.
+
+    PYTHONPATH=src python examples/multipod_train.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.data.pipeline import DataConfig, SyntheticLM  # noqa: E402
+from repro.launch.train import init_train_state  # noqa: E402
+from repro.train import optim  # noqa: E402
+from repro.train.grad_compress import WaveletSyncConfig, pod_collective_bytes  # noqa: E402
+from repro.train.train_step import (  # noqa: E402
+    init_podded_error_feedback,
+    make_train_step,
+    make_wavelet_train_step,
+    podded,
+    podded_opt,
+)
+
+
+def main():
+    cfg = reduced(get_config("stablelm-1.6b"))
+    mesh = jax.make_mesh(
+        (2, 2, 2), ("pod", "data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 3,
+    )
+    state = init_train_state(cfg, 0)
+    opt_cfg = optim.AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+    sync = WaveletSyncConfig(levels=2, codec="bands", n_pods=2, min_size=256)
+    raw, comp = pod_collective_bytes(state["params"], sync)
+    print(f"inter-pod gradient sync: {raw} -> {comp} wire bytes "
+          f"({raw / comp:.2f}x reduction via integer-DWT band codec)")
+
+    wstep = make_wavelet_train_step(cfg, mesh, opt_cfg, sync)
+    bstep = jax.jit(make_train_step(cfg, opt_cfg))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8))
+
+    with mesh:
+        pw, ow = podded(state["params"], 2), podded_opt(state["opt"], 2)
+        err = init_podded_error_feedback(state["params"], 2)
+        pb, ob = state["params"], state["opt"]
+        for s in range(30):
+            b = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+            pw, ow, err, mw = wstep(pw, ow, err, b)
+            pb, ob, mb = bstep(pb, ob, b)
+            if s % 5 == 0:
+                print(f"step {s:3d}: compressed-sync loss {float(mw['loss']):.4f} | "
+                      f"full-fidelity loss {float(mb['loss']):.4f}")
+        leaf = jax.tree_util.tree_leaves(pw)[3]
+        print("pod replicas bit-identical:", bool(jnp.array_equal(leaf[0], leaf[1])))
+
+
+if __name__ == "__main__":
+    main()

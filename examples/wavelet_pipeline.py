@@ -1,0 +1,60 @@
+"""The paper's own application: line-based signal compression.
+
+Encodes a synthetic "sound line" stream (the paper's test: lines of 256
+8-bit samples) through the integer DWT -> band quantization -> zlib chain
+and reports compression ratio + losslessness, using the Pallas kernel path
+for the transform.
+
+    PYTHONPATH=src python examples/wavelet_pipeline.py
+"""
+import zlib
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import lifting as L
+from repro.kernels import ops
+
+
+def make_signal(n_lines: int = 64, line: int = 256, seed: int = 7) -> np.ndarray:
+    """Smooth band-limited 'audio' lines + noise, 8-bit positive."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(line)
+    lines = []
+    for _ in range(n_lines):
+        f1, f2 = rng.uniform(0.01, 0.05), rng.uniform(0.05, 0.2)
+        sig = 100 * np.sin(2 * np.pi * f1 * t + rng.uniform(0, 6)) \
+            + 20 * np.sin(2 * np.pi * f2 * t) + rng.normal(0, 3, line)
+        lines.append(np.clip(np.round(sig + 128), 0, 255))
+    return np.stack(lines).astype(np.int32)
+
+
+def main():
+    x = jnp.asarray(make_signal())
+    levels = 3
+
+    # forward transform on the kernel path
+    pyr = ops.dwt53_fwd(x, levels=levels)
+
+    # entropy-code raw vs band-packed (lossless: keep full precision bands)
+    raw_bytes = len(zlib.compress(np.asarray(x, np.int16).tobytes(), 6))
+    packed = np.asarray(L.pack(pyr), np.int16)
+    dwt_bytes = len(zlib.compress(packed.tobytes(), 6))
+    print(f"lines: {x.shape}, levels: {levels}")
+    print(f"zlib(raw int16)        : {raw_bytes:8d} bytes")
+    print(f"zlib(DWT bands int16)  : {dwt_bytes:8d} bytes "
+          f"({raw_bytes / dwt_bytes:.2f}x better)")
+
+    # lossless reconstruction through the kernel path
+    x_rec = ops.dwt53_inv(pyr)
+    print("lossless reconstruction:", bool((x_rec == x).all()))
+
+    # band energy profile (why it compresses: energy compaction)
+    e_total = float(jnp.sum(x.astype(jnp.float32) ** 2))
+    e_approx = float(jnp.sum(pyr.approx.astype(jnp.float32) ** 2))
+    print(f"approx band holds {100 * e_approx / e_total:.1f}% of signal energy "
+          f"in {pyr.approx.shape[-1]}/{x.shape[-1]} samples")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Checkpointing: atomic, per-leaf shards, keep-k, integrity manifest,
+optional wavelet compression, async save.
+
+Layout:
+    <dir>/step_<N>/
+        manifest.json        {leaf_path: {file, sha256, shape, dtype, codec}}
+        <leaf>.bin[.z|.wz]   raw | zlib | wavelet+zlib payloads
+    <dir>/LATEST             atomic pointer file (written last)
+
+Codecs:
+    raw  — np.tobytes
+    z    — zlib(raw)                                (lossless, default)
+    wz   — zlib(int-DWT(int16-quantized tensor))    (lossy, fast-restart
+           snapshots; per-tensor max-abs scale stored in the manifest;
+           the integer DWT itself is lossless — only the fp->int16
+           quantization loses precision, bounded by scale/2)
+
+Fault-tolerance contract: a crash at ANY point leaves either the previous
+LATEST intact or a fully-written new step (manifest written before LATEST,
+LATEST update is an atomic rename).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import compression as C
+from repro.core import lifting
+
+PyTree = Any
+
+
+def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def _encode(arr: np.ndarray, codec: str, wavelet_levels: int) -> Tuple[bytes, Dict]:
+    meta: Dict[str, Any] = {}
+    if codec == "raw":
+        return arr.tobytes(), meta
+    if codec == "z":
+        return zlib.compress(arr.tobytes(), level=1), meta
+    if codec == "wz":
+        import jax.numpy as jnp
+
+        # transform headroom: the (5,3) bands grow ~1 bit/level, so quantize
+        # to int16 >> levels so the packed bands still fit int16 exactly
+        lim = float(32767 >> (wavelet_levels + 1))
+        scale = float(np.max(np.abs(arr.astype(np.float32))) or 1.0) / lim
+        scale = max(scale, 1e-12)
+        q = np.clip(np.round(arr.astype(np.float32) / scale), -lim, lim)
+        flat = q.reshape(-1).astype(np.int32)
+        m = 1 << wavelet_levels
+        pad = (-len(flat)) % m
+        if pad:
+            flat = np.pad(flat, (0, pad))
+        pyr = lifting.dwt53_fwd(jnp.asarray(flat[None]), levels=wavelet_levels)
+        packed = np.asarray(lifting.pack(pyr))[0].astype(np.int16)
+        meta = {"scale": scale, "padded_len": int(len(flat)), "levels": wavelet_levels}
+        return zlib.compress(packed.tobytes(), level=1), meta
+    raise ValueError(codec)
+
+
+def _decode(data: bytes, shape, dtype, codec: str, meta: Dict) -> np.ndarray:
+    if codec == "raw":
+        return np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+    if codec == "z":
+        return np.frombuffer(zlib.decompress(data), dtype=dtype).reshape(shape).copy()
+    if codec == "wz":
+        import jax.numpy as jnp
+
+        packed = np.frombuffer(zlib.decompress(data), dtype=np.int16).astype(np.int32)
+        n, levels = meta["padded_len"], meta["levels"]
+        pyr = lifting.unpack(jnp.asarray(packed[None]), n, levels)
+        flat = np.asarray(lifting.dwt53_inv(pyr))[0]
+        count = int(np.prod(shape)) if shape else 1
+        vals = flat[:count].astype(np.float32) * meta["scale"]
+        return vals.reshape(shape).astype(dtype)
+    raise ValueError(codec)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str | Path
+    keep: int = 3
+    codec: str = "z"  # raw | z | wz
+    wavelet_levels: int = 2
+    host_id: int = 0
+    n_hosts: int = 1
+
+    def __post_init__(self):
+        self.directory = Path(self.directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+        self._save_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: PyTree, blocking: bool = True) -> None:
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+        if blocking:
+            self._save_impl(step, host_tree)
+        else:
+            self.wait()  # one async save in flight at a time
+            self._save_thread = threading.Thread(
+                target=self._save_impl, args=(step, host_tree), daemon=True
+            )
+            self._save_thread.start()
+
+    def wait(self) -> None:
+        if self._save_thread is not None:
+            self._save_thread.join()
+            self._save_thread = None
+
+    def _save_impl(self, step: int, tree: PyTree) -> None:
+        step_dir = self.directory / f"step_{step:010d}"
+        tmp_dir = self.directory / f".tmp_step_{step:010d}_{self.host_id}"
+        if tmp_dir.exists():
+            shutil.rmtree(tmp_dir)
+        tmp_dir.mkdir(parents=True)
+        manifest: Dict[str, Dict] = {}
+        for name, leaf in _leaf_paths(tree):
+            arr = np.asarray(leaf)
+            data, meta = _encode(arr, self.codec, self.wavelet_levels)
+            fname = name.replace("/", "__") + ".bin"
+            (tmp_dir / fname).write_bytes(data)
+            manifest[name] = {
+                "file": fname,
+                "sha256": hashlib.sha256(data).hexdigest(),
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "codec": self.codec,
+                "meta": meta,
+                "raw_bytes": int(arr.nbytes),
+                "stored_bytes": len(data),
+            }
+        (tmp_dir / "manifest.json").write_text(json.dumps({"step": step, "leaves": manifest}))
+        if step_dir.exists():
+            shutil.rmtree(step_dir)
+        os.replace(tmp_dir, step_dir)  # atomic on same filesystem
+        latest_tmp = self.directory / ".LATEST.tmp"
+        latest_tmp.write_text(step_dir.name)
+        os.replace(latest_tmp, self.directory / "LATEST")
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.directory.glob("step_*"))
+        for old in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        latest = self.directory / "LATEST"
+        if not latest.exists():
+            return None
+        name = latest.read_text().strip()
+        if not (self.directory / name / "manifest.json").exists():
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, step: Optional[int] = None, template: Optional[PyTree] = None) -> Tuple[int, PyTree]:
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        step_dir = self.directory / f"step_{step:010d}"
+        info = json.loads((step_dir / "manifest.json").read_text())
+        leaves: Dict[str, np.ndarray] = {}
+        for name, m in info["leaves"].items():
+            data = (step_dir / m["file"]).read_bytes()
+            digest = hashlib.sha256(data).hexdigest()
+            if digest != m["sha256"]:
+                raise IOError(f"checksum mismatch for {name} in step {step}")
+            leaves[name] = _decode(
+                data, tuple(m["shape"]), np.dtype(m["dtype"]), m["codec"], m["meta"]
+            )
+        if template is not None:
+            flat = _leaf_paths(template)
+            vals = [leaves[n] for n, _ in flat]
+            treedef = jax.tree_util.tree_structure(template)
+            return info["step"], jax.tree_util.tree_unflatten(treedef, vals)
+        return info["step"], leaves
+
+    def compression_report(self, step: Optional[int] = None) -> Dict[str, float]:
+        if step is None:
+            step = self.latest_step()
+        step_dir = self.directory / f"step_{step:010d}"
+        info = json.loads((step_dir / "manifest.json").read_text())
+        raw = sum(m["raw_bytes"] for m in info["leaves"].values())
+        stored = sum(m["stored_bytes"] for m in info["leaves"].values())
+        return {"raw_bytes": raw, "stored_bytes": stored, "ratio": raw / max(stored, 1)}

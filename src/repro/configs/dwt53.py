@@ -1,0 +1,24 @@
+"""The paper's own 'architecture': the integer (5,3) lifting DWT module
+benchmark configs (signal lengths / dtypes from the paper's tests)."""
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class DWTConfig:
+    name: str
+    signal_len: int
+    batch: int
+    dtype: str
+    levels: int
+    mode: str = "paper"
+
+
+# Fig.5: 64 samples, 8-bit positive, normal distribution
+FIG5 = DWTConfig("fig5", 64, 1, "int16", 1)
+# Table 3: line of 256 samples, 8-bit accuracy
+TABLE3 = DWTConfig("table3", 256, 1, "int16", 1)
+# throughput-scale config for the TPU kernel path
+LARGE = DWTConfig("large", 65536, 64, "int32", 4)
+
+ALL: Tuple[DWTConfig, ...] = (FIG5, TABLE3, LARGE)

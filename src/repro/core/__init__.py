@@ -1,0 +1,16 @@
+"""Core: the paper's integer lifting-scheme DWT and its hardware model."""
+from repro.core.lifting import (  # noqa: F401
+    Bands2D,
+    WaveletPyramid,
+    band_sizes,
+    dwt53_fwd,
+    dwt53_fwd_1d,
+    dwt53_fwd_2d,
+    dwt53_inv,
+    dwt53_inv_1d,
+    dwt53_inv_2d,
+    filterbank53_fwd_float,
+    max_levels,
+    pack,
+    unpack,
+)

@@ -1,0 +1,238 @@
+"""Public jit'd wrappers around the Pallas (5,3) lifting kernels.
+
+Handles everything the kernel keeps out of VMEM: polyphase Split/Merge
+(the paper's lazy wavelet), arbitrary lengths (odd lengths, non powers of
+two — an explicit paper claim), right-edge padding with the symmetric
+extension policy of ``core.lifting``, halo-column gathering, dtype
+promotion (int8 inputs are computed in int16: the transform grows dynamic
+range by <= 2 bits per level, the paper's 8-bit-in / 9-bit-register
+design), and multi-level recursion.
+
+Bit-exactness contract: for every shape/dtype/mode these wrappers return
+exactly what `kernels.ref` (== `core.lifting`) returns. Tests sweep this.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lifting import WaveletPyramid, _check_mode
+from repro.kernels import dwt53 as _k
+
+# below this many pairs the kernel grid degenerates; use the jnp reference
+_MIN_KERNEL_PAIRS = 8
+
+
+def _compute_dtype(dtype) -> jnp.dtype:
+    if dtype == jnp.int8:
+        return jnp.dtype(jnp.int16)
+    if dtype in (jnp.int16, jnp.int32, jnp.int64):
+        return jnp.dtype(dtype)
+    raise TypeError(f"integer DWT requires an int dtype, got {dtype}")
+
+
+def _pick_blocks(n_rows: int, n_pairs: int) -> Tuple[int, int]:
+    block_rows = min(_k.DEFAULT_BLOCK_ROWS, n_rows)
+    block_pairs = min(_k.DEFAULT_BLOCK_PAIRS, n_pairs)
+    return block_rows, block_pairs
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def dwt53_fwd_1d(
+    x: jax.Array, mode: str = "paper", interpret: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    """Kernel-backed forward transform along the last axis. Any length >= 2.
+
+    Returns (s, d) with len(s) = ceil(N/2), len(d) = floor(N/2), matching
+    ``core.lifting.dwt53_fwd_1d`` bit-exactly.
+    """
+    _check_mode(mode)
+    offset = 2 if mode == "jpeg2000" else 0
+    in_dtype = x.dtype
+    cdt = _compute_dtype(in_dtype)
+    n = x.shape[-1]
+    if n < 2:
+        raise ValueError("need at least 2 samples")
+    lead = x.shape[:-1]
+    xf = x.reshape((-1, n)).astype(cdt)
+    rows = xf.shape[0]
+
+    n_o = n // 2  # number of (s, d) pairs the kernel computes
+    n_e = n - n_o
+    if n_o < _MIN_KERNEL_PAIRS:
+        from repro.kernels import ref
+
+        s, d = ref.dwt53_fwd_1d(xf, mode=mode)
+        return (
+            s.reshape(lead + (n_e,)).astype(cdt),
+            d.reshape(lead + (n_o,)).astype(cdt),
+        )
+
+    xe = xf[:, 0::2][:, :n_o]  # pair-aligned evens
+    xo = xf[:, 1::2]
+
+    block_rows, block_pairs = _pick_blocks(rows, n_o)
+    rows_pad = _ceil_to(rows, block_rows)
+    pairs_pad = _ceil_to(n_o, block_pairs)
+    # edge replication implements the right symmetric extension (DESIGN §2)
+    xe_p = jnp.pad(xe, ((0, rows_pad - rows), (0, pairs_pad - n_o)), mode="edge")
+    xo_p = jnp.pad(xo, ((0, rows_pad - rows), (0, pairs_pad - n_o)), mode="edge")
+
+    n_tiles = pairs_pad // block_pairs
+    tile_starts = np.arange(n_tiles) * block_pairs
+    # left halos: tile 0 uses (xe[1], xo[0]) so the in-kernel recomputed
+    # d_left equals d[0] — the reference's  d[-1] := d[0]  policy.
+    xel_idx = np.maximum(tile_starts - 1, 0)
+    xel_idx[0] = min(1, n_o - 1)
+    xol_idx = np.maximum(tile_starts - 1, 0)
+    # right halo: xe[n+1] of the next tile; last tile takes the true next
+    # even if one exists (odd N), else the edge (symmetric extension).
+    xer_idx = np.minimum(tile_starts + block_pairs, pairs_pad - 1)
+
+    xe_left = xe_p[:, xel_idx]
+    xo_left = xo_p[:, xol_idx]
+    xe_right = xe_p[:, xer_idx]
+    if n_e > n_o and pairs_pad == n_o:
+        # odd N, no pair padding: the last tile's right halo is the real
+        # final even sample, not the edge replica.
+        xe_right = xe_right.at[:rows, -1].set(xf[:, n - 1])
+    elif n_e > n_o:
+        # odd N with padding: overwrite the padded evens' first column so
+        # in-tile xe_next for the last real pair is the true last sample.
+        xe_p = xe_p.at[:rows, n_o].set(xf[:, n - 1])
+        xe_right = xe_p[:, xer_idx]
+
+    s_p, d_p = _k.dwt53_fwd_tiles(
+        xe_p,
+        xo_p,
+        xe_left,
+        xo_left,
+        xe_right,
+        block_rows=block_rows,
+        block_pairs=block_pairs,
+        offset=offset,
+        interpret=interpret,
+    )
+    s = s_p[:rows, :n_o]
+    d = d_p[:rows, :n_o]
+    if n_e > n_o:
+        # final s column for odd N: s[n_e-1] = x[N-1] + ((d[-1]+d[-1])>>2)
+        t = d[:, -1:] + d[:, -1:]
+        if offset:
+            t = t + offset
+        s_last = xf[:, n - 1 :] + jnp.right_shift(t, 2)
+        s = jnp.concatenate([s, s_last], axis=1)
+    return s.reshape(lead + (n_e,)), d.reshape(lead + (n_o,))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def dwt53_inv_1d(
+    s: jax.Array, d: jax.Array, mode: str = "paper", interpret: bool = True
+) -> jax.Array:
+    """Kernel-backed inverse transform; bit-exact vs core.lifting."""
+    _check_mode(mode)
+    offset = 2 if mode == "jpeg2000" else 0
+    cdt = _compute_dtype(s.dtype)
+    n_e, n_o = s.shape[-1], d.shape[-1]
+    if n_e - n_o not in (0, 1):
+        raise ValueError("band length mismatch")
+    n = n_e + n_o
+    lead = s.shape[:-1]
+    sf = s.reshape((-1, n_e)).astype(cdt)
+    df = d.reshape((-1, n_o)).astype(cdt)
+    rows = sf.shape[0]
+
+    if n_o < _MIN_KERNEL_PAIRS:
+        from repro.kernels import ref
+
+        x = ref.dwt53_inv_1d(sf, df, mode=mode)
+        return x.reshape(lead + (n,))
+
+    s_k = sf[:, :n_o]
+    block_rows, block_pairs = _pick_blocks(rows, n_o)
+    rows_pad = _ceil_to(rows, block_rows)
+    pairs_pad = _ceil_to(n_o, block_pairs)
+    s_p = jnp.pad(s_k, ((0, rows_pad - rows), (0, pairs_pad - n_o)), mode="edge")
+    d_p = jnp.pad(df, ((0, rows_pad - rows), (0, pairs_pad - n_o)), mode="edge")
+    if pairs_pad > n_o and n_o >= 2 and n_e == n_o:
+        # even N: the first padded d column must hold d[n_o-2] so the
+        # recomputed even[n_o] equals the reference's symmetric policy.
+        d_p = d_p.at[:rows, n_o].set(df[:, n_o - 2])
+    if pairs_pad > n_o and n_e > n_o:
+        # odd N: d extension is d[n] := d[n-1] (edge) — already satisfied —
+        # and even[n_o] = s[n_o] - ((d[n_o-1]+d[n_o-1])>>2) needs the true
+        # final s in the first padded column.
+        s_p = s_p.at[:rows, n_o].set(sf[:, n_e - 1])
+
+    n_tiles = pairs_pad // block_pairs
+    tile_starts = np.arange(n_tiles) * block_pairs
+    dl_idx = np.maximum(tile_starts - 1, 0)  # tile 0: d[-1] := d[0]
+    r_idx = np.minimum(tile_starts + block_pairs, pairs_pad - 1)
+
+    d_left = d_p[:, dl_idx]
+    s_right = s_p[:, r_idx]
+    d_right = d_p[:, r_idx]
+    if pairs_pad == n_o:  # no padding: right halos of the LAST tile
+        if n_e > n_o:
+            # odd N: even[n_o] = s[n_e-1] - ((d[n_o-1]+d[n_o-1]) >> 2)
+            s_right = s_right.at[:rows, -1].set(sf[:, n_e - 1])
+            d_right = d_right.at[:rows, -1].set(df[:, n_o - 1])
+        else:
+            # even N: even_next[last] = even[n_e-1] =
+            #   s[n_e-1] - ((d[n_e-1] + d[n_e-2]) >> 2)
+            s_right = s_right.at[:rows, -1].set(sf[:, n_e - 1])
+            d_right = d_right.at[:rows, -1].set(df[:, n_o - 2])
+
+    xe_p, xo_p = _k.dwt53_inv_tiles(
+        s_p,
+        d_p,
+        d_left,
+        s_right,
+        d_right,
+        block_rows=block_rows,
+        block_pairs=block_pairs,
+        offset=offset,
+        interpret=interpret,
+    )
+    xe = xe_p[:rows, :n_o]
+    xo = xo_p[:rows, :n_o]
+    out = jnp.zeros((rows, n), dtype=cdt)
+    out = out.at[:, 0 : 2 * n_o : 2].set(xe)
+    out = out.at[:, 1 : 2 * n_o : 2].set(xo)
+    if n_e > n_o:
+        # final even sample for odd N: x[N-1] = s[n_e-1] - ((d[-1]+d[-1])>>2)
+        t = df[:, -1:] + df[:, -1:]
+        if offset:
+            t = t + offset
+        out = out.at[:, n - 1 :].set(sf[:, n_e - 1 :] - jnp.right_shift(t, 2))
+    return out.reshape(lead + (n,))
+
+
+def dwt53_fwd(
+    x: jax.Array, levels: int = 1, mode: str = "paper", interpret: bool = True
+) -> WaveletPyramid:
+    """Multi-level kernel-backed forward transform."""
+    if levels < 1:
+        raise ValueError("levels must be >= 1")
+    s = x
+    details = []
+    for _ in range(levels):
+        s, d = dwt53_fwd_1d(s, mode=mode, interpret=interpret)
+        details.append(d)
+    return WaveletPyramid(approx=s, details=tuple(reversed(details)))
+
+
+def dwt53_inv(pyr: WaveletPyramid, mode: str = "paper", interpret: bool = True) -> jax.Array:
+    """Multi-level kernel-backed inverse transform."""
+    s = pyr.approx
+    for d in pyr.details:
+        s = dwt53_inv_1d(s, d, mode=mode, interpret=interpret)
+    return s

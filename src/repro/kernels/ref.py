@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the Pallas DWT kernels.
+
+The reference IS the paper-faithful implementation in ``core.lifting``;
+re-exported here so the kernels package follows the <name>.py / ops.py /
+ref.py convention and tests can import the oracle from one place.
+"""
+from repro.core.lifting import (  # noqa: F401
+    WaveletPyramid,
+    dwt53_fwd,
+    dwt53_fwd_1d,
+    dwt53_fwd_2d,
+    dwt53_inv,
+    dwt53_inv_1d,
+    dwt53_inv_2d,
+)

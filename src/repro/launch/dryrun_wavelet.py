@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+"""Dry-run of the WAVELET multi-pod train step vs the plain baseline.
+
+Lowers both steps on the 2x16x16 production mesh for a given arch and
+compares total wire bytes (the data/model-axis collectives are identical,
+so the delta is the pod-axis gradient sync — the paper's technique in the
+distributed-optimization path).
+
+  python -m repro.launch.dryrun_wavelet --arch granite-3-8b [--levels 2]
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import roofline as RL
+from repro import sharding as SH
+from repro.configs import get_config, shape_cell
+from repro.launch.dryrun import build_cell, input_specs, rules_for_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.train import optim
+from repro.train.grad_compress import WaveletSyncConfig, pod_collective_bytes
+from repro.train.train_step import make_wavelet_train_step
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def lower_wavelet_cell(arch: str, cell_name: str, levels: int, mesh=None):
+    cfg = get_config(arch)
+    cell = shape_cell(cell_name)
+    mesh = mesh or make_production_mesh(multi_pod=True)
+    n_pods = mesh.shape["pod"]
+    rules = rules_for_cell(cfg, cell, mesh, multi_pod=False)  # data/model only
+    pdt = _dtype(cfg.param_dtype)
+    defs = T.model_defs(cfg)
+    axes = L.logical_axes(defs)
+
+    def pod_shard(a):
+        # state carries a leading pod-replica axis
+        spec = SH.spec_for(a, rules)
+        return NamedSharding(mesh, P(*(("pod",) + tuple(spec))))
+
+    is_axes_leaf = lambda v: isinstance(v, tuple) and all(  # noqa: E731
+        x is None or isinstance(x, str) for x in v
+    )
+    params_abs = jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct((n_pods,) + d.shape, pdt),
+        defs,
+        is_leaf=lambda x: isinstance(x, L.ParamDef),
+    )
+    param_sh = jax.tree_util.tree_map(pod_shard, axes, is_leaf=is_axes_leaf)
+    err_abs = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_abs
+    )
+    opt_abs = optim.AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=err_abs,
+        v=err_abs,
+    )
+    opt_sh = optim.AdamWState(step=NamedSharding(mesh, P()), m=param_sh, v=param_sh)
+
+    ins = input_specs(cfg, cell)
+    batch_rules = dict(rules)
+    batch_rules["batch"] = ("pod", "data")
+    in_sh = {
+        k: NamedSharding(mesh, SH.spec_for(("batch", "seq"), batch_rules))
+        for k in ins
+    }
+
+    sync = WaveletSyncConfig(levels=levels, codec="bands", n_pods=n_pods)
+    step = make_wavelet_train_step(cfg, mesh, optim.AdamWConfig(), sync)
+
+    def fn(params, opt_state, err, batch):
+        with SH.logical_rules(rules, mesh):
+            return step(params, opt_state, err, batch)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(param_sh, opt_sh, param_sh, in_sh),
+        out_shardings=(param_sh, opt_sh, param_sh, None),
+    )
+    with mesh:
+        lowered = jitted.lower(params_abs, opt_abs, err_abs, ins)
+        compiled = lowered.compile()
+    return cfg, compiled, mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--cell", default="train_4k")
+    ap.add_argument("--levels", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=True)
+    chips = mesh.size
+
+    # --- baseline multipod step (full-fidelity pod psum via pjit) ----------
+    cfg = get_config(args.arch)
+    cell = shape_cell(args.cell)
+    jitted, abs_args, _ = build_cell(cfg, cell, mesh, multi_pod=True)
+    with mesh:
+        base = jitted.lower(*abs_args).compile()
+    base_text = base.as_text()
+    base_coll = RL.parse_collectives(base_text, chips)
+    # pod-axis only (k=2 groups on the 2x16x16 mesh)
+    base_pod = RL.parse_collectives(base_text, chips, only_group_size=2)
+
+    # --- wavelet step -------------------------------------------------------
+    _, compiled, _ = lower_wavelet_cell(args.arch, args.cell, args.levels, mesh)
+    wave_text = compiled.as_text()
+    wave_coll = RL.parse_collectives(wave_text, chips)
+    wave_pod = RL.parse_collectives(wave_text, chips, only_group_size=2)
+
+    # analytic pod-axis bytes
+    defs = T.model_defs(cfg)
+    params_np = jax.tree_util.tree_map(
+        lambda d: jnp.zeros(d.shape, jnp.int8), defs,
+        is_leaf=lambda x: isinstance(x, L.ParamDef),
+    )
+    sync = WaveletSyncConfig(levels=args.levels, codec="bands", n_pods=2)
+    raw, comp = pod_collective_bytes(params_np, sync)
+
+    result = {
+        "arch": args.arch,
+        "cell": args.cell,
+        "levels": args.levels,
+        "baseline_wire_per_device": base_coll.wire_bytes_per_device,
+        "wavelet_wire_per_device": wave_coll.wire_bytes_per_device,
+        "baseline_pod_axis_wire_per_device": base_pod.wire_bytes_per_device,
+        "wavelet_pod_axis_wire_per_device": wave_pod.wire_bytes_per_device,
+        "pod_axis_reduction": (
+            base_pod.wire_bytes_per_device / wave_pod.wire_bytes_per_device
+            if wave_pod.wire_bytes_per_device
+            else None
+        ),
+        "baseline_pod_counts": base_pod.counts,
+        "wavelet_pod_counts": wave_pod.counts,
+        "baseline_counts": base_coll.counts,
+        "wavelet_counts": wave_coll.counts,
+        "analytic_pod_bytes_fp32": raw,
+        "analytic_pod_bytes_codec": comp,
+        "analytic_ratio": raw / comp,
+    }
+    print(json.dumps(result, indent=2))
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"wavelet__{args.arch}__{args.cell}__L{args.levels}.json"
+    (ARTIFACT_DIR / name).write_text(json.dumps(result, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,151 @@
+"""End-to-end training driver.
+
+CPU-runnable with reduced configs (the examples use it), and the same code
+path drives production meshes (pjit shardings from the logical rules).
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \\
+      --reduced --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as SH
+from repro.configs import get_config, reduced as make_reduced
+from repro.configs.base import ArchConfig
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.ft import StragglerWatchdog, TrainLoopRunner
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import smoke_mesh
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.train import optim
+from repro.train.train_step import make_train_step
+
+PyTree = Any
+
+
+def init_train_state(cfg: ArchConfig, seed: int = 0):
+    pdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    defs = T.model_defs(cfg)
+    params = L.init_params(defs, jax.random.PRNGKey(seed), pdt)
+    opt_state = optim.adamw_init(params)
+    return {"params": params, "opt": opt_state}
+
+
+def train(
+    cfg: ArchConfig,
+    *,
+    steps: int,
+    global_batch: int,
+    seq_len: int,
+    ckpt_dir: Optional[str] = None,
+    opt_cfg: Optional[optim.AdamWConfig] = None,
+    n_microbatches: int = 1,
+    log_every: int = 10,
+    fail_at: Optional[int] = None,
+    seed: int = 0,
+) -> Dict[str, Any]:
+    opt_cfg = opt_cfg or optim.AdamWConfig(
+        lr=1e-3, warmup_steps=max(steps // 10, 1), total_steps=steps
+    )
+    data = SyntheticLM(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len, global_batch=global_batch, seed=seed)
+    )
+    step_fn_inner = make_train_step(cfg, opt_cfg, n_microbatches=n_microbatches)
+    jitted = jax.jit(step_fn_inner)
+
+    def step_fn(state, batch):
+        if cfg.input_mode == "embeds":
+            # frontend stub: deterministic projection of tokens to embeds
+            rng = np.random.default_rng(7)
+            proj = rng.standard_normal((cfg.vocab_size, cfg.d_model)).astype(np.float32) * 0.02
+            batch = {
+                "embeds": jnp.asarray(proj[batch["tokens"]]),
+                "labels": jnp.asarray(batch["labels"]),
+            }
+        else:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = jitted(state["params"], state["opt"], batch)
+        return {"params": params, "opt": opt}, metrics
+
+    state = init_train_state(cfg, seed)
+    start = 0
+    runner = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=2)
+        runner = TrainLoopRunner(ckpt=mgr, save_every=max(steps // 4, 1))
+        state, start = runner.resume_or_init(state)
+
+    losses = []
+
+    def on_metrics(step: int, m: Dict) -> None:
+        losses.append(float(m["loss"]))
+        if step % log_every == 0 or step == steps - 1:
+            print(
+                f"step {step:5d} loss {float(m['loss']):.4f} "
+                f"gnorm {float(m.get('grad_norm', 0)):.3f} lr {float(m.get('lr', 0)):.2e}"
+            )
+
+    t0 = time.time()
+    if runner is not None:
+        state, end_step = runner.run(
+            state, step_fn, data.batch, steps, start_step=start,
+            on_metrics=on_metrics, fail_at=fail_at,
+        )
+    else:
+        for s in range(start, steps):
+            batch = data.batch(s)
+            state, m = step_fn(state, batch)
+            on_metrics(s, m)
+        end_step = steps
+    wall = time.time() - t0
+    return {
+        "final_loss": losses[-1] if losses else None,
+        "first_loss": losses[0] if losses else None,
+        "losses": losses,
+        "steps": end_step,
+        "wall_s": wall,
+        "state": state,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    out = train(
+        cfg,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        n_microbatches=args.microbatches,
+    )
+    print(
+        f"done: {out['steps']} steps in {out['wall_s']:.1f}s | "
+        f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,1 @@
+"""Model stack: composable decoder families for all assigned archs."""

@@ -1,0 +1,214 @@
+"""Memory-efficient causal GQA attention.
+
+Chunked (flash-style) online-softmax attention in pure jnp: O(S * chunk)
+live memory instead of O(S^2), which is what lets the 32k-prefill cells
+compile inside v5e HBM.  Causality is enforced by masking; the fraction of
+masked (wasted) block pairs is reported by ``causal_waste`` so the roofline
+analysis can separate useful from schedule FLOPs.
+
+Also provides the single-token decode path over a static KV cache and the
+sliding-window variant used by RecurrentGemma's local-attention layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, apply_rope
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attention_defs(d_model: int, n_heads: int, n_kv_heads: int, head_dim: int):
+    return {
+        "wq": ParamDef((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((n_heads, head_dim, d_model), ("heads", "head_dim", "embed")),
+    }
+
+
+def causal_waste(seq_len: int, chunk: int) -> float:
+    """Fraction of computed block-pairs that the causal mask zeroes out."""
+    t = max(seq_len // chunk, 1)
+    useful = t * (t + 1) / 2
+    return 1.0 - useful / (t * t)
+
+
+def _mask_bias(q_pos: Array, kv_pos: Array, window: Optional[int]) -> Array:
+    """(q, kv) additive bias: 0 where attendable, NEG_INF elsewhere."""
+    m = kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m = m & (q_pos[:, None] - kv_pos[None, :] < window)
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def chunked_causal_attention(
+    q: Array,  # (B, S, H, hd)
+    k: Array,  # (B, S, KV, hd)
+    v: Array,  # (B, S, KV, hd)
+    chunk: int,
+    window: Optional[int] = None,
+    base_pos: int = 0,
+    unroll: bool = False,
+) -> Array:
+    """Flash-style chunked attention with online softmax. Returns (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    t = s // chunk
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    # (B, T, C, KV, G, hd) view of q; k/v stay (B, T, C, KV, hd)
+    qc = q.reshape(b, t, chunk, kv, g, hd)
+    kc = k.reshape(b, t, chunk, kv, hd)
+    vc = v.reshape(b, t, chunk, kv, hd)
+    pos = base_pos + jnp.arange(s, dtype=jnp.int32).reshape(t, chunk)
+
+    def q_block(qi: Array, q_pos: Array):
+        # qi: (B, C, KV, G, hd); accumulate over kv chunks.
+        # vma_like: carries must match the loop body's shard_map VMA set.
+        from repro.models.layers import vma_like
+
+        m0 = vma_like(jnp.full((b, chunk, kv, g), NEG_INF, jnp.float32), qi)
+        l0 = vma_like(jnp.zeros((b, chunk, kv, g), jnp.float32), qi)
+        a0 = vma_like(jnp.zeros((b, chunk, kv, g, hd), jnp.float32), qi)
+
+        import os as _os
+
+        bf16_probs = bool(_os.environ.get("REPRO_OPT_ATTN_BF16_PROBS"))
+
+        def step(carry, xs):
+            m_prev, l_prev, acc = carry
+            kj, vj, kv_pos = xs
+            # scores: (B, C, KV, G, Ck)
+            sc = jnp.einsum(
+                "bckgh,bdkh->bckgd", qi.astype(jnp.float32), kj.astype(jnp.float32)
+            ) * scale
+            sc = sc + _mask_bias(q_pos, kv_pos, window)[None, :, None, None, :]
+            m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l_prev * alpha + p.sum(axis=-1)
+            # optional: carry probabilities at bf16 into the PV matmul —
+            # halves the dominant score-tensor HBM traffic; the online-
+            # softmax stats (m, l) and the accumulator stay fp32 (§Perf)
+            pv = p.astype(jnp.bfloat16) if bf16_probs else p
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bckgd,bdkh->bckgh", pv, vj.astype(pv.dtype)
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            step,
+            (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), pos),
+            unroll=t if unroll else 1,
+        )
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return out.astype(q.dtype)  # (B, C, KV, G, hd)
+
+    if unroll:
+        # cost-probe path: no while loops, so cost_analysis sees true counts
+        outs = jnp.stack([q_block(qc[:, i], pos[i]) for i in range(t)])
+    else:
+        outs = jax.lax.map(lambda xs: q_block(*xs), (qc.swapaxes(0, 1), pos))
+    # outs: (T, B, C, KV, G, hd) -> (B, S, H, hd)
+    return outs.swapaxes(0, 1).reshape(b, s, h, hd)
+
+
+def decode_attention(
+    q: Array,  # (B, 1, H, hd)
+    k_cache: Array,  # (B, S, KV, hd)
+    v_cache: Array,  # (B, S, KV, hd)
+    cache_len: Array,  # (B,) or scalar int32: valid prefix length
+    window: Optional[int] = None,
+) -> Array:
+    """Single-token attention over a static cache. Returns (B, 1, H, hd)."""
+    b, s, kvh, hd = k_cache.shape
+    h = q.shape[2]
+    g = h // kvh
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    sc = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s, dtype=jnp.int32)
+    cl = jnp.asarray(cache_len, jnp.int32)
+    cl = cl[..., None] if cl.ndim == 1 else cl[None]
+    valid = pos[None, :] < cl  # (B, S)
+    if window is not None:
+        valid = valid & (pos[None, :] >= cl - window)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def apply_attention(
+    params: Dict[str, Array],
+    x: Array,  # (B, S, D)
+    positions: Array,  # (B, S)
+    *,
+    rotary_pct: float,
+    rope_theta: float,
+    chunk: int,
+    window: Optional[int] = None,
+    unroll: bool = False,
+) -> Array:
+    """Full training/prefill attention pass (projections + rope + attn + out)."""
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cdt))
+    q = apply_rope(q, positions, rotary_pct, rope_theta)
+    k = apply_rope(k, positions, rotary_pct, rope_theta)
+    o = chunked_causal_attention(q, k, v, chunk=chunk, window=window, unroll=unroll)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(cdt))
+
+
+def apply_attention_decode(
+    params: Dict[str, Array],
+    x: Array,  # (B, 1, D)
+    k_cache: Array,
+    v_cache: Array,
+    cache_len: Array,
+    *,
+    rotary_pct: float,
+    rope_theta: float,
+    window: Optional[int] = None,
+    ring: bool = False,
+) -> Tuple[Array, Array, Array]:
+    """Decode attention; returns (out, new_k_cache, new_v_cache).
+
+    ``ring=True`` treats the cache as a circular window buffer of capacity
+    cap == window: new tokens overwrite slot ``cache_len % cap`` and every
+    populated slot is attendable (RoPE is applied with absolute positions
+    at write time so relative geometry survives the wrap-around).
+    """
+    cdt = x.dtype
+    b = x.shape[0]
+    cap = k_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cdt))
+    abs_pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1, 1), (b, 1))
+    q = apply_rope(q, abs_pos, rotary_pct, rope_theta)
+    k = apply_rope(k, abs_pos, rotary_pct, rope_theta)
+    slot = jnp.mod(abs_pos, cap) if ring else abs_pos
+    # in-place cache update (same offset per row — static serving layout
+    # keeps all rows in lockstep per batch lane)
+    upd = jax.vmap(
+        lambda c, val, i: jax.lax.dynamic_update_slice_in_dim(c, val, i, axis=0)
+    )
+    k_cache = upd(k_cache, k, slot[:, 0])
+    v_cache = upd(v_cache, v, slot[:, 0])
+    valid = jnp.minimum(cache_len + 1, cap) if ring else cache_len + 1
+    o = decode_attention(q, k_cache, v_cache, valid, window=None if ring else window)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(cdt))
+    return out, k_cache, v_cache

@@ -1,0 +1,208 @@
+"""Shared model building blocks (pure functional JAX, no framework deps).
+
+Parameter convention: every layer declares its parameters as a pytree of
+``ParamDef`` (shape + logical axes + initializer).  ``init_params``
+materializes them; ``logical_axes`` extracts the parallel axes pytree that
+``repro.sharding`` maps onto the device mesh.  This single-source-of-truth
+keeps init, sharding and the dry-run's ShapeDtypeStruct stand-ins in sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names (len == ndim)
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(defn: ParamDef, key: jax.Array, dtype) -> Array:
+    if defn.init == "zeros":
+        return jnp.zeros(defn.shape, dtype)
+    if defn.init == "ones":
+        return jnp.ones(defn.shape, dtype)
+    fan_in = defn.shape[0] if len(defn.shape) >= 1 else 1
+    if defn.init == "embed":
+        std = 1.0
+    else:
+        std = defn.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, defn.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(defs: PyTree, key: jax.Array, dtype=jnp.float32) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def logical_axes(defs: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda d: d.axes, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+def abstract_params(defs: PyTree, dtype) -> PyTree:
+    """ShapeDtypeStruct stand-ins (for the dry-run; no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def vma_like(x: Array, ref: Array) -> Array:
+    """Propagate ref's varying-manual-axes (shard_map VMA) onto x.
+
+    lax.scan requires carry-in and carry-out types to match, including the
+    set of manual axes they vary over.  Freshly-created zero carries are
+    invariant while the loop body produces pod-varying values when the
+    model runs inside a partial-manual shard_map (the wavelet multi-pod
+    train step).  Adding a ref-derived zero scalar transfers the VMA set;
+    outside shard_map this folds away.
+    """
+    z = (ref * 0).sum().astype(x.dtype)
+    return x + z
+
+
+def stack_layer_defs(defs: PyTree, n_layers: int) -> PyTree:
+    """Prefix every ParamDef with a leading 'layers' axis (scan-over-layers)."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n_layers,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+
+def norm_defs(d_model: int, kind: str) -> Dict[str, ParamDef]:
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d_model,), ("embed",), "ones")}
+    if kind == "layernorm":
+        return {
+            "scale": ParamDef((d_model,), ("embed",), "ones"),
+            "bias": ParamDef((d_model,), ("embed",), "zeros"),
+        }
+    raise ValueError(kind)
+
+
+def apply_norm(params: Dict[str, Array], x: Array, kind: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (partial-rotary supported, e.g. StableLM 25%)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, rotary_pct: float, theta: float) -> Array:
+    rot_dim = int(head_dim * rotary_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv  # (rot_dim/2,)
+
+
+def apply_rope(x: Array, positions: Array, rotary_pct: float, theta: float) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    rot_dim = int(head_dim * rotary_pct) // 2 * 2
+    if rot_dim == 0:
+        return x
+    inv = rope_frequencies(head_dim, rotary_pct, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., seq, 1, rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x_rot = x[..., :rot_dim].astype(jnp.float32)
+    x_pass = x[..., rot_dim:]
+    x1 = x_rot[..., 0::2]
+    x2 = x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+    return jnp.concatenate([y, x_pass], axis=-1) if rot_dim < head_dim else y
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(d_model: int, d_ff: int, act: str) -> Dict[str, ParamDef]:
+    if act == "swiglu":
+        return {
+            "w_gate": ParamDef((d_model, d_ff), ("embed", "mlp")),
+            "w_up": ParamDef((d_model, d_ff), ("embed", "mlp")),
+            "w_down": ParamDef((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "w_up": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamDef((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(params: Dict[str, Array], x: Array, act: str) -> Array:
+    cdt = x.dtype
+    if act == "swiglu":
+        g = x @ params["w_gate"].astype(cdt)
+        u = x @ params["w_up"].astype(cdt)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(cdt) * u
+    elif act == "gelu":
+        h = jax.nn.gelu(
+            (x @ params["w_up"].astype(cdt)).astype(jnp.float32), approximate=True
+        ).astype(cdt)
+    elif act == "relu2":  # nemotron squared-ReLU
+        h = x @ params["w_up"].astype(cdt)
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(cdt)
+    else:
+        raise ValueError(act)
+    return h @ params["w_down"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(vocab: int, d_model: int) -> Dict[str, ParamDef]:
+    return {"embedding": ParamDef((vocab, d_model), ("vocab", "embed"), "embed")}
+
+
+def apply_embed(params: Dict[str, Array], tokens: Array, compute_dtype) -> Array:
+    return params["embedding"].astype(compute_dtype)[tokens]
+
+
+def head_defs(d_model: int, vocab: int) -> Dict[str, ParamDef]:
+    return {"w_out": ParamDef((d_model, vocab), ("embed", "vocab"))}
+
+
+def apply_head(params: Dict[str, Array], x: Array) -> Array:
+    return x @ params["w_out"].astype(x.dtype)

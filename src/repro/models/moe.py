@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch.
+
+Dispatch is *row-local*: positions-within-expert are computed per batch
+row (cumsum over the row's S*K assignment slots), so the expensive cumsum
+never crosses the data-parallel sharding of the batch axis.  The gathered
+(B, E, C, d) activation tensor is where the data<->expert resharding
+happens — under pjit with experts sharded over the `model` axis this is
+exactly the MoE all-to-all, but expressed as a gather so XLA schedules it.
+
+Tokens beyond an expert's capacity C = ceil(S*K/E * capacity_factor) are
+dropped (standard Switch behaviour); the router's load-balance auxiliary
+loss keeps drop rates low in training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import ParamDef
+from repro.sharding import constrain
+
+Array = jax.Array
+
+
+def moe_defs(d_model: int, moe: MoEConfig) -> Dict[str, ParamDef]:
+    e, f = moe.n_experts, moe.d_ff_expert
+    defs = {
+        "w_router": ParamDef((d_model, e), ("embed", None)),
+        "w_gate": ParamDef((e, d_model, f), ("experts", "embed", "mlp")),
+        "w_up": ParamDef((e, d_model, f), ("experts", "embed", "mlp")),
+        "w_down": ParamDef((e, f, d_model), ("experts", "mlp", "embed")),
+    }
+    if moe.shared_expert:
+        defs.update(
+            {
+                "ws_gate": ParamDef((d_model, f), ("embed", "mlp")),
+                "ws_up": ParamDef((d_model, f), ("embed", "mlp")),
+                "ws_down": ParamDef((f, d_model), ("mlp", "embed")),
+            }
+        )
+    return defs
+
+
+def capacity(seq_len: int, moe: MoEConfig) -> int:
+    c = int(seq_len * moe.experts_per_token / moe.n_experts * moe.capacity_factor)
+    return max(8, min(c, seq_len * moe.experts_per_token))
+
+
+def apply_moe(
+    params: Dict[str, Array], x: Array, moe: MoEConfig
+) -> Tuple[Array, Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    cdt = x.dtype
+    b, s, d = x.shape
+    e, k = moe.n_experts, moe.experts_per_token
+    cap = capacity(s, moe)
+
+    logits = (x @ params["w_router"].astype(cdt)).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- positions within experts (row-local, token-major priority) -------
+    # bookkeeping dtype: int16 halves the HBM traffic of the (B, S*K, E)
+    # one-hot + cumsum (values bounded by S*K < 2^15 for all cells)
+    bk_dtype = jnp.int16 if moe.dispatch_dtype == "int16" else jnp.int32
+    ids_flat = expert_ids.reshape(b, s * k)  # (B, S*K)
+    gates_flat = gate_vals.reshape(b, s * k)
+    oh = jax.nn.one_hot(ids_flat, e, dtype=bk_dtype)  # (B, S*K, E)
+    pos_in_e = jnp.cumsum(oh, axis=1) - oh  # exclusive cumsum
+    pos_flat = jnp.sum(pos_in_e * oh, axis=-1).astype(jnp.int32)  # (B, S*K)
+    keep = pos_flat < cap
+    tok_idx = jnp.arange(s * k, dtype=jnp.int32) // k  # owning token
+
+    # ---- scatter dispatch tables (B, E, C) --------------------------------
+    b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    safe_pos = jnp.where(keep, pos_flat, cap)  # row `cap` is the drop bin
+    idx_table = jnp.zeros((b, e, cap + 1), jnp.int32)
+    idx_table = idx_table.at[b_idx, ids_flat, safe_pos].set(
+        jnp.broadcast_to(tok_idx, (b, s * k))
+    )
+    gate_table = jnp.zeros((b, e, cap + 1), jnp.float32)
+    gate_table = gate_table.at[b_idx, ids_flat, safe_pos].set(gates_flat)
+    idx_table, gate_table = idx_table[:, :, :cap], gate_table[:, :, :cap]
+
+    # ---- gather -> expert FFN -> combine -----------------------------------
+    # explicit sharding constraints: without them the SPMD partitioner has
+    # been observed to all-reduce UNCONTRACTED fp32 expert-grad
+    # intermediates (16 GiB each) in the backward pass (§Perf H3b)
+    import os as _os
+
+    _noc = bool(_os.environ.get("REPRO_BASELINE_MOE_NO_CONSTRAIN"))
+    ec = ("batch", "experts", None, None)
+    x_exp = jax.vmap(lambda xb, ib: xb[ib])(x, idx_table)  # (B,E,C,D)
+    x_exp = x_exp if _noc else constrain(x_exp, ec)
+    g = jnp.einsum("becd,edf->becf", x_exp, params["w_gate"].astype(cdt))
+    u = jnp.einsum("becd,edf->becf", x_exp, params["w_up"].astype(cdt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(cdt) * u
+    h = h if _noc else constrain(h, ("batch", "experts", None, "mlp"))
+    y_exp = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(cdt))
+    y_exp = y_exp if _noc else constrain(y_exp, ec)
+    y_exp = y_exp * gate_table[..., None].astype(cdt)
+
+    out = jnp.zeros((b, s, d), cdt)
+    out = jax.vmap(lambda ob, ib, yb: ob.at[ib].add(yb))(
+        out.reshape(b, s, d), idx_table.reshape(b, e * cap), y_exp.reshape(b, e * cap, d)
+    )
+
+    if moe.shared_expert:
+        sg = x @ params["ws_gate"].astype(cdt)
+        su = x @ params["ws_up"].astype(cdt)
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(cdt) * su
+        out = out + sh @ params["ws_down"].astype(cdt)
+
+    # ---- switch-style load-balance auxiliary loss --------------------------
+    me = probs.mean(axis=(0, 1))  # (E,) mean router prob
+    ce = jax.nn.one_hot(expert_ids[..., 0], e).mean(axis=(0, 1))  # top-1 frac
+    aux = e * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(W_a x_t + b_a)                  recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)                  input gate
+    log a_t = -c * softplus(Lambda) * r_t         (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The linear recurrence runs as a parallel associative scan for train /
+prefill (O(log S) depth — this is what makes the 500k-context cell
+sub-quadratic) and as a single fused step for decode.
+
+The full Griffin "recurrent block" wraps the RG-LRU with a short temporal
+conv and a GeLU gating branch, per the paper (arXiv:2402.19427).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+
+Array = jax.Array
+
+C_FACTOR = 8.0
+
+
+def rglru_defs(d_model: int, lru_width: int, conv_width: int) -> Dict[str, ParamDef]:
+    return {
+        "w_in_x": ParamDef((d_model, lru_width), ("embed", "mlp")),
+        "w_in_g": ParamDef((d_model, lru_width), ("embed", "mlp")),
+        "conv_w": ParamDef((conv_width, lru_width), (None, "mlp"), scale=0.5),
+        "conv_b": ParamDef((lru_width,), ("mlp",), "zeros"),
+        "w_a": ParamDef((lru_width, lru_width), ("mlp", None), scale=0.5),
+        "b_a": ParamDef((lru_width,), (None,), "zeros"),
+        "w_x": ParamDef((lru_width, lru_width), ("mlp", None), scale=0.5),
+        "b_x": ParamDef((lru_width,), (None,), "zeros"),
+        "lam": ParamDef((lru_width,), (None,), "ones"),
+        "w_out": ParamDef((lru_width, d_model), ("mlp", "embed")),
+    }
+
+
+def _gates(params: Dict[str, Array], x: Array) -> Tuple[Array, Array]:
+    """(log_a, gated_input) from the post-conv activations x: (B,S,W)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * i * xf
+
+
+def lru_scan(log_a: Array, u: Array, h0: Array) -> Tuple[Array, Array]:
+    """h_t = a_t h_{t-1} + u_t via associative scan over the seq axis.
+
+    log_a, u: (B, S, W); h0: (B, W).  Returns (h_seq, h_last).
+    """
+    # fold h0 into the first input
+    u = u.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    la_c, h = jax.lax.associative_scan(combine, (log_a, u), axis=1)
+    return h, h[:, -1]
+
+
+def _causal_conv(params: Dict[str, Array], x: Array) -> Array:
+    """Short causal temporal conv, width K. x: (B,S,W)."""
+    w = params["conv_w"].astype(x.dtype)  # (K, W)
+    k = w.shape[0]
+    acc = x * w[k - 1]
+    for i in range(1, k):
+        acc = acc + jnp.pad(x[:, :-i], ((0, 0), (i, 0), (0, 0))) * w[k - 1 - i]
+    return acc + params["conv_b"].astype(x.dtype)
+
+
+def apply_rglru_block(params: Dict[str, Array], x: Array) -> Array:
+    """Griffin recurrent block for train/prefill. x: (B,S,D) -> (B,S,D)."""
+    cdt = x.dtype
+    g = jax.nn.gelu((x @ params["w_in_g"].astype(cdt)).astype(jnp.float32))
+    xi = x @ params["w_in_x"].astype(cdt)
+    xi = _causal_conv(params, xi)
+    log_a, u = _gates(params, xi)
+    b, s, w = u.shape
+    h, _ = lru_scan(log_a, u, jnp.zeros((b, w), jnp.float32))
+    y = (h * g).astype(cdt)
+    return y @ params["w_out"].astype(cdt)
+
+
+def apply_rglru_block_decode(
+    params: Dict[str, Array],
+    x: Array,  # (B,1,D)
+    h_state: Array,  # (B,W) recurrent state
+    conv_state: Array,  # (B,K-1,W) trailing conv inputs
+) -> Tuple[Array, Array, Array]:
+    """One decode step; returns (out, new_h_state, new_conv_state)."""
+    cdt = x.dtype
+    g = jax.nn.gelu((x @ params["w_in_g"].astype(cdt)).astype(jnp.float32))
+    xi = x @ params["w_in_x"].astype(cdt)  # (B,1,W)
+    w = params["conv_w"].astype(cdt)
+    k = w.shape[0]
+    hist = jnp.concatenate([conv_state, xi], axis=1)  # (B,K,W)
+    conv = jnp.einsum("bkw,kw->bw", hist, w)[:, None] + params["conv_b"].astype(cdt)
+    log_a, u = _gates(params, conv)
+    a = jnp.exp(log_a[:, 0])
+    h_new = a * h_state + u[:, 0]
+    y = (h_new[:, None] * g).astype(cdt)
+    return y @ params["w_out"].astype(cdt), h_new, hist[:, 1:]

@@ -1,0 +1,217 @@
+"""RWKV-6 "Finch" time-mix and channel-mix layers (attention-free SSM).
+
+Recurrence per head (state S in R^{K x V}):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T           (w_t = data-dependent decay)
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)     (u = per-head bonus)
+
+Three execution paths:
+  * ``timemix_scan``     — sequential oracle (exact; used by tests and the
+                           single-token decode step),
+  * ``timemix_chunked``  — chunk-parallel form used for train/prefill: within
+                           a chunk the interaction is an attention-like
+                           einsum with decay ratios (computed in log space),
+                           across chunks a short scan carries the state.
+  * decode step          — one recurrence application, O(1) state.
+
+Decay ratios within a chunk are exp(lw[t] - lw[tau]) with lw cumulative
+log-decay; chunk length bounds the exponent range and log-decays are
+clamped (>= LOG_W_MIN per step) so fp32 stays finite — the same trade made
+by production chunked linear-attention kernels.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+
+Array = jax.Array
+
+# Exponent-safety contract: the chunked path materializes exp(±lw_cum) with
+# |lw_cum| <= CHUNK * |LOG_W_MIN|, which must stay below fp32's exp range
+# (~88). 16 * 5 = 80 < 88, so every intermediate is finite BY CONSTRUCTION.
+# The clamp is applied in _project, i.e. it is part of the model definition,
+# so the scan oracle and the chunked path stay exactly equivalent.
+LOG_W_MIN = -5.0  # per-step clamp on log decay
+CHUNK = 16
+
+
+def timemix_defs(d_model: int, n_heads: int) -> Dict[str, ParamDef]:
+    hd = d_model // n_heads
+    return {
+        "w_r": ParamDef((d_model, d_model), ("embed", "heads_flat")),
+        "w_k": ParamDef((d_model, d_model), ("embed", "heads_flat")),
+        "w_v": ParamDef((d_model, d_model), ("embed", "heads_flat")),
+        "w_g": ParamDef((d_model, d_model), ("embed", "heads_flat")),
+        "w_decay": ParamDef((d_model, d_model), ("embed", "heads_flat"), scale=0.1),
+        "w_o": ParamDef((d_model, d_model), ("heads_flat", "embed")),
+        "bonus_u": ParamDef((n_heads, hd), ("heads", "head_dim"), "zeros"),
+        "mix_r": ParamDef((d_model,), ("embed",), "zeros"),
+        "mix_k": ParamDef((d_model,), ("embed",), "zeros"),
+        "mix_v": ParamDef((d_model,), ("embed",), "zeros"),
+        "ln_out_scale": ParamDef((d_model,), ("embed",), "ones"),
+    }
+
+
+def channelmix_defs(d_model: int, d_ff: int) -> Dict[str, ParamDef]:
+    return {
+        "w_k": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "w_v": ParamDef((d_ff, d_model), ("mlp", "embed")),
+        "w_r": ParamDef((d_model, d_model), ("embed", None)),
+    }
+
+
+def _project(params: Dict[str, Array], x: Array, x_prev: Array, n_heads: int):
+    """Token-shift mixing + projections. x: (B,S,D); x_prev: (B,S,D)."""
+    cdt = x.dtype
+    b, s, d = x.shape
+    hd = d // n_heads
+
+    def mix(name):
+        m = params[f"mix_{name}"].astype(cdt)
+        return x + (x_prev - x) * m
+
+    r = (mix("r") @ params["w_r"].astype(cdt)).reshape(b, s, n_heads, hd)
+    k = (mix("k") @ params["w_k"].astype(cdt)).reshape(b, s, n_heads, hd)
+    v = (mix("v") @ params["w_v"].astype(cdt)).reshape(b, s, n_heads, hd)
+    g = jax.nn.silu((x @ params["w_g"].astype(cdt)).astype(jnp.float32))
+    # data-dependent decay (Finch): log w_t from the token itself
+    wraw = (x @ params["w_decay"].astype(cdt)).astype(jnp.float32)
+    log_w = -jnp.exp(jnp.clip(wraw, -20.0, 3.0))  # in (-inf, 0)
+    log_w = jnp.clip(log_w, LOG_W_MIN, -1e-4).reshape(b, s, n_heads, hd)
+    # (see LOG_W_MIN note at module top: clamp keeps the chunked path finite)
+    return r, k, v, g, log_w
+
+
+def _shift(x: Array) -> Array:
+    """x_{t-1} with zero at t=0 (RWKV token shift)."""
+    return jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+
+
+def timemix_scan(
+    r: Array, k: Array, v: Array, log_w: Array, u: Array, state0: Array
+) -> Tuple[Array, Array]:
+    """Sequential oracle. r/k/v/log_w: (B,S,H,K); state0: (B,H,K,K_v)."""
+
+    def step(s_prev, xs):
+        rt, kt, vt, lwt = xs  # (B,H,K) each
+        w = jnp.exp(lwt)[..., None]  # (B,H,K,1)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s_prev + u[None, :, :, None] * kv)
+        s_new = w * s_prev + kv
+        return s_new, out
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, log_w))  # (S,B,H,K)
+    state, outs = jax.lax.scan(step, state0, xs)
+    return outs.swapaxes(0, 1), state  # (B,S,H,V), (B,H,K,V)
+
+
+def timemix_chunked(
+    r: Array, k: Array, v: Array, log_w: Array, u: Array, state0: Array,
+    chunk: int = CHUNK, unroll: bool = False,
+) -> Tuple[Array, Array]:
+    """Chunk-parallel equivalent of ``timemix_scan``."""
+    b, s, h, hd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    t = s // chunk
+    rc, kc, vc, lwc = (
+        x.reshape(b, t, chunk, h, hd).swapaxes(0, 1) for x in (r, k, v, log_w)
+    )
+
+    def per_chunk(state, xs):
+        rt, kt, vt, lw = xs  # (B,C,H,K)
+        lw_cum = jnp.cumsum(lw, axis=1)  # inclusive: prod_{j<=t} w_j
+        lw_total = lw_cum[:, -1:]  # (B,1,H,K)
+        # decayed queries / inverse-decayed keys (log-space, fp32)
+        r_dec = rt * jnp.exp(lw_cum - lw)  # decay up to t-1 (exclusive)
+        k_inv = kt * jnp.exp(-lw_cum)
+        # intra-chunk strictly-lower-triangular interaction
+        att = jnp.einsum("bchk,bdhk->bhcd", r_dec, k_inv)  # (B,H,C,C)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        o_intra = jnp.einsum("bhcd,bdhv->bchv", att, vt)
+        # current-token bonus
+        o_bonus = jnp.einsum("bchk,bchk,bchv->bchv", rt, u[None, None] * kt, vt)
+        # contribution of the carried state
+        o_state = jnp.einsum("bchk,bhkv->bchv", r_dec, state)
+        # state update: S' = diag(prod w) S + sum_tau decay(tau->end) k v^T
+        k_dec = kt * jnp.exp(lw_total - lw_cum)
+        s_new = jnp.exp(lw_total).squeeze(1)[..., None] * state + jnp.einsum(
+            "bchk,bchv->bhkv", k_dec, vt
+        )
+        return s_new, o_intra + o_bonus + o_state
+
+    state, outs = jax.lax.scan(
+        per_chunk, state0, (rc, kc, vc, lwc), unroll=t if unroll else 1
+    )
+    return outs.swapaxes(0, 1).reshape(b, s, h, hd), state
+
+
+def apply_timemix(
+    params: Dict[str, Array],
+    x: Array,
+    n_heads: int,
+    *,
+    chunked: bool = True,
+    chunk: int = CHUNK,
+    unroll: bool = False,
+) -> Array:
+    """Full time-mix sublayer for train/prefill. x: (B,S,D)."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    r, k, v, g, log_w = _project(params, x, _shift(x), n_heads)
+    u = params["bonus_u"].astype(jnp.float32)
+    from repro.models.layers import vma_like
+
+    state0 = vma_like(jnp.zeros((b, n_heads, hd, hd), jnp.float32), x)
+    args = (r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), log_w)
+    if chunked:
+        o, _ = timemix_chunked(*args, u, state0, chunk=chunk, unroll=unroll)
+    else:
+        o, _ = timemix_scan(*args, u, state0)
+    o = o.reshape(b, s, d)
+    # per-head group norm (RWKV uses GroupNorm over heads)
+    o = o.reshape(b, s, n_heads, hd)
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = ((o - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    o = o * params["ln_out_scale"].astype(jnp.float32)
+    o = (o * g).astype(x.dtype)
+    return o @ params["w_o"].astype(x.dtype)
+
+
+def apply_timemix_decode(
+    params: Dict[str, Array],
+    x: Array,  # (B,1,D)
+    state: Array,  # (B,H,K,V) recurrent state
+    x_prev: Array,  # (B,1,D) previous token's activations (token shift)
+    n_heads: int,
+) -> Tuple[Array, Array]:
+    """One decode step; returns (out, new_state)."""
+    b, _, d = x.shape
+    hd = d // n_heads
+    r, k, v, g, log_w = _project(params, x, x_prev, n_heads)
+    u = params["bonus_u"].astype(jnp.float32)
+    o, state = timemix_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), log_w, u, state
+    )
+    o = o.reshape(b, 1, n_heads, hd)
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = ((o - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, 1, d)
+    o = o * params["ln_out_scale"].astype(jnp.float32)
+    o = (o * g).astype(x.dtype)
+    return o @ params["w_o"].astype(x.dtype), state
+
+
+def apply_channelmix(params: Dict[str, Array], x: Array, x_prev: Array) -> Array:
+    """RWKV channel-mix (squared-ReLU FFN with receptance gate)."""
+    cdt = x.dtype
+    k = x @ params["w_k"].astype(cdt)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(cdt)
+    r = jax.nn.sigmoid((x_prev @ params["w_r"].astype(cdt)).astype(jnp.float32))
+    return (r * (k @ params["w_v"].astype(cdt)).astype(jnp.float32)).astype(cdt)

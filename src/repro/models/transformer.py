@@ -1,0 +1,579 @@
+"""Decoder-only model assembly for all assigned architecture families.
+
+Families:
+  dense / moe / audio / vlm : pre-norm attention + MLP/MoE blocks
+  ssm (rwkv6)               : time-mix + channel-mix blocks (attention-free)
+  hybrid (recurrentgemma)   : (rec, rec, local-attn) super-layers
+
+All families share: scan-over-layers (single compiled body), optional
+remat, logical-axis sharding constraints, train forward / prefill /
+single-token decode entry points, and ``embeds`` input mode for the
+modality-frontend stub archs (musicgen, internvl2).
+"""
+from __future__ import annotations
+
+import functools
+from types import SimpleNamespace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.sharding import constrain
+
+Array = jax.Array
+PyTree = Any
+
+DECODE_CACHE_MARGIN = 8  # capacity beyond the prefilled length
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    defs: Dict[str, Any] = {
+        "ln1": L.norm_defs(d, cfg.norm),
+        "attn": attn.attention_defs(d, cfg.n_heads, cfg.n_kv_heads, hd),
+        "ln2": L.norm_defs(d, cfg.norm),
+    }
+    if cfg.moe is not None:
+        defs["moe"] = moe_mod.moe_defs(d, cfg.moe)
+    else:
+        defs["mlp"] = L.mlp_defs(d, cfg.d_ff, cfg.act)
+    return defs
+
+
+def _ssm_layer_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": L.norm_defs(d, cfg.norm),
+        "tm": rwkv_mod.timemix_defs(d, cfg.n_heads),
+        "ln2": L.norm_defs(d, cfg.norm),
+        "cm": rwkv_mod.channelmix_defs(d, cfg.d_ff),
+    }
+
+
+def _rec_layer_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    h = cfg.hybrid
+    return {
+        "ln1": L.norm_defs(d, cfg.norm),
+        "rglru": rglru_mod.rglru_defs(d, h.lru_width or d, h.conv_width),
+        "ln2": L.norm_defs(d, cfg.norm),
+        "mlp": L.mlp_defs(d, cfg.d_ff, cfg.act),
+    }
+
+
+def _attn_layer_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "ln1": L.norm_defs(d, cfg.norm),
+        "attn": attn.attention_defs(d, cfg.n_heads, cfg.n_kv_heads, hd),
+        "ln2": L.norm_defs(d, cfg.norm),
+        "mlp": L.mlp_defs(d, cfg.d_ff, cfg.act),
+    }
+
+
+def hybrid_layout(cfg: ArchConfig) -> Tuple[int, int]:
+    """(#super_layers, #trailing_rec) for the (rec,rec,attn) pattern."""
+    p = cfg.hybrid.attn_period
+    return cfg.n_layers // p, cfg.n_layers % p
+
+
+def model_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        defs["embed"] = L.embed_defs(cfg.vocab_size, cfg.d_model)
+    if cfg.family == "ssm":
+        defs["layers"] = L.stack_layer_defs(_ssm_layer_defs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_super, n_tail = hybrid_layout(cfg)
+        super_defs = {
+            "rec1": _rec_layer_defs(cfg),
+            "rec2": _rec_layer_defs(cfg),
+            "attn": _attn_layer_defs(cfg),
+        }
+        defs["layers"] = L.stack_layer_defs(super_defs, n_super)
+        for i in range(n_tail):
+            defs[f"tail_{i}"] = _rec_layer_defs(cfg)
+    else:
+        defs["layers"] = L.stack_layer_defs(_dense_layer_defs(cfg), cfg.n_layers)
+    defs["ln_f"] = L.norm_defs(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        defs["head"] = L.head_defs(cfg.d_model, cfg.vocab_size)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Block bodies (train / prefill path)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(p: Dict[str, Array], x: Array, positions: Array, cfg: ArchConfig,
+                 window: Optional[int] = None) -> Tuple[Array, Array]:
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    h = attn.apply_attention(
+        p["attn"], h, positions,
+        rotary_pct=cfg.rotary_pct, rope_theta=cfg.rope_theta,
+        chunk=cfg.attn_chunk, window=window, unroll=cfg.unroll_loops,
+    )
+    x = x + h
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        h, aux = moe_mod.apply_moe(p["moe"], h, cfg.moe)
+    else:
+        h = L.apply_mlp(p["mlp"], h, cfg.act)
+    return x + h, aux
+
+
+def _ssm_block(p: Dict[str, Array], x: Array, cfg: ArchConfig) -> Array:
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    x = x + rwkv_mod.apply_timemix(
+        p["tm"], h, cfg.n_heads, chunk=cfg.rwkv_chunk, unroll=cfg.unroll_loops
+    )
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    x = x + rwkv_mod.apply_channelmix(p["cm"], h, rwkv_mod._shift(h))
+    return x
+
+
+def _rec_block(p: Dict[str, Array], x: Array, cfg: ArchConfig) -> Array:
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    x = x + rglru_mod.apply_rglru_block(p["rglru"], h)
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    return x + L.apply_mlp(p["mlp"], h, cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg: ArchConfig, tokens: Optional[Array], embeds: Optional[Array]):
+    cdt = _dtype(cfg.compute_dtype)
+    if cfg.input_mode == "tokens":
+        assert tokens is not None
+        x = L.apply_embed(params["embed"], tokens, cdt)
+    else:
+        assert embeds is not None
+        x = embeds.astype(cdt)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def _logits_out(params, cfg: ArchConfig, x: Array) -> Array:
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        w = params["embed"]["embedding"].astype(x.dtype)
+        logits = x @ w.T
+    else:
+        logits = L.apply_head(params["head"], x)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def _layer_slice(stacked: PyTree, i: int) -> PyTree:
+    return jax.tree_util.tree_map(lambda a: a[i], stacked)
+
+
+def _remat(body, cfg: ArchConfig, for_training: bool):
+    if not (cfg.remat and for_training):
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(body)
+
+
+def _n_stacked(cfg: ArchConfig) -> int:
+    return hybrid_layout(cfg)[0] if cfg.family == "hybrid" else cfg.n_layers
+
+
+def forward(
+    params: PyTree,
+    cfg: ArchConfig,
+    tokens: Optional[Array] = None,
+    embeds: Optional[Array] = None,
+    *,
+    for_training: bool = True,
+) -> Tuple[Array, Array]:
+    """Returns (logits, moe_aux_loss)."""
+    x = _embed_in(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux0 = L.vma_like(jnp.zeros((), jnp.float32), x)
+    n_stk = _n_stacked(cfg)
+
+    if cfg.family == "ssm":
+
+        def body(carry, lp):
+            return _ssm_block(lp, carry, cfg), None
+
+        body_fn = _remat(body, cfg, for_training)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body_fn, x, params["layers"])
+        else:
+            for i in range(n_stk):
+                x, _ = body_fn(x, _layer_slice(params["layers"], i))
+        aux = aux0
+    elif cfg.family == "hybrid":
+        win = cfg.hybrid.local_window
+
+        def body(carry, lp):
+            h = _rec_block(lp["rec1"], carry, cfg)
+            h = _rec_block(lp["rec2"], h, cfg)
+            h, _ = _dense_block(lp["attn"], h, positions, cfg, window=win)
+            return h, None
+
+        body_fn = _remat(body, cfg, for_training)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body_fn, x, params["layers"])
+        else:
+            for i in range(n_stk):
+                x, _ = body_fn(x, _layer_slice(params["layers"], i))
+        _, n_tail = hybrid_layout(cfg)
+        for i in range(n_tail):
+            x = _rec_block(params[f"tail_{i}"], x, cfg)
+        aux = aux0
+    else:
+
+        def body(carry, lp):
+            x_c, aux_c = carry
+            x_n, aux_n = _dense_block(lp, x_c, positions, cfg)
+            return (x_n, aux_c + aux_n), None
+
+        body_fn = _remat(body, cfg, for_training)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(body_fn, (x, aux0), params["layers"])
+        else:
+            carry = (x, aux0)
+            for i in range(n_stk):
+                carry, _ = body_fn(carry, _layer_slice(params["layers"], i))
+            x, aux = carry
+
+    return _logits_out(params, cfg, x), aux
+
+
+def loss_fn(
+    params: PyTree,
+    cfg: ArchConfig,
+    batch: Dict[str, Array],
+    *,
+    aux_weight: float = 0.01,
+    ce_chunk: int = 0,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Causal-LM cross-entropy (+ MoE aux). batch: tokens/embeds + labels."""
+    logits, aux = forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds")
+    )
+    labels = batch["labels"]
+
+    if ce_chunk and labels.shape[1] % ce_chunk == 0 and labels.shape[1] > ce_chunk:
+        b, s, v = logits.shape
+        t = s // ce_chunk
+        lc = logits.reshape(b, t, ce_chunk, v).swapaxes(0, 1)
+        yc = labels.reshape(b, t, ce_chunk).swapaxes(0, 1)
+
+        def step(acc, xs):
+            lg, y = xs
+            lg = lg.astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, y[..., None], axis=-1)[..., 0]
+            return acc + jnp.sum(lse - gold), None
+
+        acc0 = L.vma_like(jnp.zeros((), jnp.float32), logits)
+        total, _ = jax.lax.scan(step, acc0, (lc, yc))
+        ce = total / (labels.shape[0] * labels.shape[1])
+    else:
+        lg = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(lse - gold)
+
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, prefill_len: int) -> PyTree:
+    """Abstract cache structure (zeros) for a given serving shape."""
+    cdt = _dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    cap = prefill_len + DECODE_CACHE_MARGIN
+    if cfg.family == "ssm":
+        return {
+            "state": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, hd, hd), jnp.float32),
+            "prev1": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), cdt),
+            "prev2": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), cdt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        n_super, n_tail = hybrid_layout(cfg)
+        w = cfg.hybrid.lru_width or cfg.d_model
+        k = cfg.hybrid.conv_width
+        win = min(cfg.hybrid.local_window, cap)
+        caches = {
+            "h": jnp.zeros((n_super, 2, batch, w), jnp.float32),
+            "conv": jnp.zeros((n_super, 2, batch, k - 1, w), cdt),
+            "k": jnp.zeros((n_super, batch, win, cfg.n_kv_heads, hd), cdt),
+            "v": jnp.zeros((n_super, batch, win, cfg.n_kv_heads, hd), cdt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+        for i in range(n_tail):
+            caches[f"tail_h_{i}"] = jnp.zeros((batch, w), jnp.float32)
+            caches[f"tail_conv_{i}"] = jnp.zeros((batch, k - 1, w), cdt)
+        return caches
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cap, cfg.n_kv_heads, hd), cdt),
+        "v": jnp.zeros((cfg.n_layers, batch, cap, cfg.n_kv_heads, hd), cdt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ArchConfig) -> PyTree:
+    """Logical axes for the cache pytree (for sharding the decode step)."""
+    if cfg.family == "ssm":
+        return {
+            "state": ("layers", "batch", "heads", "head_dim", None),
+            "prev1": ("layers", "batch", None, "embed"),
+            "prev2": ("layers", "batch", None, "embed"),
+            "len": (),
+        }
+    if cfg.family == "hybrid":
+        n_super, n_tail = hybrid_layout(cfg)
+        axes = {
+            "h": ("layers", None, "batch", "mlp"),
+            "conv": ("layers", None, "batch", None, "mlp"),
+            "k": ("layers", "batch", None, "kv_heads", "head_dim"),
+            "v": ("layers", "batch", None, "kv_heads", "head_dim"),
+            "len": (),
+        }
+        for i in range(n_tail):
+            axes[f"tail_h_{i}"] = ("batch", "mlp")
+            axes[f"tail_conv_{i}"] = ("batch", None, "mlp")
+        return axes
+    return {
+        "k": ("layers", "batch", None, "kv_heads", "head_dim"),
+        "v": ("layers", "batch", None, "kv_heads", "head_dim"),
+        "len": (),
+    }
+
+
+def _dense_block_decode(p, x, caches_l, cache_len, cfg: ArchConfig,
+                        window: Optional[int] = None):
+    """x: (B,1,D). caches_l: dict k/v (B,cap,KV,hd). Returns (x, new_k, new_v)."""
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    h, k_new, v_new = attn.apply_attention_decode(
+        p["attn"], h, caches_l["k"], caches_l["v"],
+        cache_len,
+        rotary_pct=cfg.rotary_pct, rope_theta=cfg.rope_theta, window=window,
+    )
+    x = x + h
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        h, _ = moe_mod.apply_moe(p["moe"], h, cfg.moe)
+    else:
+        h = L.apply_mlp(p["mlp"], h, cfg.act)
+    return x + h, k_new, v_new
+
+
+def _ssm_block_decode(p, x, state, prev1, prev2, cfg: ArchConfig):
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    o, state = rwkv_mod.apply_timemix_decode(p["tm"], h, state, prev1, cfg.n_heads)
+    x = x + o
+    h2 = L.apply_norm(p["ln2"], x, cfg.norm)
+    x = x + rwkv_mod.apply_channelmix(p["cm"], h2, prev2)
+    return x, state, h, h2
+
+
+def _rec_block_decode(p, x, h_state, conv_state, cfg: ArchConfig):
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    o, h_state, conv_state = rglru_mod.apply_rglru_block_decode(
+        p["rglru"], h, h_state, conv_state
+    )
+    x = x + o
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    return x + L.apply_mlp(p["mlp"], h, cfg.act), h_state, conv_state
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ArchConfig,
+    caches: PyTree,
+    tokens: Optional[Array] = None,  # (B, 1) int32
+    embeds: Optional[Array] = None,  # (B, 1, D)
+) -> Tuple[Array, PyTree]:
+    """One serving step: consume one token, emit logits, update caches."""
+    x = _embed_in(params, cfg, tokens, embeds)
+    cache_len = caches["len"]
+    b = x.shape[0]
+
+    if cfg.family == "ssm":
+
+        def body(carry, xs):
+            lp, state, p1, p2 = xs
+            x_c = carry
+            x_n, state, h1, h2 = _ssm_block_decode(lp, x_c, state, p1, p2, cfg)
+            return x_n, (state, h1, h2)
+
+        xs_tree = (params["layers"], caches["state"], caches["prev1"], caches["prev2"])
+        if cfg.scan_layers:
+            x, (state, prev1, prev2) = jax.lax.scan(body, x, xs_tree)
+        else:
+            ys = []
+            for i in range(cfg.n_layers):
+                x, y = body(x, _layer_slice(xs_tree, i))
+                ys.append(y)
+            state, prev1, prev2 = (jnp.stack([y[j] for y in ys]) for j in range(3))
+        new_caches = {
+            "state": state, "prev1": prev1, "prev2": prev2, "len": cache_len + 1,
+        }
+    elif cfg.family == "hybrid":
+        win = caches["k"].shape[2]
+
+        def body(carry, xs):
+            lp, h_st, conv_st, kc, vc = xs
+            x_c = carry
+            x_c, h0, c0 = _rec_block_decode(lp["rec1"], x_c, h_st[0], conv_st[0], cfg)
+            x_c, h1, c1 = _rec_block_decode(lp["rec2"], x_c, h_st[1], conv_st[1], cfg)
+            # ring-buffer local attention over the window-sized cache
+            h = L.apply_norm(lp["attn"]["ln1"], x_c, cfg.norm)
+            o, k_new, v_new = attn.apply_attention_decode(
+                lp["attn"]["attn"], h, kc, vc, cache_len,
+                rotary_pct=cfg.rotary_pct, rope_theta=cfg.rope_theta, ring=True,
+            )
+            x_c = x_c + o
+            h = L.apply_norm(lp["attn"]["ln2"], x_c, cfg.norm)
+            x_c = x_c + L.apply_mlp(lp["attn"]["mlp"], h, cfg.act)
+            return x_c, (jnp.stack([h0, h1]), jnp.stack([c0, c1]), k_new, v_new)
+
+        xs_tree = (params["layers"], caches["h"], caches["conv"], caches["k"], caches["v"])
+        if cfg.scan_layers:
+            x, (h_new, conv_new, k_new, v_new) = jax.lax.scan(body, x, xs_tree)
+        else:
+            ys = []
+            n_super, _ = hybrid_layout(cfg)
+            for i in range(n_super):
+                x, y = body(x, _layer_slice(xs_tree, i))
+                ys.append(y)
+            h_new, conv_new, k_new, v_new = (
+                jnp.stack([y[j] for y in ys]) for j in range(4)
+            )
+        new_caches = dict(caches)
+        new_caches.update({"h": h_new, "conv": conv_new, "k": k_new, "v": v_new,
+                           "len": cache_len + 1})
+        _, n_tail = hybrid_layout(cfg)
+        for i in range(n_tail):
+            x, hs, cs = _rec_block_decode(
+                params[f"tail_{i}"], x, caches[f"tail_h_{i}"], caches[f"tail_conv_{i}"], cfg
+            )
+            new_caches[f"tail_h_{i}"] = hs
+            new_caches[f"tail_conv_{i}"] = cs
+    else:
+
+        def body(carry, xs):
+            lp, kc, vc = xs
+            x_n, k_new, v_new = _dense_block_decode(
+                lp, carry, {"k": kc, "v": vc}, cache_len, cfg
+            )
+            return x_n, (k_new, v_new)
+
+        xs_tree = (params["layers"], caches["k"], caches["v"])
+        if cfg.scan_layers:
+            x, (k_new, v_new) = jax.lax.scan(body, x, xs_tree)
+        else:
+            ys = []
+            for i in range(cfg.n_layers):
+                x, y = body(x, _layer_slice(xs_tree, i))
+                ys.append(y)
+            k_new = jnp.stack([y[0] for y in ys])
+            v_new = jnp.stack([y[1] for y in ys])
+        new_caches = {"k": k_new, "v": v_new, "len": cache_len + 1}
+
+    logits = _logits_out(params, cfg, x)
+    return logits, new_caches
+
+
+def prefill(
+    params: PyTree,
+    cfg: ArchConfig,
+    tokens: Optional[Array] = None,
+    embeds: Optional[Array] = None,
+) -> Tuple[Array, PyTree]:
+    """Prefill pass: full forward returning last-position logits + caches.
+
+    For the dry-run's prefill cells the interesting artifact is the
+    forward itself; caches are produced for the dense families (roped k/v
+    per layer) so serving is end-to-end real.
+    """
+    x = _embed_in(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cdt = _dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+
+    if cfg.family in ("ssm", "hybrid"):
+        # recurrent prefill: run forward, then rebuild final states via the
+        # decode-state helpers (kept simple: forward for logits, states from
+        # a final chunked pass is family-specific; serving drivers use this)
+        logits, _ = forward(params, cfg, tokens=tokens, embeds=embeds, for_training=False)
+        caches = init_caches(cfg, b, s)
+        caches["len"] = jnp.asarray(s, jnp.int32)
+        return logits[:, -1:], caches
+
+    def body(carry, lp):
+        x_c = carry
+        h = L.apply_norm(lp["ln1"], x_c, cfg.norm)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"].astype(cdt))
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"].astype(cdt))
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"].astype(cdt))
+        q = L.apply_rope(q, positions, cfg.rotary_pct, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rotary_pct, cfg.rope_theta)
+        o = attn.chunked_causal_attention(
+            q, k, v, chunk=cfg.attn_chunk, unroll=cfg.unroll_loops
+        )
+        x_c = x_c + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"].astype(cdt))
+        h = L.apply_norm(lp["ln2"], x_c, cfg.norm)
+        if cfg.moe is not None:
+            h, _ = moe_mod.apply_moe(lp["moe"], h, cfg.moe)
+        else:
+            h = L.apply_mlp(lp["mlp"], h, cfg.act)
+        return x_c + h, (k, v)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    else:
+        ys = []
+        for i in range(cfg.n_layers):
+            x, y = body(x, _layer_slice(params["layers"], i))
+            ys.append(y)
+        ks = jnp.stack([y[0] for y in ys])
+        vs = jnp.stack([y[1] for y in ys])
+    logits = _logits_out(params, cfg, x[:, -1:])
+    cap = s + DECODE_CACHE_MARGIN
+    pad = [(0, 0), (0, 0), (0, cap - s), (0, 0), (0, 0)]
+    caches = {
+        "k": jnp.pad(ks, pad),
+        "v": jnp.pad(vs, pad),
+        "len": jnp.asarray(s, jnp.int32),
+    }
+    return logits, caches

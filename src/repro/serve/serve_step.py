@@ -1,0 +1,119 @@
+"""Batched serving: prefill + decode loop with continuous batching slots.
+
+CPU-runnable with reduced configs (examples/serve_decode.py) and
+dry-runnable at production shapes (the decode_32k / long_500k cells).
+
+The engine keeps a fixed pool of batch slots; finished sequences free
+their slot, pending requests claim one and are prefllled individually
+(static shapes: one prefill length bucket per engine).  This is the
+standard static-batching serving pattern expressible in pure pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+PyTree = Any
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new: int
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeEngine:
+    cfg: ArchConfig
+    params: PyTree
+    batch_slots: int
+    prefill_len: int
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self.caches = T.init_caches(self.cfg, self.batch_slots, self.prefill_len)
+        self.slot_req: List[Optional[Request]] = [None] * self.batch_slots
+        self._decode = jax.jit(
+            lambda p, c, t: T.decode_step(p, self.cfg, c, tokens=t)
+        )
+        self._key = jax.random.PRNGKey(self.seed)
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(
+            jax.random.categorical(sub, logits[:, -1] / self.temperature), np.int32
+        )
+
+    def admit(self, req: Request) -> bool:
+        """Prefill a request into a free slot; False if engine is full."""
+        try:
+            slot = self.slot_req.index(None)
+        except ValueError:
+            return False
+        prompt = np.zeros((self.prefill_len,), np.int32)
+        plen = min(len(req.prompt), self.prefill_len)
+        prompt[:plen] = req.prompt[:plen]
+        # per-slot prefill: run the full-batch prefill with this row active.
+        tokens = jnp.asarray(np.tile(prompt, (self.batch_slots, 1)))
+        logits, caches = jax.jit(lambda p, t: T.prefill(p, self.cfg, tokens=t))(
+            self.params, tokens
+        )
+        # merge this slot's row into the engine caches
+        def merge(dst, src):
+            if dst.ndim >= 2 and dst.shape[1] == self.batch_slots:  # (L,B,...)
+                return dst.at[:, slot].set(src[:, slot])
+            if dst.ndim >= 1 and dst.shape[0] == self.batch_slots:  # (B,...)
+                return dst.at[slot].set(src[slot])
+            return src  # scalars ("len") — lockstep by construction
+
+        self.caches = jax.tree_util.tree_map(merge, self.caches, caches)
+        req.out_tokens = [int(self._sample(logits)[slot])]
+        self.slot_req[slot] = req
+        return True
+
+    def step(self) -> List[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        active = [r for r in self.slot_req if r is not None]
+        if not active:
+            return []
+        last = np.zeros((self.batch_slots, 1), np.int32)
+        for i, r in enumerate(self.slot_req):
+            if r is not None and r.out_tokens:
+                last[i, 0] = r.out_tokens[-1]
+        logits, self.caches = self._decode(self.params, self.caches, jnp.asarray(last))
+        nxt = self._sample(logits)
+        finished = []
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            r.out_tokens.append(int(nxt[i]))
+            if len(r.out_tokens) >= r.max_new:
+                r.done = True
+                finished.append(r)
+                self.slot_req[i] = None
+        return finished
+
+    def run(self, requests: List[Request], max_steps: int = 10_000) -> List[Request]:
+        pending = list(requests)
+        done: List[Request] = []
+        steps = 0
+        while (pending or any(self.slot_req)) and steps < max_steps:
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            done.extend(self.step())
+            steps += 1
+        return done

@@ -1,0 +1,192 @@
+"""Logical-axis sharding: rules mapping logical axes -> mesh axes.
+
+Model code annotates parameters (via ParamDef.axes) and activations (via
+``constrain``) with *logical* axis names; this module maps them onto
+physical mesh axes.  Rules are context-scoped so the same model code runs
+unsharded on CPU tests, on the single-pod mesh, and on the multi-pod mesh.
+
+Rule sets (MaxText-style):
+  * TP  : heads/mlp/experts/vocab over `model`; batch over data(+pod)
+  * FSDP: additionally shard the `embed` axis of params over `data`
+          (ZeRO-3-ish: params and optimizer state sharded, gathered
+          per-layer by XLA at use time)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current_rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_state, "rules", None)
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+    prev_r = getattr(_state, "rules", None)
+    prev_m = getattr(_state, "mesh", None)
+    _state.rules = rules
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = prev_r
+        _state.mesh = prev_m
+
+
+def base_rules(multi_pod: bool, fsdp: bool = False) -> Dict[str, MeshAxes]:
+    """The standard TP(+FSDP) rule set for the production meshes."""
+    data_axes: MeshAxes = ("pod", "data") if multi_pod else "data"
+    rules: Dict[str, MeshAxes] = {
+        "batch": data_axes,
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "heads_flat": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        "vocab": "model",
+        "layers": None,
+    }
+    if fsdp:
+        rules["embed"] = "data"  # shard params' embed dim over data (ZeRO-3)
+    return rules
+
+
+def spec_for(axes: Sequence[Optional[str]], rules: Dict[str, MeshAxes]) -> P:
+    """Logical axes tuple -> PartitionSpec, dropping unmapped axes."""
+    parts = []
+    used: set = set()
+
+    def resolve(ax):
+        if ax is None:
+            return None
+        m = rules.get(ax, None)
+        if m is None:
+            return None
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        ms = tuple(a for a in ms if a not in used)
+        if not ms:
+            return None
+        used.update(ms)
+        return ms if len(ms) > 1 else ms[0]
+
+    for ax in axes:
+        parts.append(resolve(ax))
+    return P(*parts)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a rules ctx."""
+    rules = _current_rules()
+    if rules is None:
+        return x
+    spec = spec_for(axes, rules)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def tree_specs(axes_tree: Any, rules: Dict[str, MeshAxes]) -> Any:
+    """Pytree of logical-axes tuples -> pytree of PartitionSpec."""
+    return jax.tree_util.tree_map(
+        lambda axes: spec_for(axes, rules),
+        axes_tree,
+        is_leaf=lambda v: isinstance(v, tuple)
+        and all(a is None or isinstance(a, str) for a in v),
+    )
+
+
+def tree_shardings(axes_tree: Any, rules: Dict[str, MeshAxes], mesh: Mesh) -> Any:
+    specs = tree_specs(axes_tree, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+def rules_for(
+    mesh: Mesh,
+    *,
+    multi_pod: bool,
+    fsdp: bool,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    d_model: int,
+    d_ff: int,
+    vocab: int,
+    global_batch: int,
+    prefer_replicated_kv: bool = False,
+    prefer_replicated_attn: bool = False,
+) -> Dict[str, MeshAxes]:
+    """Divisibility-aware rule set for a concrete (arch, shape, mesh) cell.
+
+    Fallback chains (first divisible option wins):
+      heads    : model -> head_dim over model -> replicate
+      kv_heads : model -> head_dim over model -> replicate
+                 (or straight to replicate when prefer_replicated_kv — the
+                 head_dim fallback shards the QK^T contraction dim, which
+                 the SPMD partitioner handles with involuntary remat
+                 copies; replicating small KV avoids that, see §Perf)
+      vocab    : model -> replicate   (e.g. granite-3-8b's 49155 is odd)
+      batch    : data(+pod) -> replicate (e.g. long_500k's global_batch=1)
+    """
+    rules = base_rules(multi_pod, fsdp=fsdp)
+    model_k = mesh.shape.get("model", 1)
+    data_k = mesh.shape.get("data", 1) * (mesh.shape.get("pod", 1) if multi_pod else 1)
+
+    def shard_head_axis(kind: str) -> None:
+        n = n_heads if kind == "heads" else n_kv_heads
+        if n % model_k == 0:
+            rules[kind] = "model"
+        elif prefer_replicated_attn or (kind == "kv_heads" and prefer_replicated_kv):
+            # replicate rather than shard head_dim: sharding the QK^T
+            # contraction dim triggers SPMD involuntary-remat resharding
+            rules[kind] = None
+        elif head_dim % model_k == 0:
+            rules[kind] = None
+            rules["head_dim"] = "model"
+        else:
+            rules[kind] = None
+
+    shard_head_axis("heads")
+    shard_head_axis("kv_heads")
+    if d_model % model_k == 0:
+        rules["heads_flat"] = "model"
+    else:
+        rules["heads_flat"] = None
+    if vocab % model_k != 0:
+        rules["vocab"] = None
+    if d_ff % model_k != 0:
+        rules["mlp"] = None
+    if global_batch % data_k != 0:
+        rules["batch"] = None
+    if fsdp and d_model % (mesh.shape.get("data", 1)) != 0:
+        rules["embed"] = None
+    return rules
+
+
+def validate_divisibility(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> bool:
+    """True iff every sharded dim divides by its mesh-axis product."""
+    for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if part is None:
+            continue
+        parts = (part,) if isinstance(part, str) else part
+        k = 1
+        for p in parts:
+            k *= mesh.shape[p]
+        if dim % k != 0:
+            return False
+    return True

@@ -1,0 +1,137 @@
+"""Cross-pod gradient synchronisation through the integer-DWT codec.
+
+Used by the multi-pod train step (``train_step.py``): the step runs under
+``jax.shard_map`` manual over the ``pod`` mesh axis (everything else stays
+auto-sharded), so gradients arriving here are *pod-local* partial means.
+
+Codec (``mode="bands"``, the production default): every wavelet band is
+shipped, integer-quantized — approx at int16, details at int8 after a
+per-band arithmetic right shift (multiplierless, JPEG2000-style "transform
+then quantize the bands", the paper modules' own downstream use).  With
+fp32 baselines this is a 3.2x wire-byte reduction at levels=2; the
+quantization error has no fixed subspace, so error feedback drains
+(verified in benchmarks/grad_compression.py).
+
+``mode="lowband"`` (kept for ablation) ships only the approximation band
+(2^levels x reduction) — but the dropped subspace is FIXED, so error
+feedback cannot recover the detail components; documented negative result.
+
+The exchange itself is a ring of ``lax.ppermute`` steps with local int32
+accumulation, so the wire carries exactly the quantized payload (a psum
+of int8 would have to widen on the wire).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as C
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class WaveletSyncConfig:
+    levels: int = 2
+    mode: str = "paper"  # lifting rounding mode
+    codec: str = "bands"  # bands | lowband | none
+    min_size: int = 4096  # tensors smaller than this sync uncompressed
+    n_pods: int = 2  # static ring size
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _ring_sum(x: jax.Array, axis_name: str, n: int) -> jax.Array:
+    """Sum x across the axis with n-1 ppermute hops (wire = payload dtype)."""
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    acc = x.astype(jnp.int32)
+    send = x
+    for _ in range(n - 1):
+        send = jax.lax.ppermute(send, axis_name, perm)
+        acc = acc + send.astype(jnp.int32)
+    return acc
+
+
+def pod_sync_tree(
+    grads: PyTree, err: PyTree, cfg: WaveletSyncConfig, axis_name: str = "pod"
+) -> Tuple[PyTree, PyTree]:
+    """All-reduce grads over `axis_name` through the integer-DWT codec.
+
+    Must be called inside shard_map manual over `axis_name`.
+    Returns (synced_grads, new_error_feedback).
+    """
+    n_pods = cfg.n_pods
+
+    def sync_leaf(g, e):
+        if g.size < cfg.min_size or cfg.codec == "none":
+            return (
+                jax.lax.pmean(g.astype(jnp.float32), axis_name).astype(g.dtype),
+                jnp.zeros(g.shape, jnp.float32),
+            )
+        g32 = g.astype(jnp.float32) + e
+        # shared quantization scale + band shifts (scalar collectives)
+        scale = jax.lax.pmax(C.tensor_scale(g32), axis_name)
+        if cfg.codec == "lowband":
+            approx, details, n = C.forward_bands(g32, scale, cfg.levels, cfg.mode)
+            low_sum = jax.lax.psum(approx, axis_name)
+            band = C.CompressedBand(low_sum, scale, n, cfg.levels)
+            g_sync = C.decompress_lowband(band, g.shape, cfg.mode) / n_pods
+            own = C.decompress_lowband(
+                C.CompressedBand(approx, scale, n, cfg.levels), g.shape, cfg.mode
+            )
+            return g_sync.astype(g.dtype), g32 - own
+        # --- band-quantized codec, sharding-aligned (last-axis) ------------
+        # transforming along the tensor's own last axis keeps every band
+        # sharded exactly like the gradient, so the ring exchange ships
+        # only the local shard (a flatten-based codec all-gathers: §Perf)
+        pyr = C.forward_bands_nd(g32, scale, cfg.levels, cfg.mode)
+        shifts = C.pyramid_shifts(pyr)
+        a_sh = jax.lax.pmax(shifts[0], axis_name)
+        d_shs = tuple(jax.lax.pmax(s, axis_name) for s in shifts[1])
+        shifts = (a_sh, d_shs)
+        approx_q, details_q = C.quantize_pyramid(pyr, shifts)
+        sum_a = _ring_sum(approx_q, axis_name, n_pods)
+        sum_d = tuple(_ring_sum(d, axis_name, n_pods) for d in details_q)
+        shape_nd = g32.shape if g32.ndim > 0 else (1,)
+        g_sync = (
+            C.decompress_bands_nd(sum_a, sum_d, shifts, scale, shape_nd, cfg.mode)
+            / n_pods
+        ).reshape(g.shape)
+        own = C.decompress_bands_nd(
+            approx_q.astype(jnp.int32),
+            tuple(d.astype(jnp.int32) for d in details_q),
+            shifts,
+            scale,
+            shape_nd,
+            cfg.mode,
+        ).reshape(g.shape)
+        return g_sync.astype(g.dtype), g32 - own
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out = [sync_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    synced = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return synced, new_err
+
+
+def pod_collective_bytes(params: PyTree, cfg: WaveletSyncConfig) -> Tuple[int, int]:
+    """(uncompressed fp32, compressed) wire bytes per inter-pod sync."""
+    raw = 0
+    comp = 0
+    for p in jax.tree_util.tree_leaves(params):
+        raw += p.size * 4
+        if p.size < cfg.min_size or cfg.codec == "none":
+            comp += p.size * 4
+        elif cfg.codec == "lowband":
+            m = 1 << cfg.levels
+            n_pad = (p.size + m - 1) // m * m
+            comp += (n_pad >> cfg.levels) * 4 + 4
+        else:
+            comp += C.band_bytes(p.size, cfg.levels)
+    return raw, comp

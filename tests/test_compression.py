@@ -1,0 +1,92 @@
+"""Wavelet gradient/tensor compression tests (core + train integration)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+def test_quantize_dequantize_bounds():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((1000,)), jnp.float32)
+    scale = C.tensor_scale(g)
+    q = C.quantize(g, scale)
+    back = C.dequantize(q, scale)
+    assert float(jnp.max(jnp.abs(back - g))) <= float(scale) * 0.5 + 1e-7
+
+
+def test_lowband_roundtrip_shapes():
+    rng = np.random.default_rng(1)
+    for shape in [(100,), (33, 7), (4, 5, 6)]:
+        g = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        g_hat, resid = C.lossy_roundtrip(g, levels=2)
+        assert g_hat.shape == g.shape
+        assert resid.shape == g.shape
+        # reconstruction + residual == original (exact bookkeeping)
+        np.testing.assert_allclose(
+            np.asarray(g_hat + resid), np.asarray(g), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_lowband_preserves_smooth_signals():
+    """Low-band channel is near-exact for smooth (low-frequency) tensors."""
+    t = jnp.linspace(0, 3.0, 4096)
+    g = jnp.sin(t) * 2.0 + 0.5 * jnp.cos(3 * t)
+    g_hat, _ = C.lossy_roundtrip(g, levels=2)
+    rel = float(jnp.linalg.norm(g_hat - g) / jnp.linalg.norm(g))
+    assert rel < 0.01
+
+
+def test_band_quantized_roundtrip_accuracy():
+    """Production codec: <5% single-step distortion on white noise."""
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.standard_normal((8, 4096)), jnp.float32)
+    g_hat, resid = C.band_quantized_roundtrip(g, levels=2)
+    rel = float(jnp.linalg.norm(g_hat - g) / jnp.linalg.norm(g))
+    assert rel < 0.05
+    np.testing.assert_allclose(
+        np.asarray(g_hat + resid), np.asarray(g), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_error_feedback_drains_band_codec():
+    """With the band codec, EF must make cumulative error << sum of per-step."""
+    rng = np.random.default_rng(3)
+    g_true = jnp.asarray(rng.standard_normal((4096,)), jnp.float32)
+    rt = jax.jit(lambda g: C.band_quantized_roundtrip(g, levels=2))
+    err = jnp.zeros_like(g_true)
+    applied = jnp.zeros_like(g_true)
+    for t in range(15):
+        g_hat, err = rt(g_true + err)
+        applied = applied + g_hat
+    rel = float(jnp.linalg.norm(applied - 15 * g_true) / jnp.linalg.norm(15 * g_true))
+    single = float(jnp.linalg.norm(rt(g_true)[0] - g_true) / jnp.linalg.norm(g_true))
+    assert rel < single / 2  # EF must drain, not accumulate
+
+
+def test_band_bytes_accounting():
+    n = 10000
+    b = C.band_bytes(n, levels=2)
+    # approx n/4 int16 + details 3n/4 int8 (+ padding + scalars)
+    assert b < n * 4 / 3.0  # at least 3x smaller than fp32
+    assert b > n  # but not magically below 1 byte/coeff
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=64, max_value=5000),
+    levels=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_property_band_codec_bookkeeping(n, levels, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((n,)) * 10.0, jnp.float32)
+    g_hat, resid = C.band_quantized_roundtrip(g, levels=levels)
+    assert bool(jnp.isfinite(g_hat).all())
+    np.testing.assert_allclose(
+        np.asarray(g_hat + resid), np.asarray(g), rtol=1e-4, atol=1e-4
+    )
+    rel = float(jnp.linalg.norm(g_hat - g) / (jnp.linalg.norm(g) + 1e-9))
+    assert rel < 0.08

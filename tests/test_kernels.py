@@ -1,0 +1,98 @@
+"""Pallas kernel tests: shape/dtype sweep, bit-exact vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+LENGTHS = [16, 17, 64, 255, 256, 257, 300, 511, 512, 513, 1000, 2048, 2049]
+DTYPES = [
+    (jnp.int8, -128, 127),
+    (jnp.int16, -4096, 4096),
+    (jnp.int32, -(2**20), 2**20),
+]
+
+
+@pytest.mark.parametrize("n", LENGTHS)
+@pytest.mark.parametrize("mode", ["paper", "jpeg2000"])
+def test_fwd_matches_ref(n, mode):
+    x = jnp.asarray(RNG.integers(-1000, 1000, size=(3, n)), jnp.int32)
+    s, d = ops.dwt53_fwd_1d(x, mode=mode)
+    s_r, d_r = ref.dwt53_fwd_1d(x, mode=mode)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d_r))
+
+
+@pytest.mark.parametrize("n", LENGTHS)
+@pytest.mark.parametrize("mode", ["paper", "jpeg2000"])
+def test_inv_roundtrip(n, mode):
+    x = jnp.asarray(RNG.integers(-1000, 1000, size=(2, n)), jnp.int32)
+    s, d = ops.dwt53_fwd_1d(x, mode=mode)
+    xr = ops.dwt53_inv_1d(s, d, mode=mode)
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(x))
+
+
+@pytest.mark.parametrize("dtype,lo,hi", DTYPES)
+def test_dtype_sweep(dtype, lo, hi):
+    for n in (64, 257, 1024):
+        x = jnp.asarray(RNG.integers(lo, hi, size=(4, n)), dtype=dtype)
+        s, d = ops.dwt53_fwd_1d(x)
+        s_r, d_r = ref.dwt53_fwd_1d(x.astype(s.dtype))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(d_r))
+        xr = ops.dwt53_inv_1d(s, d)
+        np.testing.assert_array_equal(np.asarray(xr), np.asarray(x, dtype=xr.dtype))
+
+
+def test_int8_promotes_to_int16():
+    x = jnp.asarray(RNG.integers(-128, 127, size=(2, 64)), jnp.int8)
+    s, d = ops.dwt53_fwd_1d(x)
+    assert s.dtype == jnp.int16 and d.dtype == jnp.int16
+
+
+def test_multilevel_matches_ref():
+    x = jnp.asarray(RNG.integers(0, 255, size=(4, 1000)), jnp.int32)
+    pk = ops.dwt53_fwd(x, levels=5)
+    pr = ref.dwt53_fwd(x, levels=5)
+    np.testing.assert_array_equal(np.asarray(pk.approx), np.asarray(pr.approx))
+    for a, b in zip(pk.details, pr.details):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ops.dwt53_inv(pk)), np.asarray(x))
+
+
+def test_leading_dims_batched():
+    x = jnp.asarray(RNG.integers(0, 255, size=(2, 3, 5, 256)), jnp.int32)
+    s, d = ops.dwt53_fwd_1d(x)
+    assert s.shape == (2, 3, 5, 128)
+    s_r, d_r = ref.dwt53_fwd_1d(x)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=16, max_value=700),
+    rows=st.integers(min_value=1, max_value=5),
+    mode=st.sampled_from(["paper", "jpeg2000"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_kernel_equals_oracle(n, rows, mode, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-(2**14), 2**14, size=(rows, n)), jnp.int32)
+    s, d = ops.dwt53_fwd_1d(x, mode=mode)
+    s_r, d_r = ref.dwt53_fwd_1d(x, mode=mode)
+    assert (s == s_r).all() and (d == d_r).all()
+    assert (ops.dwt53_inv_1d(s, d, mode=mode) == x).all()
+
+
+def test_kernel_block_boundaries():
+    """Values that straddle tile boundaries (block_pairs=256) exactly."""
+    n = 4 * 256 * 2  # 4 tiles of pairs
+    x = jnp.asarray(np.arange(n, dtype=np.int32)[None] * 3 - 1000)
+    s, d = ops.dwt53_fwd_1d(x)
+    s_r, d_r = ref.dwt53_fwd_1d(x)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d_r))

@@ -1,0 +1,201 @@
+"""Paper-faithfulness tests for the integer (5,3) lifting DWT (core/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lifting as L
+from repro.core.opcount import (
+    arithmetic_summary,
+    direct_form_pair,
+    example_int_args,
+    lifting_pair,
+)
+from repro.core.pe import AnalysisModule, ReconstructionModule
+
+MODES = ("paper", "jpeg2000")
+
+
+# ---------------------------------------------------------------------------
+# eq. (5) / eq. (7): the transform equations verbatim
+# ---------------------------------------------------------------------------
+
+
+def test_predict_equation_5():
+    # d[n] = x[2n+1] - floor((x[2n] + x[2n+2]) / 2)
+    x = jnp.asarray([10, 7, 4, 9, 2, 5], jnp.int32)
+    s, d = L.dwt53_fwd_1d(x)
+    assert int(d[0]) == 7 - (10 + 4) // 2
+    assert int(d[1]) == 9 - (4 + 2) // 2
+    # negative sums must use floor (the paper's one-bit correction)
+    x2 = jnp.asarray([-3, 0, -4, 0], jnp.int32)
+    _, d2 = L.dwt53_fwd_1d(x2)
+    import math
+
+    assert int(d2[0]) == 0 - math.floor((-3 + -4) / 2)
+
+
+def test_update_equation_7():
+    # s[n] = x[2n] + floor((d[n] + d[n-1]) / 4), with d[-1] := d[0]
+    x = jnp.asarray([10, 7, 4, 9, 2, 5], jnp.int32)
+    s, d = L.dwt53_fwd_1d(x)
+    d_l = [int(v) for v in d]
+    assert int(s[0]) == 10 + (d_l[0] + d_l[0] >> 2 if False else (d_l[0] + d_l[0]) >> 2)
+    assert int(s[1]) == 4 + ((d_l[1] + d_l[0]) >> 2)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("n", [2, 3, 5, 17, 64, 100, 255, 256, 1000])
+def test_perfect_reconstruction(mode, n):
+    """Paper Fig. 5: integer in -> forward -> backward == identity."""
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.integers(-500, 500, size=(4, n)), jnp.int32)
+    s, d = L.dwt53_fwd_1d(x, mode=mode)
+    assert (L.dwt53_inv_1d(s, d, mode=mode) == x).all()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_multilevel_reconstruction(mode):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 255, size=(2, 777)), jnp.int32)
+    levels = L.max_levels(777)
+    pyr = L.dwt53_fwd(x, levels=min(levels, 6), mode=mode)
+    assert (L.dwt53_inv(pyr, mode=mode) == x).all()
+
+
+def test_2d_reconstruction():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, 255, size=(3, 33, 47)), jnp.int32)
+    assert (L.dwt53_inv_2d(L.dwt53_fwd_2d(x)) == x).all()
+
+
+def test_band_lengths_non_power_of_two():
+    """Paper claim: works for lengths that are not powers of two."""
+    for n in (7, 9, 100, 255, 321):
+        x = jnp.zeros((n,), jnp.int32)
+        s, d = L.dwt53_fwd_1d(x)
+        assert s.shape[-1] == (n + 1) // 2
+        assert d.shape[-1] == n // 2
+        a_len, d_lens = L.band_sizes(n, 3)
+        assert a_len + sum(d_lens) == n
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-100, 100, size=(2, 100)), jnp.int32)
+    pyr = L.dwt53_fwd(x, levels=3)
+    flat = L.pack(pyr)
+    pyr2 = L.unpack(flat, 100, 3)
+    assert (L.dwt53_inv(pyr2) == x).all()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests (system invariant: lossless for any int signal)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.lists(st.integers(min_value=-(2**14), max_value=2**14 - 1), min_size=2, max_size=300),
+    mode=st.sampled_from(MODES),
+)
+def test_property_lossless_any_signal(data, mode):
+    x = jnp.asarray(np.asarray(data, np.int32)[None])
+    s, d = L.dwt53_fwd_1d(x, mode=mode)
+    assert (L.dwt53_inv_1d(s, d, mode=mode) == x).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.lists(st.integers(min_value=0, max_value=255), min_size=8, max_size=200),
+    levels=st.integers(min_value=1, max_value=3),
+)
+def test_property_multilevel_lossless_8bit(data, levels):
+    """The paper's regime: 8-bit positive samples."""
+    x = jnp.asarray(np.asarray(data, np.int32)[None])
+    pyr = L.dwt53_fwd(x, levels=levels)
+    assert (L.dwt53_inv(pyr) == x).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=-128, max_value=127), min_size=4, max_size=64))
+def test_property_dynamic_range_growth(data):
+    """Intermediates grow <= 2 bits per level (paper: 8-bit in, 9-bit regs)."""
+    x = jnp.asarray(np.asarray(data, np.int32)[None])
+    s, d = L.dwt53_fwd_1d(x)
+    assert int(jnp.abs(d).max()) <= 2 * 256  # detail: +-(1.5*range)
+    assert int(jnp.abs(s).max()) <= 2 * 256
+
+
+def test_constant_signal_zero_details():
+    """'If the odd value coincides with predicted value, wavelet coeff is 0.'"""
+    x = jnp.full((1, 64), 77, jnp.int32)
+    s, d = L.dwt53_fwd_1d(x)
+    assert (d == 0).all()
+    assert (s == 77).all()  # update adds floor(0/4) = 0
+
+
+# ---------------------------------------------------------------------------
+# PE hardware model (paper Fig. 2-4, Tables 1-2)
+# ---------------------------------------------------------------------------
+
+
+def test_pe_bitexact_vs_reference():
+    rng = np.random.default_rng(5)
+    for n in (8, 64, 101):
+        x = rng.integers(0, 255, size=n)
+        am = AnalysisModule()
+        s_pe, d_pe = am.process(x)
+        s_ref, d_ref = L.dwt53_fwd_1d(jnp.asarray(x, jnp.int32))
+        assert s_pe == [int(v) for v in s_ref]
+        assert d_pe == [int(v) for v in d_ref]
+        rm = ReconstructionModule()
+        assert rm.process(s_pe, d_pe) == [int(v) for v in x]
+
+
+def test_pe_table2_op_counts():
+    """Table 2: 4 adders + 2 shifters per output pair (vs Kishore 8+4)."""
+    x = np.random.default_rng(6).integers(0, 255, size=64)
+    am = AnalysisModule()
+    am.process(x)
+    pairs = 32
+    assert am.pe.ledger.adds == 4 * pairs
+    assert am.pe.ledger.shifts == 2 * pairs
+
+
+def test_pe_forward_backward_same_complexity():
+    """Paper conclusion: forward and backward have equal complexity."""
+    x = np.random.default_rng(7).integers(0, 255, size=128)
+    am = AnalysisModule()
+    s, d = am.process(x)
+    rm = ReconstructionModule()
+    rm.process(s, d)
+    assert am.pe.ledger.adds == rm.pe.ledger.adds
+    assert am.pe.ledger.shifts == rm.pe.ledger.shifts
+
+
+# ---------------------------------------------------------------------------
+# Traced-op counts (multiplierless claim, Table 2 via jaxpr)
+# ---------------------------------------------------------------------------
+
+
+def test_lifting_is_multiplierless():
+    summary = arithmetic_summary(lifting_pair, *example_int_args(4))
+    assert summary["multipliers"] == 0
+    assert summary["adders"] == 4
+    assert summary["shifters"] == 2
+
+
+def test_lifting_cheaper_than_direct_form():
+    ls = arithmetic_summary(lifting_pair, *example_int_args(4))
+    direct = arithmetic_summary(direct_form_pair, *example_int_args(5))
+    assert ls["total_arith"] < direct["total_arith"]
+    assert direct["multipliers"] == 0  # the direct form we count is also shift/add
+
+
+def test_full_transform_has_no_multiplies():
+    """The whole jitted forward (not just one pair) is multiplierless."""
+    x = jnp.zeros((2, 256), jnp.int32)
+    summary = arithmetic_summary(lambda a: L.dwt53_fwd_1d(a), x)
+    assert summary["multipliers"] == 0
