@@ -1,0 +1,173 @@
+"""Kernel-engine benchmark: per-level interpret path vs fused compiled path.
+
+This is the regression gate for the PR series' perf north star: the
+compiled-by-default dispatch plus the fused multi-level / fused-2D
+engines must beat the seed's behaviour (per-level dispatch of Pallas
+kernels under ``interpret=True``) on every workload shape.
+
+Emits CSV rows like every other bench module, and ``run_json()`` also
+returns a machine-readable payload that ``benchmarks/run.py`` writes to
+``BENCH_kernels.json`` so the perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import kernels as K
+from repro.kernels import backend as B
+from repro.kernels import fused2d, ops, ref
+
+# workload shapes: big enough to be meaningful, small enough that the
+# interpreter baseline keeps CI smoke under a minute
+SHAPE_1D = (8, 16384)
+LEVELS_1D = 3
+SHAPE_2D = (256, 256)
+
+
+def _time_us(fn, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _per_level_interpret_1d(x: jax.Array, levels: int):
+    """The seed's hot path: one interpret-mode kernel dispatch per level."""
+    s = x
+    details = []
+    for _ in range(levels):
+        s, d = ops.dwt53_fwd_1d(s, backend="interpret")
+        details.append(d)
+    return s, tuple(details)
+
+
+def _per_level_interpret_2d(x: jax.Array):
+    """The seed's 2D structure: 1D kernel + 4 transposes, interpret mode."""
+    s_r, d_r = ops.dwt53_fwd_1d(x, backend="interpret")
+    s_rc = jnp.swapaxes(s_r, -1, -2)
+    d_rc = jnp.swapaxes(d_r, -1, -2)
+    ll_t, lh_t = ops.dwt53_fwd_1d(s_rc, backend="interpret")
+    hl_t, hh_t = ops.dwt53_fwd_1d(d_rc, backend="interpret")
+    return (
+        jnp.swapaxes(ll_t, -1, -2),
+        jnp.swapaxes(lh_t, -1, -2),
+        jnp.swapaxes(hl_t, -1, -2),
+        jnp.swapaxes(hh_t, -1, -2),
+    )
+
+
+def _bit_exact_check(x1d: jax.Array, x2d: jax.Array) -> bool:
+    pyr = K.dwt53_fwd(x1d, levels=LEVELS_1D)
+    want = ref.dwt53_fwd(x1d, levels=LEVELS_1D)
+    ok = bool(np.array_equal(np.asarray(pyr.approx), np.asarray(want.approx)))
+    for a, b in zip(pyr.details, want.details):
+        ok = ok and bool(np.array_equal(np.asarray(a), np.asarray(b)))
+    ok = ok and bool(
+        np.array_equal(np.asarray(K.dwt53_inv(pyr)), np.asarray(x1d))
+    )
+    bands = K.dwt53_fwd_2d(x2d)
+    want2 = ref.dwt53_fwd_2d(x2d)
+    for name in ("ll", "lh", "hl", "hh"):
+        ok = ok and bool(
+            np.array_equal(
+                np.asarray(getattr(bands, name)), np.asarray(getattr(want2, name))
+            )
+        )
+    ok = ok and bool(
+        np.array_equal(np.asarray(K.dwt53_inv_2d(bands)), np.asarray(x2d))
+    )
+    return ok
+
+
+def run_json() -> Tuple[list, dict]:
+    rng = np.random.default_rng(7)
+    x1d = jnp.asarray(rng.integers(-4096, 4096, size=SHAPE_1D), jnp.int32)
+    x2d = jnp.asarray(rng.integers(-4096, 4096, size=SHAPE_2D), jnp.int32)
+
+    # --- 1D multi-level --------------------------------------------------
+    t_interp_1d = _time_us(
+        lambda a: _per_level_interpret_1d(a, LEVELS_1D), x1d, iters=3
+    )
+    t_fused_1d = _time_us(
+        lambda a: K.dwt53_fwd(a, levels=LEVELS_1D), x1d, iters=20
+    )
+    pyr = K.dwt53_fwd(x1d, levels=LEVELS_1D)
+    t_fused_inv_1d = _time_us(lambda p: K.dwt53_inv(p), pyr, iters=20)
+
+    # --- 2D --------------------------------------------------------------
+    t_interp_2d = _time_us(_per_level_interpret_2d, x2d, iters=3)
+    t_fused_2d = _time_us(lambda a: K.dwt53_fwd_2d(a), x2d, iters=20)
+    bands = K.dwt53_fwd_2d(x2d)
+    t_fused_inv_2d = _time_us(lambda b: K.dwt53_inv_2d(b), bands, iters=20)
+
+    bit_exact = _bit_exact_check(x1d, x2d)
+
+    payload = {
+        "platform": B.platform(),
+        "default_backend": B.default_backend(),
+        "bit_exact": bit_exact,
+        "1d_multilevel": {
+            "shape": list(SHAPE_1D),
+            "levels": LEVELS_1D,
+            "per_level_interpret_us": round(t_interp_1d, 1),
+            "fused_compiled_us": round(t_fused_1d, 1),
+            "fused_compiled_inv_us": round(t_fused_inv_1d, 1),
+            "speedup_fused_vs_interpret": round(t_interp_1d / t_fused_1d, 2),
+        },
+        "2d": {
+            "shape": list(SHAPE_2D),
+            "per_level_interpret_us": round(t_interp_2d, 1),
+            "fused_compiled_us": round(t_fused_2d, 1),
+            "fused_compiled_inv_us": round(t_fused_inv_2d, 1),
+            "speedup_fused_vs_interpret": round(t_interp_2d / t_fused_2d, 2),
+        },
+    }
+    rows = [
+        ("kernels.platform", B.platform(), "probed once at import"),
+        ("kernels.default_backend", B.default_backend(), "compiled by default"),
+        ("kernels.bit_exact", int(bit_exact), "fused paths vs kernels/ref oracle"),
+        (
+            "kernels.1d.per_level_interpret_us",
+            round(t_interp_1d, 1),
+            f"{SHAPE_1D} x{LEVELS_1D} levels, seed hot path",
+        ),
+        (
+            "kernels.1d.fused_compiled_us",
+            round(t_fused_1d, 1),
+            "fused multi-level; one compiled dispatch",
+        ),
+        (
+            "kernels.1d.speedup",
+            round(t_interp_1d / t_fused_1d, 2),
+            "fused compiled vs per-level interpret",
+        ),
+        (
+            "kernels.2d.per_level_interpret_us",
+            round(t_interp_2d, 1),
+            f"{SHAPE_2D}; 1D kernel + 4 transposes",
+        ),
+        (
+            "kernels.2d.fused_compiled_us",
+            round(t_fused_2d, 1),
+            "fused row-column single pass",
+        ),
+        (
+            "kernels.2d.speedup",
+            round(t_interp_2d / t_fused_2d, 2),
+            "fused compiled vs per-level interpret",
+        ),
+    ]
+    return rows, payload
+
+
+def run() -> list:
+    rows, _ = run_json()
+    return rows

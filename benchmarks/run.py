@@ -1,15 +1,22 @@
 """Benchmark harness — one module per paper table/figure + framework-level
-benches. Prints ``name,value,notes`` CSV.
+benches. Prints ``name,value,notes`` CSV; the ``kernels`` bench also
+writes a machine-readable ``BENCH_kernels.json`` (interpret vs compiled,
+per-level and 2D timings) so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only table2,fig5,...]
+                                           [--json-out BENCH_kernels.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+from pathlib import Path
 
-ALL = ["table2", "table3", "fig5", "gradsync", "ckpt", "roofline"]
+ALL = ["table2", "table3", "fig5", "gradsync", "ckpt", "roofline", "kernels"]
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
 def _load(name: str):
@@ -25,6 +32,8 @@ def _load(name: str):
         from benchmarks import ckpt_compression as m
     elif name == "roofline":
         from benchmarks import roofline_table as m
+    elif name == "kernels":
+        from benchmarks import kernels_bench as m
     else:
         raise KeyError(name)
     return m
@@ -33,6 +42,11 @@ def _load(name: str):
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument(
+        "--json-out",
+        default=str(REPO_ROOT / "BENCH_kernels.json"),
+        help="where the kernels bench writes its JSON payload",
+    )
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else ALL
 
@@ -40,7 +54,14 @@ def main(argv=None) -> int:
     failures = 0
     for name in names:
         try:
-            rows = _load(name).run()
+            mod = _load(name)
+            if hasattr(mod, "run_json"):
+                rows, payload = mod.run_json()
+                out = Path(args.json_out)
+                out.write_text(json.dumps(payload, indent=2) + "\n")
+                rows.append((f"{name}.json", out.name, "machine-readable payload"))
+            else:
+                rows = mod.run()
             for key, value, notes in rows:
                 print(f"{key},{value},{notes}")
         except Exception as e:  # noqa: BLE001

@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 tests + op-count benchmark + kernel perf regression gate.
+#
+#   bash benchmarks/smoke.sh
+#
+# Fails (non-zero exit) on: any tier-1 test failure, a Table-2 op-count
+# regression (the paper's multiplierless claim), a kernel bit-exactness
+# break, or the fused compiled path no longer beating the per-level
+# interpret path on the 1D multi-level and 2D workloads.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmarks: op counts + kernel engine =="
+CSV=$(mktemp)
+python -m benchmarks.run --only table2,kernels | tee "$CSV"
+
+echo "== regression gates =="
+SMOKE_CSV="$CSV" python - <<'PY'
+import json
+import os
+import sys
+
+rows = {}
+with open(os.environ["SMOKE_CSV"]) as fh:
+    for line in fh:
+        parts = line.strip().split(",", 2)
+        if len(parts) >= 2 and parts[0] != "name":
+            rows[parts[0]] = parts[1]
+
+fails = []
+# Table 2: the paper's op counts must hold exactly (multiplierless claim)
+for key, want in [
+    ("table2.ls.adders", 4.0),
+    ("table2.ls.shifters", 2.0),
+    ("table2.ls.multipliers", 0.0),
+]:
+    got = float(rows[key])
+    if got != want:
+        fails.append(f"{key}: got {got}, want {want}")
+
+bench = json.load(open("BENCH_kernels.json"))
+if not bench["bit_exact"]:
+    fails.append("kernel outputs diverged from the kernels/ref oracle")
+for section in ("1d_multilevel", "2d"):
+    s = bench[section]["speedup_fused_vs_interpret"]
+    if s <= 1.0:
+        fails.append(f"{section}: fused compiled path no faster ({s}x)")
+
+if fails:
+    print("SMOKE FAILED:")
+    for f in fails:
+        print("  -", f)
+    sys.exit(1)
+
+print(
+    "SMOKE OK: fused-vs-interpret speedups "
+    f"1d={bench['1d_multilevel']['speedup_fused_vs_interpret']}x "
+    f"2d={bench['2d']['speedup_fused_vs_interpret']}x "
+    f"(backend={bench['default_backend']}, platform={bench['platform']})"
+)
+PY

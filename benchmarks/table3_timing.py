@@ -49,7 +49,7 @@ def run() -> list:
     big = jnp.asarray(rng.integers(0, 255, size=(64, 65536)), jnp.int32)
     t_big = _time_us(lambda a: ops.dwt53_fwd_1d(a), big, iters=3)
     rows.append(
-        ("table3.kernel_64x65536_us", round(t_big, 1), "pallas interpret path, 4M samples")
+        ("table3.kernel_64x65536_us", round(t_big, 1), "kernel engine (compiled default), 4M samples")
     )
     rows.append(
         (

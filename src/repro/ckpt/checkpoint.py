@@ -13,7 +13,9 @@ Codecs:
     wz   — zlib(int-DWT(int16-quantized tensor))    (lossy, fast-restart
            snapshots; per-tensor max-abs scale stored in the manifest;
            the integer DWT itself is lossless — only the fp->int16
-           quantization loses precision, bounded by scale/2)
+           quantization loses precision, bounded by scale/2; the DWT
+           runs through the ``repro.kernels`` backend dispatch, so the
+           save path is compiled on every platform)
 
 Fault-tolerance contract: a crash at ANY point leaves either the previous
 LATEST intact or a fully-written new step (manifest written before LATEST,
@@ -34,8 +36,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import kernels as K
 from repro.core import compression as C
-from repro.core import lifting
 
 PyTree = Any
 
@@ -72,8 +74,8 @@ def _encode(arr: np.ndarray, codec: str, wavelet_levels: int) -> Tuple[bytes, Di
         pad = (-len(flat)) % m
         if pad:
             flat = np.pad(flat, (0, pad))
-        pyr = lifting.dwt53_fwd(jnp.asarray(flat[None]), levels=wavelet_levels)
-        packed = np.asarray(lifting.pack(pyr))[0].astype(np.int16)
+        pyr = K.dwt53_fwd(jnp.asarray(flat[None]), levels=wavelet_levels)
+        packed = np.asarray(K.pack(pyr))[0].astype(np.int16)
         meta = {"scale": scale, "padded_len": int(len(flat)), "levels": wavelet_levels}
         return zlib.compress(packed.tobytes(), level=1), meta
     raise ValueError(codec)
@@ -89,8 +91,8 @@ def _decode(data: bytes, shape, dtype, codec: str, meta: Dict) -> np.ndarray:
 
         packed = np.frombuffer(zlib.decompress(data), dtype=np.int16).astype(np.int32)
         n, levels = meta["padded_len"], meta["levels"]
-        pyr = lifting.unpack(jnp.asarray(packed[None]), n, levels)
-        flat = np.asarray(lifting.dwt53_inv(pyr))[0]
+        pyr = K.unpack(jnp.asarray(packed[None]), n, levels)
+        flat = np.asarray(K.dwt53_inv(pyr))[0]
         count = int(np.prod(shape)) if shape else 1
         vals = flat[:count].astype(np.float32) * meta["scale"]
         return vals.reshape(shape).astype(dtype)

@@ -17,6 +17,12 @@ Two uses in the framework:
 The quantize -> integer-DWT -> dequantize channel is exactly the fixed-
 point processing chain of the paper's hardware modules (8-bit samples,
 shift/add arithmetic); here the "samples" are gradient values.
+
+All transforms route through the ``repro.kernels`` entry point, so the
+kernel backend policy (compiled Pallas on TPU/GPU, jitted XLA reference
+on CPU — see ``kernels/backend.py``) applies to every codec here; the
+optional ``backend=`` threaded through these functions overrides it per
+call (all backends are bit-exact, so this is purely a perf knob).
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import kernels as K
 from repro.core import lifting
 
 INT_SCALE_BITS = 15  # quantize to +-2^15 (int16 range) before the DWT
@@ -81,23 +88,32 @@ def tensor_scale(g: jax.Array) -> jax.Array:
 
 
 def compress_lowband(
-    g: jax.Array, scale: jax.Array, levels: int, mode: str = "paper"
+    g: jax.Array,
+    scale: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    backend: Optional[str] = None,
 ) -> CompressedBand:
     """Quantize + integer DWT, keep only the approximation band."""
     lines, n_orig = _flatten_pad(g, levels)
     q = quantize(lines, scale)
-    pyr = lifting.dwt53_fwd(q, levels=levels, mode=mode)
+    pyr = K.dwt53_fwd(q, levels=levels, mode=mode, backend=backend)
     return CompressedBand(low=pyr.approx, scale=scale, n=lines.size, levels=levels)
 
 
-def decompress_lowband(band: CompressedBand, out_shape, mode: str = "paper") -> jax.Array:
+def decompress_lowband(
+    band: CompressedBand,
+    out_shape,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+) -> jax.Array:
     """Inverse DWT with zeroed detail bands, dequantize, reshape."""
     n_lines, a_len = band.low.shape
     line = band.n // n_lines
     _, d_lens = lifting.band_sizes(line, band.levels)
     details = tuple(jnp.zeros((n_lines, dl), band.low.dtype) for dl in d_lens)
     pyr = lifting.WaveletPyramid(approx=band.low, details=details)
-    flat = lifting.dwt53_inv(pyr, mode=mode).reshape(-1)
+    flat = K.dwt53_inv(pyr, mode=mode, backend=backend).reshape(-1)
     n_out = 1
     for s in out_shape:
         n_out *= s
@@ -159,12 +175,16 @@ def _band_shift(band: jax.Array, limit: int) -> jax.Array:
 
 
 def forward_bands(
-    g: jax.Array, scale: jax.Array, levels: int, mode: str = "paper"
+    g: jax.Array,
+    scale: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    backend: Optional[str] = None,
 ) -> Tuple[jax.Array, Tuple[jax.Array, ...], int]:
     """fp tensor -> int32 DWT bands ((lines, a), details, padded_len)."""
     lines, _ = _flatten_pad(g, levels)
     q = quantize(lines, scale)
-    pyr = lifting.dwt53_fwd(q, levels=levels, mode=mode)
+    pyr = K.dwt53_fwd(q, levels=levels, mode=mode, backend=backend)
     return pyr.approx, tuple(pyr.details), lines.size
 
 
@@ -210,13 +230,14 @@ def compress_bands(
     levels: int,
     mode: str = "paper",
     shifts: Optional[Tuple[jax.Array, Tuple[jax.Array, ...]]] = None,
+    backend: Optional[str] = None,
 ) -> BandQuantized:
     """fp tensor -> integer DWT -> per-band int16/int8 quantization.
 
     ``shifts`` may be supplied (e.g. the pod-global max of each band's
     shift) so all participants quantize identically.
     """
-    approx, details, n = forward_bands(g, scale, levels, mode)
+    approx, details, n = forward_bands(g, scale, levels, mode, backend=backend)
     if shifts is None:
         shifts = band_shifts(approx, details)
     return quantize_bands(approx, details, shifts, scale, n, levels)
@@ -228,6 +249,7 @@ def decompress_bands(
     mode: str = "paper",
     approx_i32: Optional[jax.Array] = None,
     details_i32: Optional[Tuple[jax.Array, ...]] = None,
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """Inverse of compress_bands. ``*_i32`` overrides let callers pass
     locally-accumulated (summed) integer bands (pod sync path)."""
@@ -242,7 +264,7 @@ def decompress_bands(
         jnp.left_shift(d, sh) for d, sh in zip(details, bq.detail_shifts)
     )
     pyr = lifting.WaveletPyramid(approx=approx, details=details)
-    flat = lifting.dwt53_inv(pyr, mode=mode).reshape(-1)
+    flat = K.dwt53_inv(pyr, mode=mode, backend=backend).reshape(-1)
     n_out = 1
     for s in out_shape:
         n_out *= s
@@ -272,13 +294,17 @@ def band_quantized_roundtrip(
 
 
 def forward_bands_nd(
-    g: jax.Array, scale: jax.Array, levels: int, mode: str = "paper"
+    g: jax.Array,
+    scale: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    backend: Optional[str] = None,
 ) -> lifting.WaveletPyramid:
     """Quantize + integer DWT along the LAST axis (sharding-preserving)."""
     q = quantize(g, scale)
     if q.ndim == 0:
         q = q.reshape(1)
-    return lifting.dwt53_fwd(q, levels=levels, mode=mode)
+    return K.dwt53_fwd(q, levels=levels, mode=mode, backend=backend)
 
 
 def quantize_pyramid(
@@ -313,12 +339,15 @@ def decompress_bands_nd(
     scale: jax.Array,
     out_shape,
     mode: str = "paper",
+    backend: Optional[str] = None,
 ) -> jax.Array:
     a_sh, d_shs = shifts
     approx = jnp.left_shift(approx_i32, a_sh)
     details = tuple(jnp.left_shift(d, sh) for d, sh in zip(details_i32, d_shs))
-    flat = lifting.dwt53_inv(
-        lifting.WaveletPyramid(approx=approx, details=details), mode=mode
+    flat = K.dwt53_inv(
+        lifting.WaveletPyramid(approx=approx, details=details),
+        mode=mode,
+        backend=backend,
     )
     return dequantize(flat.reshape(out_shape), scale)
 

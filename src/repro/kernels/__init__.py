@@ -1,3 +1,69 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Single entry point for the integer (5,3) DWT engine.
+
+Production consumers (``core/compression.py``, ``train/grad_compress.py``,
+``ckpt/checkpoint.py``) import transforms from HERE, not from
+``core.lifting`` or the kernel modules directly, so the backend dispatch
+policy (``kernels/backend.py``) applies to every workload at once:
+
+    from repro import kernels as K
+    pyr = K.dwt53_fwd(x, levels=3)          # compiled on every platform
+    y   = K.dwt53_inv(pyr)
+    bands = K.dwt53_fwd_2d(img)             # fused row-column pass
+
+Backends — ``pallas`` (compiled kernels; TPU default), ``xla`` (the
+jnp reference under jit; CPU/GPU default), ``interpret`` (Pallas
+emulator, debug only).  Select per call with ``backend=...``, per scope with
+``use_backend(...)``, per process with ``REPRO_DWT_BACKEND``.  All
+backends are bit-exact vs ``kernels/ref.py`` (== ``core.lifting``).
+
+Layout convention for this package: dwt53.py (raw Pallas kernels),
+fused2d.py (fused 2D kernels), ops.py (dispatching wrappers), ref.py
+(jnp oracle), backend.py (dispatch policy).  See DESIGN.md §3-5.
+"""
+from repro.core.lifting import (  # noqa: F401  structural types + packing
+    Bands2D,
+    WaveletPyramid,
+    band_sizes,
+    max_levels,
+    pack,
+    unpack,
+)
+from repro.kernels.backend import (  # noqa: F401
+    VALID_BACKENDS,
+    default_backend,
+    has_compiled_pallas,
+    platform,
+    resolve,
+    use_backend,
+)
+from repro.kernels.fused2d import (  # noqa: F401
+    dwt53_fwd_2d,
+    dwt53_inv_2d,
+)
+from repro.kernels.ops import (  # noqa: F401
+    dwt53_fwd,
+    dwt53_fwd_1d,
+    dwt53_inv,
+    dwt53_inv_1d,
+)
+
+__all__ = [
+    "Bands2D",
+    "WaveletPyramid",
+    "band_sizes",
+    "max_levels",
+    "pack",
+    "unpack",
+    "VALID_BACKENDS",
+    "default_backend",
+    "has_compiled_pallas",
+    "platform",
+    "resolve",
+    "use_backend",
+    "dwt53_fwd",
+    "dwt53_fwd_1d",
+    "dwt53_inv",
+    "dwt53_inv_1d",
+    "dwt53_fwd_2d",
+    "dwt53_inv_2d",
+]

@@ -1,0 +1,145 @@
+"""Backend dispatch for the DWT kernels: compiled by default.
+
+The seed threaded ``interpret=True`` through every kernel wrapper, so the
+hot path ran the Pallas kernels under the (orders-of-magnitude slower)
+interpreter on every platform.  This module probes the platform once and
+resolves every transform call to one of three execution backends:
+
+  ``pallas``     pl.pallas_call compiled by Mosaic — the default on TPU,
+                 where the blocked VMEM dataflow pays off.  (GPU is
+                 pallas-CAPABLE via Triton but defaults to xla until the
+                 Triton lowering is validated; request it explicitly.)
+  ``xla``        the paper-faithful jnp reference (``kernels/ref.py``)
+                 under ``jax.jit`` — the default on CPU, where Pallas has
+                 no compiled target and XLA fuses the lifting stencils
+                 into tight vector loops.  Still "compiled by default".
+  ``interpret``  pl.pallas_call with ``interpret=True`` — the Pallas
+                 emulator.  Never a default: it exists for debugging the
+                 kernel dataflow and as the automatic degrade when a
+                 caller explicitly requests ``pallas`` on a platform
+                 without a compiled Pallas target (CPU).
+
+Resolution order for ``backend=None`` (every public wrapper's default):
+``use_backend(...)`` context override > ``REPRO_DWT_BACKEND`` env var >
+platform default (tpu/gpu -> pallas, else xla).
+
+All three backends are bit-exact for every shape/dtype/mode — tests sweep
+this — so dispatch is purely a performance decision.  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+from typing import Iterator, Optional, Tuple
+
+import jax
+
+VALID_BACKENDS = ("pallas", "xla", "interpret")
+
+# "auto" in REPRO_DWT_BACKEND means: ignore the env var, use the platform
+# default (handy for un-setting a sticky CI variable per-run).
+_ENV_VAR = "REPRO_DWT_BACKEND"
+
+_override: Optional[str] = None  # set by use_backend()
+
+# platforms with SOME compiled Pallas lowering (Mosaic / Triton): an
+# explicit backend="pallas" request on these runs compiled, not emulated
+_PALLAS_CAPABLE = ("tpu", "gpu", "cuda", "rocm")
+
+# platforms where compiled Pallas is the DEFAULT.  TPU only for now: the
+# kernels are written against the Mosaic lowering; the GPU Triton
+# lowering needs power-of-two block dims, which pick_blocks and the
+# fused-2D per-image blocks do not guarantee, and CI never exercises it.
+# GPU therefore defaults to the jitted XLA reference; opt in to Triton
+# explicitly with backend="pallas" / REPRO_DWT_BACKEND=pallas once
+# validated on the target stack.
+_PALLAS_DEFAULT = ("tpu",)
+
+
+@functools.lru_cache(maxsize=None)
+def platform() -> str:
+    """The default jax platform, probed once per process."""
+    return jax.default_backend()
+
+
+def has_compiled_pallas() -> bool:
+    return platform() in _PALLAS_CAPABLE
+
+
+def default_backend() -> str:
+    """Platform/env default: compiled pallas on TPU, compiled XLA elsewhere."""
+    env = os.environ.get(_ENV_VAR, "").strip().lower()
+    if env and env != "auto":
+        if env not in VALID_BACKENDS:
+            raise ValueError(
+                f"{_ENV_VAR}={env!r}: must be one of {VALID_BACKENDS} or 'auto'"
+            )
+        return env
+    return "pallas" if platform() in _PALLAS_DEFAULT else "xla"
+
+
+def resolve(backend: Optional[str] = None) -> str:
+    """Resolve a per-call ``backend=`` argument to an executable backend.
+
+    ``None`` defers to the context override / env var / platform default.
+    An explicit ``pallas`` request on a platform without a compiled Pallas
+    target degrades to ``interpret`` (same kernels, emulated) so kernel
+    code paths stay testable everywhere.
+    """
+    name = backend or _override or default_backend()
+    if name not in VALID_BACKENDS:
+        raise ValueError(f"backend must be one of {VALID_BACKENDS}, got {name!r}")
+    if name == "pallas" and not has_compiled_pallas():
+        return "interpret"
+    return name
+
+
+@contextlib.contextmanager
+def use_backend(name: str) -> Iterator[None]:
+    """Force a backend for every kernel call in scope (tests/benchmarks).
+
+    Caveat: the backend is resolved at TRACE time.  If a caller's
+    ``jax.jit`` first traces a transform inside this context, the choice
+    is baked into that trace's cache and persists for same-shape calls
+    after the context exits.  Scope overrides around whole workloads (or
+    use distinct jitted callables), not around individual calls inside a
+    long-lived jit.
+    """
+    global _override
+    if name not in VALID_BACKENDS:
+        raise ValueError(f"backend must be one of {VALID_BACKENDS}, got {name!r}")
+    prev, _override = _override, name
+    try:
+        yield
+    finally:
+        _override = prev
+
+
+def interpret_flag(resolved: str) -> bool:
+    """The ``interpret=`` flag for pl.pallas_call under a resolved backend."""
+    return resolved == "interpret"
+
+
+# ---------------------------------------------------------------------------
+# Block-size selection (DESIGN.md §3): VPU-shaped tiles, shrunk to fit.
+# ---------------------------------------------------------------------------
+
+# default tile: 8 sublanes x 256 lanes per polyphase stream — one VPU
+# (8, 128) register pair per int32 stream tile, small enough that the six
+# resident streams of the fused kernels stay well under VMEM.
+DEFAULT_BLOCK_ROWS = 8
+DEFAULT_BLOCK_PAIRS = 256
+
+# fused-2D kernels keep ~6 image-sized buffers resident per grid cell;
+# above this many elements per image the dispatcher uses the tiled/XLA
+# path instead (16MB VMEM / 4B / 6 buffers, with headroom).
+FUSED2D_MAX_ELEMS = 512 * 1024
+
+
+def pick_blocks(n_rows: int, n_pairs: int) -> Tuple[int, int]:
+    """(block_rows, block_pairs) for a (rows, pairs) polyphase stream."""
+    return (
+        min(DEFAULT_BLOCK_ROWS, n_rows),
+        min(DEFAULT_BLOCK_PAIRS, n_pairs),
+    )

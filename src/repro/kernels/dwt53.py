@@ -29,9 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# default tile: 8 sublanes x 256 lanes (int32) per polyphase stream
-DEFAULT_BLOCK_ROWS = 8
-DEFAULT_BLOCK_PAIRS = 256
+from repro.kernels.backend import DEFAULT_BLOCK_PAIRS, DEFAULT_BLOCK_ROWS
 
 
 def _fwd_kernel(xe_ref, xo_ref, xel_ref, xol_ref, xer_ref, s_ref, d_ref, *, offset: int):
@@ -95,7 +93,7 @@ def dwt53_fwd_tiles(
     block_rows: int = DEFAULT_BLOCK_ROWS,
     block_pairs: int = DEFAULT_BLOCK_PAIRS,
     offset: int = 0,
-    interpret: bool = True,
+    interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Forward lifting over pre-split polyphase streams (padded shapes).
 
@@ -133,7 +131,7 @@ def dwt53_inv_tiles(
     block_rows: int = DEFAULT_BLOCK_ROWS,
     block_pairs: int = DEFAULT_BLOCK_PAIRS,
     offset: int = 0,
-    interpret: bool = True,
+    interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Inverse lifting over band tiles (padded shapes).
 

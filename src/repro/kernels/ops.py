@@ -1,4 +1,5 @@
-"""Public jit'd wrappers around the Pallas (5,3) lifting kernels.
+"""Public wrappers around the Pallas (5,3) lifting kernels, with
+compiled-by-default backend dispatch (see ``kernels/backend.py``).
 
 Handles everything the kernel keeps out of VMEM: polyphase Split/Merge
 (the paper's lazy wavelet), arbitrary lengths (odd lengths, non powers of
@@ -8,20 +9,33 @@ promotion (int8 inputs are computed in int16: the transform grows dynamic
 range by <= 2 bits per level, the paper's 8-bit-in / 9-bit-register
 design), and multi-level recursion.
 
-Bit-exactness contract: for every shape/dtype/mode these wrappers return
-exactly what `kernels.ref` (== `core.lifting`) returns. Tests sweep this.
+Every public function takes ``backend=None`` and resolves it through
+``backend.resolve``: ``pallas`` (compiled kernels, TPU default),
+``xla`` (the jnp reference under jit, CPU/GPU default), or ``interpret``
+(Pallas emulator, debugging only).  The multi-level entry points
+(``dwt53_fwd`` / ``dwt53_inv``) are FUSED: all levels trace into one
+compiled computation, the batch flattening / dtype promotion / row
+padding happen once, and the polyphase streams stay device-resident
+between levels instead of round-tripping through a per-level dispatch
+(DESIGN.md §4).
+
+Bit-exactness contract: for every shape/dtype/mode and every backend
+these wrappers return exactly what `kernels.ref` (== `core.lifting`)
+returns. Tests sweep this.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lifting import WaveletPyramid, _check_mode
+from repro.kernels import backend as _backend
 from repro.kernels import dwt53 as _k
+from repro.kernels import ref as _ref
 
 # below this many pairs the kernel grid degenerates; use the jnp reference
 _MIN_KERNEL_PAIRS = 8
@@ -35,51 +49,31 @@ def _compute_dtype(dtype) -> jnp.dtype:
     raise TypeError(f"integer DWT requires an int dtype, got {dtype}")
 
 
-def _pick_blocks(n_rows: int, n_pairs: int) -> Tuple[int, int]:
-    block_rows = min(_k.DEFAULT_BLOCK_ROWS, n_rows)
-    block_pairs = min(_k.DEFAULT_BLOCK_PAIRS, n_pairs)
-    return block_rows, block_pairs
-
-
 def _ceil_to(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
-def dwt53_fwd_1d(
-    x: jax.Array, mode: str = "paper", interpret: bool = True
+# ---------------------------------------------------------------------------
+# Single-level kernel cores over 2D (rows, n) streams in the compute dtype.
+# These are the bodies the fused multi-level path keeps resident.
+# ---------------------------------------------------------------------------
+
+
+def _fwd_level(
+    xf: jax.Array, mode: str, interpret: bool
 ) -> Tuple[jax.Array, jax.Array]:
-    """Kernel-backed forward transform along the last axis. Any length >= 2.
-
-    Returns (s, d) with len(s) = ceil(N/2), len(d) = floor(N/2), matching
-    ``core.lifting.dwt53_fwd_1d`` bit-exactly.
-    """
-    _check_mode(mode)
+    """One forward level over a 2D (rows, n) array; returns (s, d)."""
     offset = 2 if mode == "jpeg2000" else 0
-    in_dtype = x.dtype
-    cdt = _compute_dtype(in_dtype)
-    n = x.shape[-1]
-    if n < 2:
-        raise ValueError("need at least 2 samples")
-    lead = x.shape[:-1]
-    xf = x.reshape((-1, n)).astype(cdt)
-    rows = xf.shape[0]
-
+    rows, n = xf.shape
     n_o = n // 2  # number of (s, d) pairs the kernel computes
     n_e = n - n_o
     if n_o < _MIN_KERNEL_PAIRS:
-        from repro.kernels import ref
-
-        s, d = ref.dwt53_fwd_1d(xf, mode=mode)
-        return (
-            s.reshape(lead + (n_e,)).astype(cdt),
-            d.reshape(lead + (n_o,)).astype(cdt),
-        )
+        return _ref.dwt53_fwd_1d(xf, mode=mode)
 
     xe = xf[:, 0::2][:, :n_o]  # pair-aligned evens
     xo = xf[:, 1::2]
 
-    block_rows, block_pairs = _pick_blocks(rows, n_o)
+    block_rows, block_pairs = _backend.pick_blocks(rows, n_o)
     rows_pad = _ceil_to(rows, block_rows)
     pairs_pad = _ceil_to(n_o, block_pairs)
     # edge replication implements the right symmetric extension (DESIGN §2)
@@ -130,34 +124,22 @@ def dwt53_fwd_1d(
             t = t + offset
         s_last = xf[:, n - 1 :] + jnp.right_shift(t, 2)
         s = jnp.concatenate([s, s_last], axis=1)
-    return s.reshape(lead + (n_e,)), d.reshape(lead + (n_o,))
+    return s, d
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
-def dwt53_inv_1d(
-    s: jax.Array, d: jax.Array, mode: str = "paper", interpret: bool = True
+def _inv_level(
+    sf: jax.Array, df: jax.Array, mode: str, interpret: bool
 ) -> jax.Array:
-    """Kernel-backed inverse transform; bit-exact vs core.lifting."""
-    _check_mode(mode)
+    """One inverse level over 2D (rows, n_e)/(rows, n_o) bands."""
     offset = 2 if mode == "jpeg2000" else 0
-    cdt = _compute_dtype(s.dtype)
-    n_e, n_o = s.shape[-1], d.shape[-1]
-    if n_e - n_o not in (0, 1):
-        raise ValueError("band length mismatch")
+    rows, n_e = sf.shape
+    n_o = df.shape[-1]
     n = n_e + n_o
-    lead = s.shape[:-1]
-    sf = s.reshape((-1, n_e)).astype(cdt)
-    df = d.reshape((-1, n_o)).astype(cdt)
-    rows = sf.shape[0]
-
     if n_o < _MIN_KERNEL_PAIRS:
-        from repro.kernels import ref
-
-        x = ref.dwt53_inv_1d(sf, df, mode=mode)
-        return x.reshape(lead + (n,))
+        return _ref.dwt53_inv_1d(sf, df, mode=mode)
 
     s_k = sf[:, :n_o]
-    block_rows, block_pairs = _pick_blocks(rows, n_o)
+    block_rows, block_pairs = _backend.pick_blocks(rows, n_o)
     rows_pad = _ceil_to(rows, block_rows)
     pairs_pad = _ceil_to(n_o, block_pairs)
     s_p = jnp.pad(s_k, ((0, rows_pad - rows), (0, pairs_pad - n_o)), mode="edge")
@@ -204,35 +186,190 @@ def dwt53_inv_1d(
     )
     xe = xe_p[:rows, :n_o]
     xo = xo_p[:rows, :n_o]
-    out = jnp.zeros((rows, n), dtype=cdt)
-    out = out.at[:, 0 : 2 * n_o : 2].set(xe)
-    out = out.at[:, 1 : 2 * n_o : 2].set(xo)
+    # interleave via stack+reshape: pure layout ops that the SPMD
+    # partitioner keeps sharded (a scatter .at[0::2].set on a sharded axis
+    # all-gathers the whole tensor — core.lifting's own sharding note).
+    out = jnp.stack([xe, xo], axis=-1).reshape(rows, 2 * n_o)
     if n_e > n_o:
         # final even sample for odd N: x[N-1] = s[n_e-1] - ((d[-1]+d[-1])>>2)
         t = df[:, -1:] + df[:, -1:]
         if offset:
             t = t + offset
-        out = out.at[:, n - 1 :].set(sf[:, n_e - 1 :] - jnp.right_shift(t, 2))
-    return out.reshape(lead + (n,))
+        out = jnp.concatenate(
+            [out, sf[:, n_e - 1 :] - jnp.right_shift(t, 2)], axis=1
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry bodies (static backend decisions resolved by the wrappers).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def _fwd_1d_kernel(x, mode, interpret):
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    cdt = _compute_dtype(x.dtype)
+    xf = x.reshape((-1, n)).astype(cdt)
+    s, d = _fwd_level(xf, mode, interpret)
+    return (
+        s.reshape(lead + (s.shape[-1],)),
+        d.reshape(lead + (d.shape[-1],)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _fwd_1d_xla(x, mode):
+    cdt = _compute_dtype(x.dtype)
+    return _ref.dwt53_fwd_1d(x.astype(cdt), mode=mode)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def _inv_1d_kernel(s, d, mode, interpret):
+    n_e, n_o = s.shape[-1], d.shape[-1]
+    lead = s.shape[:-1]
+    cdt = _compute_dtype(s.dtype)
+    sf = s.reshape((-1, n_e)).astype(cdt)
+    df = d.reshape((-1, n_o)).astype(cdt)
+    x = _inv_level(sf, df, mode, interpret)
+    return x.reshape(lead + (n_e + n_o,))
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _inv_1d_xla(s, d, mode):
+    cdt = _compute_dtype(s.dtype)
+    return _ref.dwt53_inv_1d(s.astype(cdt), d.astype(cdt), mode=mode)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "mode", "interpret"))
+def _fwd_multi_kernel(x, levels, mode, interpret):
+    """Fused multi-level forward: one compiled computation for all levels.
+
+    Flatten/promote once, keep the (rows, n) streams resident, recurse on
+    the approximation in-graph — no per-level re-dispatch.
+    """
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    cdt = _compute_dtype(x.dtype)
+    s = x.reshape((-1, n)).astype(cdt)
+    details: List[jax.Array] = []
+    for _ in range(levels):
+        s, d = _fwd_level(s, mode, interpret)
+        details.append(d)
+    return (
+        s.reshape(lead + (s.shape[-1],)),
+        tuple(d.reshape(lead + (d.shape[-1],)) for d in reversed(details)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "mode"))
+def _fwd_multi_xla(x, levels, mode):
+    cdt = _compute_dtype(x.dtype)
+    pyr = _ref.dwt53_fwd(x.astype(cdt), levels=levels, mode=mode)
+    return pyr.approx, pyr.details
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def _inv_multi_kernel(approx, details, mode, interpret):
+    """Fused multi-level inverse: all levels in one compiled computation."""
+    lead = approx.shape[:-1]
+    cdt = _compute_dtype(approx.dtype)
+    s = approx.reshape((-1, approx.shape[-1])).astype(cdt)
+    for d in details:  # coarsest first
+        df = d.reshape((-1, d.shape[-1])).astype(cdt)
+        s = _inv_level(s, df, mode, interpret)
+    return s.reshape(lead + (s.shape[-1],))
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _inv_multi_xla(approx, details, mode):
+    cdt = _compute_dtype(approx.dtype)
+    pyr = WaveletPyramid(
+        approx=approx.astype(cdt), details=tuple(d.astype(cdt) for d in details)
+    )
+    return _ref.dwt53_inv(pyr, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Public API: backend-dispatched, bit-exact vs kernels/ref on every path.
+# ---------------------------------------------------------------------------
+
+
+def dwt53_fwd_1d(
+    x: jax.Array, mode: str = "paper", backend: Optional[str] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Backend-dispatched forward transform along the last axis. N >= 2.
+
+    Returns (s, d) with len(s) = ceil(N/2), len(d) = floor(N/2), matching
+    ``core.lifting.dwt53_fwd_1d`` bit-exactly.
+    """
+    _check_mode(mode)
+    if x.shape[-1] < 2:
+        raise ValueError("need at least 2 samples")
+    b = _backend.resolve(backend)
+    if b == "xla":
+        return _fwd_1d_xla(x, mode=mode)
+    return _fwd_1d_kernel(x, mode=mode, interpret=_backend.interpret_flag(b))
+
+
+def dwt53_inv_1d(
+    s: jax.Array, d: jax.Array, mode: str = "paper", backend: Optional[str] = None
+) -> jax.Array:
+    """Backend-dispatched inverse transform; bit-exact vs core.lifting."""
+    _check_mode(mode)
+    if s.shape[-1] - d.shape[-1] not in (0, 1):
+        raise ValueError("band length mismatch")
+    b = _backend.resolve(backend)
+    if b == "xla":
+        return _inv_1d_xla(s, d, mode=mode)
+    return _inv_1d_kernel(s, d, mode=mode, interpret=_backend.interpret_flag(b))
 
 
 def dwt53_fwd(
-    x: jax.Array, levels: int = 1, mode: str = "paper", interpret: bool = True
+    x: jax.Array,
+    levels: int = 1,
+    mode: str = "paper",
+    backend: Optional[str] = None,
 ) -> WaveletPyramid:
-    """Multi-level kernel-backed forward transform."""
+    """Fused multi-level forward transform (one compiled dispatch)."""
+    _check_mode(mode)
     if levels < 1:
         raise ValueError("levels must be >= 1")
-    s = x
-    details = []
+    n = x.shape[-1]
     for _ in range(levels):
-        s, d = dwt53_fwd_1d(s, mode=mode, interpret=interpret)
-        details.append(d)
-    return WaveletPyramid(approx=s, details=tuple(reversed(details)))
+        if n < 2:
+            raise ValueError(f"signal too short for {levels} levels (got {x.shape[-1]})")
+        n = n - n // 2
+    b = _backend.resolve(backend)
+    if b == "xla":
+        approx, details = _fwd_multi_xla(x, levels=levels, mode=mode)
+    else:
+        approx, details = _fwd_multi_kernel(
+            x, levels=levels, mode=mode, interpret=_backend.interpret_flag(b)
+        )
+    return WaveletPyramid(approx=approx, details=details)
 
 
-def dwt53_inv(pyr: WaveletPyramid, mode: str = "paper", interpret: bool = True) -> jax.Array:
-    """Multi-level kernel-backed inverse transform."""
-    s = pyr.approx
-    for d in pyr.details:
-        s = dwt53_inv_1d(s, d, mode=mode, interpret=interpret)
-    return s
+def dwt53_inv(
+    pyr: WaveletPyramid, mode: str = "paper", backend: Optional[str] = None
+) -> jax.Array:
+    """Fused multi-level inverse transform (one compiled dispatch)."""
+    _check_mode(mode)
+    # validate band lengths per level up front: every backend must reject a
+    # malformed pyramid identically (the xla path raises inside ref, the
+    # kernel path would otherwise silently reconstruct garbage)
+    n = pyr.approx.shape[-1]
+    for d in pyr.details:  # coarsest first
+        if n - d.shape[-1] not in (0, 1):
+            raise ValueError(
+                f"band length mismatch: s={n}, d={d.shape[-1]}"
+            )
+        n = n + d.shape[-1]
+    b = _backend.resolve(backend)
+    if b == "xla":
+        return _inv_multi_xla(pyr.approx, tuple(pyr.details), mode=mode)
+    return _inv_multi_kernel(
+        pyr.approx, tuple(pyr.details), mode=mode,
+        interpret=_backend.interpret_flag(b),
+    )

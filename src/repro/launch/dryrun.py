@@ -237,12 +237,21 @@ def probe_cfg(cfg: ArchConfig, cell: ShapeCell, n_layers: int) -> ArchConfig:
     )
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() across jax versions (older jax returns a
+    one-element list of dicts, newer jax the dict itself)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _cost_of(cfg: ArchConfig, cell: ShapeCell, mesh, multi_pod: bool, chips: int):
     jitted, args, _ = build_cell(cfg, cell, mesh, multi_pod)
     with mesh:
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = RL.parse_collectives(compiled.as_text(), chips)
     return (
         float(cost.get("flops", 0.0)),
@@ -332,9 +341,9 @@ def run_cell(
     if debug_mesh is not None:
         axes = ("pod", "data", "model") if len(debug_mesh) == 3 else ("data", "model")
         multi_pod = len(debug_mesh) == 3
-        mesh = jax.make_mesh(
-            debug_mesh, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(debug_mesh)
-        )
+        from repro.launch.mesh import make_mesh_compat
+
+        mesh = make_mesh_compat(debug_mesh, axes)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
@@ -347,7 +356,7 @@ def run_cell(
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         hlo = compiled.as_text()
         coll = RL.parse_collectives(hlo, chips)
         model_flops = RL.model_flops_for(
@@ -458,6 +467,8 @@ def main(argv=None) -> int:
     )
     ap.add_argument("--no-probe", action="store_true",
                     help="skip the unrolled cost probes (faster; raw costs only)")
+    ap.add_argument("--no-save", action="store_true",
+                    help="don't write artifacts/dryrun JSON (smoke/CI runs)")
     args = ap.parse_args(argv)
     debug_mesh = (
         tuple(int(x) for x in args.debug_mesh.split(",")) if args.debug_mesh else None
@@ -479,6 +490,7 @@ def main(argv=None) -> int:
         r = run_cell(
             arch, cell, args.multipod, debug_mesh=debug_mesh,
             probe=not args.no_probe and not args.multipod,
+            save=not args.no_save,
         )
         if r["status"] == "FAIL":
             failures += 1

@@ -12,15 +12,24 @@ import numpy as np
 from jax.sharding import Mesh
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh_compat(shape, axes) -> Mesh:
+    """jax.make_mesh across jax versions.
+
+    ``axis_types`` (jax.sharding.AxisType) only exists on newer jax; older
+    releases (<= 0.4.x) default every axis to Auto, which is exactly what
+    we want — so pass it only when available.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh_compat(shape, axes)
 
 
 def make_elastic_mesh(
@@ -37,9 +46,9 @@ def make_elastic_mesh(
     if n % model_parallelism != 0:
         model_parallelism = 1
     data = n // model_parallelism
-    return jax.make_mesh((data, model_parallelism), ("data", "model"), axis_types=_auto(2))
+    return make_mesh_compat((data, model_parallelism), ("data", "model"))
 
 
 def smoke_mesh() -> Mesh:
     """1x1 mesh for CPU tests (same axis names as production)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh_compat((1, 1), ("data", "model"))

@@ -19,11 +19,15 @@ feedback cannot recover the detail components; documented negative result.
 The exchange itself is a ring of ``lax.ppermute`` steps with local int32
 accumulation, so the wire carries exactly the quantized payload (a psum
 of int8 would have to widen on the wire).
+
+The DWT itself routes through the ``repro.kernels`` entry point
+(compiled-by-default backend dispatch); ``WaveletSyncConfig.backend``
+overrides the platform policy per sync config when needed.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +44,10 @@ class WaveletSyncConfig:
     codec: str = "bands"  # bands | lowband | none
     min_size: int = 4096  # tensors smaller than this sync uncompressed
     n_pods: int = 2  # static ring size
+    # kernel backend for the DWT (None = repro.kernels dispatch policy:
+    # compiled pallas on TPU, jitted XLA reference elsewhere).  Resolved
+    # at trace time of the train step, not per call.
+    backend: Optional[str] = None
 
 
 def init_error_feedback(params: PyTree) -> PyTree:
@@ -77,19 +85,29 @@ def pod_sync_tree(
         # shared quantization scale + band shifts (scalar collectives)
         scale = jax.lax.pmax(C.tensor_scale(g32), axis_name)
         if cfg.codec == "lowband":
-            approx, details, n = C.forward_bands(g32, scale, cfg.levels, cfg.mode)
+            approx, details, n = C.forward_bands(
+                g32, scale, cfg.levels, cfg.mode, backend=cfg.backend
+            )
             low_sum = jax.lax.psum(approx, axis_name)
             band = C.CompressedBand(low_sum, scale, n, cfg.levels)
-            g_sync = C.decompress_lowband(band, g.shape, cfg.mode) / n_pods
+            g_sync = (
+                C.decompress_lowband(band, g.shape, cfg.mode, backend=cfg.backend)
+                / n_pods
+            )
             own = C.decompress_lowband(
-                C.CompressedBand(approx, scale, n, cfg.levels), g.shape, cfg.mode
+                C.CompressedBand(approx, scale, n, cfg.levels),
+                g.shape,
+                cfg.mode,
+                backend=cfg.backend,
             )
             return g_sync.astype(g.dtype), g32 - own
         # --- band-quantized codec, sharding-aligned (last-axis) ------------
         # transforming along the tensor's own last axis keeps every band
         # sharded exactly like the gradient, so the ring exchange ships
         # only the local shard (a flatten-based codec all-gathers: §Perf)
-        pyr = C.forward_bands_nd(g32, scale, cfg.levels, cfg.mode)
+        pyr = C.forward_bands_nd(
+            g32, scale, cfg.levels, cfg.mode, backend=cfg.backend
+        )
         shifts = C.pyramid_shifts(pyr)
         a_sh = jax.lax.pmax(shifts[0], axis_name)
         d_shs = tuple(jax.lax.pmax(s, axis_name) for s in shifts[1])
@@ -99,7 +117,10 @@ def pod_sync_tree(
         sum_d = tuple(_ring_sum(d, axis_name, n_pods) for d in details_q)
         shape_nd = g32.shape if g32.ndim > 0 else (1,)
         g_sync = (
-            C.decompress_bands_nd(sum_a, sum_d, shifts, scale, shape_nd, cfg.mode)
+            C.decompress_bands_nd(
+                sum_a, sum_d, shifts, scale, shape_nd, cfg.mode,
+                backend=cfg.backend,
+            )
             / n_pods
         ).reshape(g.shape)
         own = C.decompress_bands_nd(
@@ -109,6 +130,7 @@ def pod_sync_tree(
             scale,
             shape_nd,
             cfg.mode,
+            backend=cfg.backend,
         ).reshape(g.shape)
         return g_sync.astype(g.dtype), g32 - own
 

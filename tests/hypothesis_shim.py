@@ -1,0 +1,175 @@
+"""Thin fallback shim for ``hypothesis`` (see conftest.py).
+
+Containers that lack hypothesis (the kernel CI image bakes in only the
+jax/pallas toolchain) still need tier-1 to collect and run.  This module
+implements the tiny subset the tests use — ``given``, ``settings``, and
+``strategies.{integers,sampled_from,lists,booleans}`` — as a deterministic
+seeded sampler: each ``@given`` test runs ``max_examples`` times with
+examples drawn from a fixed-seed RNG, so runs are reproducible (no
+shrinking, no example database).
+
+When the real hypothesis is installed it is always preferred; this file is
+never imported in that case.  Pin the real package via requirements-dev.txt
+for local development.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+from typing import Any, Callable, List, Sequence
+
+import numpy as np
+
+__version__ = "0.0.0+repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 25
+_SEED = 0xD517  # arbitrary fixed seed: deterministic example streams
+
+
+class SearchStrategy:
+    """Base strategy: a deterministic sampler over a value space."""
+
+    def sample(self, rng: np.random.Generator) -> Any:
+        raise NotImplementedError
+
+    # a few boundary values tried before random sampling (hypothesis-like)
+    def edges(self) -> List[Any]:
+        return []
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def sample(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+    def edges(self):
+        vals = {self.lo, self.hi}
+        if self.lo <= 0 <= self.hi:
+            vals.add(0)
+        return sorted(vals)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+
+    def sample(self, rng):
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+    def edges(self):
+        return list(self.elements[:1])
+
+
+class _Booleans(SearchStrategy):
+    def sample(self, rng):
+        return bool(rng.integers(2))
+
+    def edges(self):
+        return [False, True]
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size: int = 0, max_size: int = 64):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size) if max_size is not None else self.min_size + 64
+
+    def sample(self, rng):
+        size = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.sample(rng) for _ in range(size)]
+
+    def edges(self):
+        rng = np.random.default_rng(_SEED)
+        return [[self.elements.sample(rng) for _ in range(self.min_size)]]
+
+
+class strategies:  # noqa: N801 - mimics the hypothesis.strategies module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return _Booleans()
+
+    @staticmethod
+    def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 64) -> SearchStrategy:
+        return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+def settings(**kwargs) -> Callable:
+    """Decorator recording options (only max_examples is honoured)."""
+
+    def deco(fn):
+        fn._shim_settings = dict(kwargs)
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy) -> Callable:
+    """Run the test over a deterministic stream of sampled examples."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            opts = getattr(wrapper, "_shim_settings", {})
+            max_examples = int(opts.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(_SEED)
+            strategy_items = list(kw_strategies.items())
+
+            # boundary pass: first examples exercise each strategy's edges
+            edge_rows: List[tuple] = []
+            if not arg_strategies and strategy_items:
+                per_key = [s.edges() or [s.sample(rng)] for _, s in strategy_items]
+                for combo in itertools.islice(itertools.product(*per_key), 4):
+                    edge_rows.append(combo)
+
+            for i in range(max_examples):
+                if not arg_strategies and i < len(edge_rows):
+                    drawn = dict(zip((k for k, _ in strategy_items), edge_rows[i]))
+                    pos = ()
+                else:
+                    pos = tuple(s.sample(rng) for s in arg_strategies)
+                    drawn = {k: s.sample(rng) for k, s in strategy_items}
+                try:
+                    fn(*call_args, *pos, **call_kwargs, **drawn)
+                except Exception as e:  # noqa: BLE001 - re-raise with the example
+                    raise AssertionError(
+                        f"shim-hypothesis falsifying example (run {i}): "
+                        f"args={pos} kwargs={drawn}"
+                    ) from e
+
+        # hide the strategy-filled parameters from pytest (it would treat
+        # any leftover named parameter as a fixture request)
+        orig_params = inspect.signature(fn).parameters
+        n_pos = len(arg_strategies)
+        keep = [
+            p
+            for i, (name, p) in enumerate(orig_params.items())
+            if i >= n_pos and name not in kw_strategies
+        ]
+        wrapper.__signature__ = inspect.Signature(keep)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:  # placeholder enum-alike, accepted and ignored
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise AssertionError("shim-hypothesis: assume() failed (not supported)")
+    return True

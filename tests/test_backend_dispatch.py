@@ -1,0 +1,111 @@
+"""Backend dispatch tests: resolution policy, overrides, entry point."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels as K
+from repro.kernels import backend as B
+
+
+def test_platform_probe_is_cached():
+    assert B.platform() == B.platform()
+    assert B.platform() in ("cpu", "tpu", "gpu", "cuda", "rocm", "METAL")
+
+
+def test_default_backend_is_compiled():
+    """The default is never the interpreter, on any platform."""
+    assert B.default_backend() in ("pallas", "xla")
+    if not B.has_compiled_pallas():
+        assert B.default_backend() == "xla"
+
+
+def test_resolve_explicit_pallas_degrades_off_accelerator():
+    r = B.resolve("pallas")
+    if B.has_compiled_pallas():
+        assert r == "pallas"
+    else:
+        assert r == "interpret"  # same kernels, emulated
+
+
+def test_resolve_rejects_unknown():
+    with pytest.raises(ValueError):
+        B.resolve("tpu")
+    with pytest.raises(ValueError):
+        with B.use_backend("fast"):
+            pass
+
+
+def test_use_backend_scopes_override():
+    with B.use_backend("interpret"):
+        assert B.resolve(None) == "interpret"
+        # explicit per-call argument still wins over the context
+        assert B.resolve("xla") == "xla"
+    assert B.resolve(None) == B.resolve()  # override cleared
+
+
+def test_env_var_override(monkeypatch):
+    monkeypatch.setenv("REPRO_DWT_BACKEND", "interpret")
+    assert B.default_backend() == "interpret"
+    monkeypatch.setenv("REPRO_DWT_BACKEND", "auto")
+    assert B.default_backend() in ("pallas", "xla")
+    monkeypatch.setenv("REPRO_DWT_BACKEND", "mosaic")
+    with pytest.raises(ValueError):
+        B.default_backend()
+
+
+def test_entry_point_matches_oracle_under_every_backend():
+    """repro.kernels as the single entry: 1D, multi-level, 2D."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(-2000, 2000, size=(3, 257)), jnp.int32)
+    img = jnp.asarray(rng.integers(-500, 500, size=(33, 48)), jnp.int32)
+    from repro.kernels import ref
+
+    want_1d = ref.dwt53_fwd_1d(x)
+    want_pyr = ref.dwt53_fwd(x, levels=3)
+    want_2d = ref.dwt53_fwd_2d(img)
+    for name in ("xla", "interpret"):
+        with B.use_backend(name):
+            s, d = K.dwt53_fwd_1d(x)
+            np.testing.assert_array_equal(np.asarray(s), np.asarray(want_1d[0]))
+            np.testing.assert_array_equal(np.asarray(d), np.asarray(want_1d[1]))
+            pyr = K.dwt53_fwd(x, levels=3)
+            np.testing.assert_array_equal(
+                np.asarray(pyr.approx), np.asarray(want_pyr.approx)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(K.dwt53_inv(pyr)), np.asarray(x)
+            )
+            bands = K.dwt53_fwd_2d(img)
+            np.testing.assert_array_equal(
+                np.asarray(bands.ll), np.asarray(want_2d.ll)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(K.dwt53_inv_2d(bands)), np.asarray(img)
+            )
+
+
+def test_consumers_route_through_entry_point():
+    """compression/ckpt codecs respect the backend context (smoke)."""
+    from repro.core import compression as C
+
+    rng = np.random.default_rng(9)
+    g = jnp.asarray(rng.normal(size=(64, 129)), jnp.float32)
+    with B.use_backend("interpret"):
+        g_hat, resid = C.band_quantized_roundtrip(g, levels=2)
+    g_hat2, resid2 = C.band_quantized_roundtrip(g, levels=2)
+    # bit-exact across backends: same reconstruction either way
+    np.testing.assert_array_equal(np.asarray(g_hat), np.asarray(g_hat2))
+
+
+def test_malformed_pyramid_rejected_on_every_backend():
+    """dwt53_inv validates band lengths identically across backends."""
+    x = jnp.arange(65, dtype=jnp.int32)[None]
+    pyr = K.dwt53_fwd(x, levels=1)
+    bad = K.WaveletPyramid(
+        approx=jnp.pad(pyr.approx, ((0, 0), (0, 1))), details=pyr.details
+    )  # s len = d len + 2
+    for name in ("xla", "interpret"):
+        with pytest.raises(ValueError, match="band length mismatch"):
+            K.dwt53_inv(bad, backend=name)

@@ -27,6 +27,12 @@ def _run(body: str) -> str:
     return proc.stdout
 
 
+@pytest.mark.skipif(
+    not hasattr(__import__("jax"), "shard_map"),
+    reason="partial-manual shard_map (axis_names=) needs jax>=0.5; the "
+    "0.4.x experimental fallback hits an XLA partitioner check "
+    "(IsManualSubgroup) on the full train step",
+)
 def test_wavelet_multipod_step_matches_baseline():
     out = _run(
         """
@@ -40,8 +46,8 @@ def test_wavelet_multipod_step_matches_baseline():
         from repro.data.pipeline import DataConfig, SyntheticLM
 
         cfg = reduced(get_config("stablelm-1.6b"))
-        mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2,2,2), ("pod","data","model"))
         state = init_train_state(cfg, 0)
         opt_cfg = optim.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
         sync = WaveletSyncConfig(levels=2, codec="bands", n_pods=2, min_size=256)
@@ -80,8 +86,8 @@ def test_pjit_train_step_sharded_mesh():
         from repro.train.train_step import make_train_step
 
         cfg = reduced(get_config("granite-3-8b"))
-        mesh = jax.make_mesh((2,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2,2), ("data","model"))
         rules = SH.rules_for(mesh, multi_pod=False, fsdp=False, n_heads=cfg.n_heads,
                              n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
                              d_model=cfg.d_model, d_ff=cfg.d_ff, vocab=cfg.vocab_size,
@@ -110,7 +116,7 @@ def test_dryrun_cell_on_debug_mesh():
     """One dry-run cell end-to-end in a subprocess (its own 512-dev world)."""
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "musicgen-medium",
-         "--cell", "decode_32k", "--debug-mesh", "2,2,2"],
+         "--cell", "decode_32k", "--debug-mesh", "2,2,2", "--no-save"],
         capture_output=True, text=True, timeout=540,
         env={**os.environ, "PYTHONPATH": str(ROOT / "src")}, cwd=ROOT,
     )

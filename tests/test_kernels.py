@@ -1,4 +1,10 @@
-"""Pallas kernel tests: shape/dtype sweep, bit-exact vs the jnp oracle."""
+"""Pallas kernel tests: shape/dtype sweep, bit-exact vs the jnp oracle.
+
+The kernel-path sweeps pin ``backend="interpret"`` so the Pallas dataflow
+itself is exercised on every platform (CPU default dispatch is the XLA
+reference, which would compare the oracle against itself); dispatch-level
+behaviour is covered in test_backend_dispatch.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,7 +27,7 @@ DTYPES = [
 @pytest.mark.parametrize("mode", ["paper", "jpeg2000"])
 def test_fwd_matches_ref(n, mode):
     x = jnp.asarray(RNG.integers(-1000, 1000, size=(3, n)), jnp.int32)
-    s, d = ops.dwt53_fwd_1d(x, mode=mode)
+    s, d = ops.dwt53_fwd_1d(x, mode=mode, backend="interpret")
     s_r, d_r = ref.dwt53_fwd_1d(x, mode=mode)
     np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
     np.testing.assert_array_equal(np.asarray(d), np.asarray(d_r))
@@ -31,8 +37,8 @@ def test_fwd_matches_ref(n, mode):
 @pytest.mark.parametrize("mode", ["paper", "jpeg2000"])
 def test_inv_roundtrip(n, mode):
     x = jnp.asarray(RNG.integers(-1000, 1000, size=(2, n)), jnp.int32)
-    s, d = ops.dwt53_fwd_1d(x, mode=mode)
-    xr = ops.dwt53_inv_1d(s, d, mode=mode)
+    s, d = ops.dwt53_fwd_1d(x, mode=mode, backend="interpret")
+    xr = ops.dwt53_inv_1d(s, d, mode=mode, backend="interpret")
     np.testing.assert_array_equal(np.asarray(xr), np.asarray(x))
 
 
@@ -40,33 +46,38 @@ def test_inv_roundtrip(n, mode):
 def test_dtype_sweep(dtype, lo, hi):
     for n in (64, 257, 1024):
         x = jnp.asarray(RNG.integers(lo, hi, size=(4, n)), dtype=dtype)
-        s, d = ops.dwt53_fwd_1d(x)
+        s, d = ops.dwt53_fwd_1d(x, backend="interpret")
         s_r, d_r = ref.dwt53_fwd_1d(x.astype(s.dtype))
         np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
         np.testing.assert_array_equal(np.asarray(d), np.asarray(d_r))
-        xr = ops.dwt53_inv_1d(s, d)
+        xr = ops.dwt53_inv_1d(s, d, backend="interpret")
         np.testing.assert_array_equal(np.asarray(xr), np.asarray(x, dtype=xr.dtype))
 
 
-def test_int8_promotes_to_int16():
+@pytest.mark.parametrize("backend", [None, "interpret", "xla"])
+def test_int8_promotes_to_int16(backend):
     x = jnp.asarray(RNG.integers(-128, 127, size=(2, 64)), jnp.int8)
-    s, d = ops.dwt53_fwd_1d(x)
+    s, d = ops.dwt53_fwd_1d(x, backend=backend)
     assert s.dtype == jnp.int16 and d.dtype == jnp.int16
 
 
-def test_multilevel_matches_ref():
+@pytest.mark.parametrize("backend", [None, "interpret", "xla"])
+def test_multilevel_matches_ref(backend):
+    """The fused multi-level path matches the per-level oracle exactly."""
     x = jnp.asarray(RNG.integers(0, 255, size=(4, 1000)), jnp.int32)
-    pk = ops.dwt53_fwd(x, levels=5)
+    pk = ops.dwt53_fwd(x, levels=5, backend=backend)
     pr = ref.dwt53_fwd(x, levels=5)
     np.testing.assert_array_equal(np.asarray(pk.approx), np.asarray(pr.approx))
     for a, b in zip(pk.details, pr.details):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    np.testing.assert_array_equal(np.asarray(ops.dwt53_inv(pk)), np.asarray(x))
+    np.testing.assert_array_equal(
+        np.asarray(ops.dwt53_inv(pk, backend=backend)), np.asarray(x)
+    )
 
 
 def test_leading_dims_batched():
     x = jnp.asarray(RNG.integers(0, 255, size=(2, 3, 5, 256)), jnp.int32)
-    s, d = ops.dwt53_fwd_1d(x)
+    s, d = ops.dwt53_fwd_1d(x, backend="interpret")
     assert s.shape == (2, 3, 5, 128)
     s_r, d_r = ref.dwt53_fwd_1d(x)
     np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
@@ -82,17 +93,17 @@ def test_leading_dims_batched():
 def test_property_kernel_equals_oracle(n, rows, mode, seed):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.integers(-(2**14), 2**14, size=(rows, n)), jnp.int32)
-    s, d = ops.dwt53_fwd_1d(x, mode=mode)
+    s, d = ops.dwt53_fwd_1d(x, mode=mode, backend="interpret")
     s_r, d_r = ref.dwt53_fwd_1d(x, mode=mode)
     assert (s == s_r).all() and (d == d_r).all()
-    assert (ops.dwt53_inv_1d(s, d, mode=mode) == x).all()
+    assert (ops.dwt53_inv_1d(s, d, mode=mode, backend="interpret") == x).all()
 
 
 def test_kernel_block_boundaries():
     """Values that straddle tile boundaries (block_pairs=256) exactly."""
     n = 4 * 256 * 2  # 4 tiles of pairs
     x = jnp.asarray(np.arange(n, dtype=np.int32)[None] * 3 - 1000)
-    s, d = ops.dwt53_fwd_1d(x)
+    s, d = ops.dwt53_fwd_1d(x, backend="interpret")
     s_r, d_r = ref.dwt53_fwd_1d(x)
     np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
     np.testing.assert_array_equal(np.asarray(d), np.asarray(d_r))
