@@ -50,6 +50,34 @@ for section in ("1d_multilevel", "2d"):
     if s <= 1.0:
         fails.append(f"{section}: fused compiled path no faster ({s}x)")
 
+# tiled engine: a budget-sized image must never silently leave the Pallas
+# path where Pallas IS the platform default (TPU; CPU defaults to xla and
+# GPU deliberately stays on xla until the Triton lowering is validated —
+# see kernels/backend.py _PALLAS_DEFAULT)
+large = bench["2d_large"]
+if bench["default_backend"] == "pallas":
+    if large["plan"] != "tiled-pallas":
+        fails.append(
+            f"2d_large: {large['shape']} left the Pallas path on an "
+            f"accelerator (plan={large['plan']})"
+        )
+if not large["bit_exact"]:
+    fails.append("2d_large: tiled transform diverged from the oracle")
+
+# fused pyramid: on CPU both sides dispatch per level (kernels/fused2d.py
+# _fwd2d_multi_xla), so the true ratio is ~1.0 and anything near it is
+# timer noise on a drifting CI box; the regression this gate exists to
+# catch — the pyramid falling off the compiled path onto the interpreter
+# or an eager per-call path — measures 10-100x, so gate at 0.5
+pyr = bench["2d_pyramid"]
+if not pyr["bit_exact"]:
+    fails.append("2d_pyramid: fused pyramid diverged from the oracle")
+if pyr["speedup_fused_vs_per_level"] < 0.5:
+    fails.append(
+        "2d_pyramid: fused pyramid regressed vs per-level dispatch "
+        f"({pyr['speedup_fused_vs_per_level']}x)"
+    )
+
 if fails:
     print("SMOKE FAILED:")
     for f in fails:
@@ -59,7 +87,10 @@ if fails:
 print(
     "SMOKE OK: fused-vs-interpret speedups "
     f"1d={bench['1d_multilevel']['speedup_fused_vs_interpret']}x "
-    f"2d={bench['2d']['speedup_fused_vs_interpret']}x "
+    f"2d={bench['2d']['speedup_fused_vs_interpret']}x; "
+    f"2d_large plan={large['plan']} fwd={large['fwd_us']}us; "
+    f"pyramid fused/per-level={pyr['speedup_fused_vs_per_level']}x; "
+    f"batched {bench['2d_batched']['images_per_s']} img/s "
     f"(backend={bench['default_backend']}, platform={bench['platform']})"
 )
 PY

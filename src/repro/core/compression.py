@@ -352,6 +352,109 @@ def decompress_bands_nd(
     return dequantize(flat.reshape(out_shape), scale)
 
 
+# ---------------------------------------------------------------------------
+# 2D (spatial) band codec — the tiled/sharded engine's consumer.
+#
+# Matrix-shaped tensors (weights, activations, images) compress better
+# under the 2D Mallat pyramid than under flattened 1D lines: smoothness
+# along BOTH axes lands in one small LL band.  The transform routes
+# through ``K.dwt53_fwd_2d_multi`` — one fused compiled dispatch per
+# tensor with whole-image/tiled Pallas selection per level, batched over
+# the leading dims — so million-element matrices no longer leave the
+# kernel path.  Band layout mirrors the 1D nd codec: every band shipped,
+# approx at int16, details at int8 after per-band multiplierless shifts.
+# ---------------------------------------------------------------------------
+
+
+def forward_pyramid_2d(
+    g: jax.Array,
+    scale: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+) -> lifting.Pyramid2D:
+    """Quantize + integer 2D DWT over the last two axes (batched lead)."""
+    q = quantize(g, scale)
+    return K.dwt53_fwd_2d_multi(q, levels=levels, mode=mode, backend=backend)
+
+
+def pyramid2d_shifts(pyr: lifting.Pyramid2D):
+    """(ll_shift, per-level (lh, hl, hh) shifts) — same limits as 1D."""
+    return (
+        _band_shift(pyr.ll, 2**15 - 1),
+        tuple(
+            tuple(_band_shift(b, 2**7 - 1) for b in lvl) for lvl in pyr.details
+        ),
+    )
+
+
+def quantize_pyramid_2d(pyr: lifting.Pyramid2D, shifts):
+    """ll -> int16, detail bands -> int8, after the given shifts."""
+    ll_sh, det_shs = shifts
+    ll_q = jnp.clip(
+        jnp.right_shift(pyr.ll, ll_sh), -(2**15 - 1), 2**15 - 1
+    ).astype(jnp.int16)
+    details_q = tuple(
+        tuple(
+            jnp.clip(jnp.right_shift(b, sh), -(2**7 - 1), 2**7 - 1).astype(
+                jnp.int8
+            )
+            for b, sh in zip(lvl, lvl_shs)
+        )
+        for lvl, lvl_shs in zip(pyr.details, det_shs)
+    )
+    return ll_q, details_q
+
+
+def decompress_pyramid_2d(
+    ll_i32: jax.Array,
+    details_i32,
+    shifts,
+    scale: jax.Array,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Un-shift, inverse 2D pyramid (one fused dispatch), dequantize."""
+    ll_sh, det_shs = shifts
+    pyr = lifting.Pyramid2D(
+        ll=jnp.left_shift(ll_i32, ll_sh),
+        details=tuple(
+            tuple(jnp.left_shift(b, sh) for b, sh in zip(lvl, lvl_shs))
+            for lvl, lvl_shs in zip(details_i32, det_shs)
+        ),
+    )
+    x = K.dwt53_inv_2d_multi(pyr, mode=mode, backend=backend)
+    return dequantize(x, scale)
+
+
+def band_quantized_roundtrip_2d(
+    g: jax.Array, levels: int, mode: str = "paper", backend: Optional[str] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """g -> 2D band-quantized channel -> g_hat. Returns (g_hat, residual)."""
+    scale = tensor_scale(g)
+    pyr = forward_pyramid_2d(g, scale, levels, mode, backend=backend)
+    shifts = pyramid2d_shifts(pyr)
+    ll_q, details_q = quantize_pyramid_2d(pyr, shifts)
+    g_hat = decompress_pyramid_2d(
+        ll_q.astype(jnp.int32),
+        tuple(tuple(b.astype(jnp.int32) for b in lvl) for lvl in details_q),
+        shifts,
+        scale,
+        mode,
+        backend=backend,
+    ).astype(g.dtype)
+    return g_hat, (g.astype(jnp.float32) - g_hat.astype(jnp.float32))
+
+
+def band_bytes_2d(h: int, w: int, levels: int) -> int:
+    """Wire bytes of the 2D band-quantized payload for an (h, w) slice."""
+    (h_ll, w_ll), det_shapes = lifting.band_shapes_2d(h, w, levels)
+    total = h_ll * w_ll * 2
+    for lvl in det_shapes:
+        total += sum(a * b for a, b in lvl) * 1
+    return total + 8  # + scale/shift scalars
+
+
 def band_bytes(n: int, levels: int) -> int:
     """Wire bytes of the band-quantized payload for n fp32 values."""
     line = max(min(n, BLOCK), 1 << levels)

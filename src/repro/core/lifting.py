@@ -70,6 +70,19 @@ def update(even: Array, d: Array, d_prev: Array, mode: str = "paper") -> Array:
     return even + _shift_down(t, 2)
 
 
+def inv_update(s: Array, d: Array, d_prev: Array, mode: str = "paper") -> Array:
+    """eq. (8): even[n] = s[n] - floor((d[n] + d[n-1]) / 4) (+2 offset in
+    jpeg2000 mode) — the structural inverse of :func:`update`.  Every
+    inverse path (reference, fused, tiled, sharded) routes through this
+    so the mode/rounding rule lives in exactly one place.
+    """
+    _check_mode(mode)
+    t = d + d_prev
+    if mode == "jpeg2000":
+        t = t + 2
+    return s - _shift_down(t, 2)
+
+
 # ---------------------------------------------------------------------------
 # Single-level 1D transform along the last axis.
 # ---------------------------------------------------------------------------
@@ -148,10 +161,7 @@ def dwt53_inv_1d(s: Array, d: Array, mode: str = "paper") -> Array:
         d_prev_pad = jnp.concatenate([d_prev, d[..., -1:]], axis=-1)
     else:
         d_pad, d_prev_pad = d, d_prev
-    t = d_pad + d_prev_pad
-    if mode == "jpeg2000":
-        t = t + 2
-    even = s - _shift_down(t, 2)
+    even = inv_update(s, d_pad, d_prev_pad, mode=mode)
     # ---- inverse predict (eq. 9): odd = d + P(even) -----------------------
     even_next = _sym_even_next(even, n)[..., :n_odd]
     odd = d + _shift_down(even[..., :n_odd] + even_next, 1)
@@ -244,6 +254,53 @@ def dwt53_inv_2d(bands: Bands2D, mode: str = "paper") -> Array:
     return dwt53_inv_1d(s_r, d_r, mode=mode)
 
 
+class Pyramid2D(NamedTuple):
+    """Multi-level 2D (Mallat) decomposition.
+
+    ``ll`` is the coarsest approximation; ``details[0]`` is the COARSEST
+    level's (lh, hl, hh) triple — the 2D analogue of WaveletPyramid.
+    """
+
+    ll: Array
+    details: Tuple[Tuple[Array, Array, Array], ...]  # coarsest first
+
+    @property
+    def levels(self) -> int:
+        return len(self.details)
+
+
+def check_levels_2d(h: int, w: int, levels: int) -> None:
+    """Raise unless a (h, w) image supports `levels` 2D decompositions."""
+    if levels < 1:
+        raise ValueError("levels must be >= 1")
+    for _ in range(levels):
+        if h < 2 or w < 2:
+            raise ValueError(
+                f"image too small for {levels} 2D levels (h={h}, w={w})"
+            )
+        h, w = h - h // 2, w - w // 2
+
+
+def dwt53_fwd_2d_multi(x: Array, levels: int = 1, mode: str = "paper") -> Pyramid2D:
+    """Multi-level 2D forward transform (Mallat pyramid, recurse on LL)."""
+    check_levels_2d(x.shape[-2], x.shape[-1], levels)
+    ll = x
+    details: List[Tuple[Array, Array, Array]] = []
+    for _ in range(levels):
+        bands = dwt53_fwd_2d(ll, mode=mode)
+        ll = bands.ll
+        details.append((bands.lh, bands.hl, bands.hh))
+    return Pyramid2D(ll=ll, details=tuple(reversed(details)))
+
+
+def dwt53_inv_2d_multi(pyr: Pyramid2D, mode: str = "paper") -> Array:
+    """Inverse of :func:`dwt53_fwd_2d_multi`."""
+    ll = pyr.ll
+    for lh, hl, hh in pyr.details:  # coarsest first
+        ll = dwt53_inv_2d(Bands2D(ll=ll, lh=lh, hl=hl, hh=hh), mode=mode)
+    return ll
+
+
 # ---------------------------------------------------------------------------
 # Flat coefficient <-> pyramid packing (used by compression / checkpointing).
 # ---------------------------------------------------------------------------
@@ -275,6 +332,69 @@ def unpack(flat: Array, n: int, levels: int) -> WaveletPyramid:
         details.append(flat[..., off : off + dl])
         off += dl
     return WaveletPyramid(approx=approx, details=tuple(details))
+
+
+def band_shapes_2d(
+    h: int, w: int, levels: int
+) -> Tuple[Tuple[int, int], Tuple[Tuple[Tuple[int, int], ...], ...]]:
+    """(ll_shape, per-level (lh, hl, hh) shapes coarsest-first) for (h, w)."""
+    shapes = []
+    for _ in range(levels):
+        h_e, w_e = h - h // 2, w - w // 2
+        h_o, w_o = h // 2, w // 2
+        shapes.append(((h_o, w_e), (h_e, w_o), (h_o, w_o)))
+        h, w = h_e, w_e
+    return (h, w), tuple(reversed(shapes))
+
+
+def pack2d(pyr: Pyramid2D) -> Array:
+    """Flatten [ll, then per-level lh, hl, hh coarsest->finest] along -1.
+
+    Band shapes are a pure function of (h, w, levels) — see
+    :func:`band_shapes_2d` — so :func:`unpack2d` needs only those three
+    ints, exactly like the 1D pack/unpack pair.
+    """
+    lead = pyr.ll.shape[:-2]
+
+    def flat(a: Array) -> Array:
+        return a.reshape(lead + (a.shape[-2] * a.shape[-1],))
+
+    parts = [flat(pyr.ll)]
+    for lh, hl, hh in pyr.details:
+        parts.extend([flat(lh), flat(hl), flat(hh)])
+    return jnp.concatenate(parts, axis=-1)
+
+
+def unpack2d(flat: Array, h: int, w: int, levels: int) -> Pyramid2D:
+    """Inverse of :func:`pack2d` for an original (h, w) image."""
+    ll_shape, det_shapes = band_shapes_2d(h, w, levels)
+    lead = flat.shape[:-1]
+    off = 0
+
+    def take(shape: Tuple[int, int]) -> Array:
+        nonlocal off
+        n = shape[0] * shape[1]
+        part = flat[..., off : off + n]
+        off += n
+        return part.reshape(lead + shape)
+
+    ll = take(ll_shape)
+    details = tuple(
+        (take(sh_lh), take(sh_hl), take(sh_hh))
+        for sh_lh, sh_hl, sh_hh in det_shapes
+    )
+    return Pyramid2D(ll=ll, details=details)
+
+
+def max_levels_2d(h: int, w: int) -> int:
+    """Deepest 2D decomposition with >= 2 samples per axis at every level."""
+    lv = 0
+    while h >= 2 and w >= 2:
+        h, w = h - h // 2, w - w // 2
+        lv += 1
+        if h < 2 or w < 2:
+            break
+    return max(lv, 1)
 
 
 def max_levels(n: int) -> int:

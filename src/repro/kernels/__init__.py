@@ -1,14 +1,21 @@
 """Single entry point for the integer (5,3) DWT engine.
 
 Production consumers (``core/compression.py``, ``train/grad_compress.py``,
-``ckpt/checkpoint.py``) import transforms from HERE, not from
-``core.lifting`` or the kernel modules directly, so the backend dispatch
-policy (``kernels/backend.py``) applies to every workload at once:
+``ckpt/checkpoint.py``, ``serve/serve_step.py``) import transforms from
+HERE, not from ``core.lifting`` or the kernel modules directly, so the
+backend dispatch policy (``kernels/backend.py``) applies to every
+workload at once:
 
     from repro import kernels as K
     pyr = K.dwt53_fwd(x, levels=3)          # compiled on every platform
     y   = K.dwt53_inv(pyr)
     bands = K.dwt53_fwd_2d(img)             # fused row-column pass
+    p2d = K.dwt53_fwd_2d_multi(img, levels=3)   # fused Mallat pyramid
+    shd = K.dwt53_fwd_2d_sharded(img, mesh)     # rows over mesh['data']
+
+There is no image-size ceiling: past the derived VMEM budget the 2D
+transforms run the tiled halo-window Pallas engine, and batch dims map
+to kernel grid cells.
 
 Backends — ``pallas`` (compiled kernels; TPU default), ``xla`` (the
 jnp reference under jit; CPU/GPU default), ``interpret`` (Pallas
@@ -17,28 +24,39 @@ emulator, debug only).  Select per call with ``backend=...``, per scope with
 backends are bit-exact vs ``kernels/ref.py`` (== ``core.lifting``).
 
 Layout convention for this package: dwt53.py (raw Pallas kernels),
-fused2d.py (fused 2D kernels), ops.py (dispatching wrappers), ref.py
-(jnp oracle), backend.py (dispatch policy).  See DESIGN.md §3-5.
+fused2d.py (fused 2D kernels + multi-level dispatch), tiled2d.py (tiled
+halo-window kernels), sharded.py (shard_map multi-device transform),
+ops.py (dispatching wrappers), ref.py (jnp oracle), backend.py (dispatch
+policy + budgets/tiles).  See DESIGN.md §3-7.
 """
 from repro.core.lifting import (  # noqa: F401  structural types + packing
     Bands2D,
+    Pyramid2D,
     WaveletPyramid,
+    band_shapes_2d,
     band_sizes,
     max_levels,
+    max_levels_2d,
     pack,
+    pack2d,
     unpack,
+    unpack2d,
 )
 from repro.kernels.backend import (  # noqa: F401
     VALID_BACKENDS,
     default_backend,
     has_compiled_pallas,
+    pick_tile,
     platform,
     resolve,
+    resolve_backend,
     use_backend,
 )
 from repro.kernels.fused2d import (  # noqa: F401
     dwt53_fwd_2d,
+    dwt53_fwd_2d_multi,
     dwt53_inv_2d,
+    dwt53_inv_2d_multi,
 )
 from repro.kernels.ops import (  # noqa: F401
     dwt53_fwd,
@@ -46,24 +64,39 @@ from repro.kernels.ops import (  # noqa: F401
     dwt53_inv,
     dwt53_inv_1d,
 )
+from repro.kernels.sharded import (  # noqa: F401
+    dwt53_fwd_2d_sharded,
+    dwt53_inv_2d_sharded,
+)
 
 __all__ = [
     "Bands2D",
+    "Pyramid2D",
     "WaveletPyramid",
+    "band_shapes_2d",
     "band_sizes",
     "max_levels",
+    "max_levels_2d",
     "pack",
+    "pack2d",
     "unpack",
+    "unpack2d",
     "VALID_BACKENDS",
     "default_backend",
     "has_compiled_pallas",
+    "pick_tile",
     "platform",
     "resolve",
+    "resolve_backend",
     "use_backend",
     "dwt53_fwd",
     "dwt53_fwd_1d",
     "dwt53_inv",
     "dwt53_inv_1d",
     "dwt53_fwd_2d",
+    "dwt53_fwd_2d_multi",
     "dwt53_inv_2d",
+    "dwt53_inv_2d_multi",
+    "dwt53_fwd_2d_sharded",
+    "dwt53_inv_2d_sharded",
 ]

@@ -31,6 +31,7 @@ from __future__ import annotations
 import contextlib
 import functools
 import os
+import warnings
 from typing import Iterator, Optional, Tuple
 
 import jax
@@ -79,20 +80,66 @@ def default_backend() -> str:
     return "pallas" if platform() in _PALLAS_DEFAULT else "xla"
 
 
-def resolve(backend: Optional[str] = None) -> str:
+def resolve_backend(
+    backend: Optional[str] = None, *, explain: bool = False
+):
     """Resolve a per-call ``backend=`` argument to an executable backend.
 
     ``None`` defers to the context override / env var / platform default.
     An explicit ``pallas`` request on a platform without a compiled Pallas
     target degrades to ``interpret`` (same kernels, emulated) so kernel
     code paths stay testable everywhere.
+
+    With ``explain=True`` returns ``(resolved, reason)`` where ``reason``
+    names why the request landed where it did — tests and the smoke gate
+    use this to assert that no production shape silently leaves the
+    compiled Pallas path on an accelerator.
     """
     name = backend or _override or default_backend()
     if name not in VALID_BACKENDS:
         raise ValueError(f"backend must be one of {VALID_BACKENDS}, got {name!r}")
     if name == "pallas" and not has_compiled_pallas():
-        return "interpret"
+        note_degrade(
+            "pallas", "interpret",
+            "off-accelerator: no compiled Pallas target on "
+            f"platform={platform()!r}; running the same kernels emulated",
+        )
+        return ("interpret", "degraded:off-accelerator") if explain else "interpret"
+    if explain:
+        if backend:
+            return name, "explicit"
+        if _override:
+            return name, "context-override"
+        env = os.environ.get(_ENV_VAR, "").strip().lower()
+        if env and env != "auto":
+            return name, "env-var"
+        return name, "platform-default"
     return name
+
+
+def resolve(backend: Optional[str] = None) -> str:
+    """Back-compat alias for :func:`resolve_backend` (name only)."""
+    return resolve_backend(backend)
+
+
+# one-time degrade warnings: a silently-degraded request (pallas ->
+# interpret off-accelerator, pallas -> xla for an untileable shape) warns
+# ONCE per distinct reason so production logs name the cliff without
+# spamming per-call.
+_warned_degrades: set = set()
+
+
+def note_degrade(requested: str, resolved: str, reason: str) -> None:
+    """Warn (once per reason) that a backend request degraded."""
+    key = (requested, resolved, reason)
+    if key in _warned_degrades:
+        return
+    _warned_degrades.add(key)
+    warnings.warn(
+        f"DWT backend request {requested!r} degraded to {resolved!r}: {reason}",
+        RuntimeWarning,
+        stacklevel=3,
+    )
 
 
 @contextlib.contextmanager
@@ -131,11 +178,6 @@ def interpret_flag(resolved: str) -> bool:
 DEFAULT_BLOCK_ROWS = 8
 DEFAULT_BLOCK_PAIRS = 256
 
-# fused-2D kernels keep ~6 image-sized buffers resident per grid cell;
-# above this many elements per image the dispatcher uses the tiled/XLA
-# path instead (16MB VMEM / 4B / 6 buffers, with headroom).
-FUSED2D_MAX_ELEMS = 512 * 1024
-
 
 def pick_blocks(n_rows: int, n_pairs: int) -> Tuple[int, int]:
     """(block_rows, block_pairs) for a (rows, pairs) polyphase stream."""
@@ -143,3 +185,141 @@ def pick_blocks(n_rows: int, n_pairs: int) -> Tuple[int, int]:
         min(DEFAULT_BLOCK_ROWS, n_rows),
         min(DEFAULT_BLOCK_PAIRS, n_pairs),
     )
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget + fused-2D whole-image / tiled policy (DESIGN.md §5-6).
+#
+# The budget is DERIVED from the queried device, not hard-coded: Pallas
+# blocks live in VMEM (~16MB/core on every shipping TPU), so the probe
+# asks the device for ``core_on_chip_memory_size`` when it exposes one and
+# falls back to the architectural 16MB otherwise.  ``memory_stats()``
+# (HBM) bounds it from above on exotic hosts.  ``REPRO_DWT_VMEM_MB``
+# overrides the probe; results are cached per process.
+# ---------------------------------------------------------------------------
+
+_VMEM_ENV = "REPRO_DWT_VMEM_MB"
+_TILE_ENV = "REPRO_DWT_TILE"
+
+_DEFAULT_VMEM_BYTES = 16 * 1024 * 1024
+
+# the fused whole-image 2D kernel keeps ~6 image-sized int32 buffers
+# resident per grid cell (input, 2 row streams, 4 subbands, sliced)
+FUSED2D_RESIDENT_BUFFERS = 6
+
+
+def vmem_budget_bytes() -> int:
+    """Per-core fast-memory budget for resident kernel buffers (bytes).
+
+    Cached per env state: a changed ``REPRO_DWT_VMEM_MB`` takes effect
+    immediately (no manual cache clearing).
+    """
+    return _vmem_budget_bytes(os.environ.get(_VMEM_ENV, "").strip())
+
+
+@functools.lru_cache(maxsize=None)
+def _vmem_budget_bytes(env: str) -> int:
+    if env:
+        return int(float(env) * 1024 * 1024)
+    dev = jax.devices()[0]
+    # TPU backends expose the on-chip memory size; others don't.
+    for attr in ("core_on_chip_memory_size", "vmem_size_bytes"):
+        size = getattr(dev, attr, None)
+        if isinstance(size, int) and size > 0:
+            return size
+    try:
+        stats = dev.memory_stats()
+    except Exception:  # noqa: BLE001 - CPU backends raise/return None
+        stats = None
+    if stats and stats.get("bytes_limit"):
+        # no VMEM concept (cpu/gpu fallback): cap the *blocked* working
+        # set at the architectural 16MB so tile maths stay TPU-shaped
+        return min(int(stats["bytes_limit"]), _DEFAULT_VMEM_BYTES)
+    return _DEFAULT_VMEM_BYTES
+
+
+def fused2d_budget_elems() -> int:
+    """Largest per-image element count the whole-image 2D kernel accepts.
+
+    Derived from :func:`vmem_budget_bytes`: ~6 resident int32 image-sized
+    buffers per grid cell, with 2x headroom for Mosaic spills.
+    """
+    return max(
+        vmem_budget_bytes() // (4 * FUSED2D_RESIDENT_BUFFERS * 2),
+        8 * 1024,
+    )
+
+
+# tiled-2D engine defaults: 252 core + 4 halo = 256 — lane-aligned input
+# windows, the dominant DMA of the tiled kernels
+DEFAULT_TILE = 252
+_MIN_TILE = 4  # tiles are even and >= 4 so every window has a full halo
+
+
+def tile_forced() -> bool:
+    """True when ``REPRO_DWT_TILE`` is set: the tiled engine is forced for
+    every tileable image, budget or not (tuning + the test lever that
+    exercises multi-tile grids on small images)."""
+    return bool(os.environ.get(_TILE_ENV, "").strip())
+
+
+def _tile_env_override() -> Optional[Tuple[int, int]]:
+    env = os.environ.get(_TILE_ENV, "").strip()
+    if not env:
+        return None
+    parts = [p for p in env.replace("x", ",").split(",") if p]
+    try:
+        vals = [int(p) for p in parts]
+    except ValueError as e:
+        raise ValueError(
+            f"{_TILE_ENV}={env!r}: expected 'N' or 'TH,TW' integers"
+        ) from e
+    th, tw = (vals[0], vals[0]) if len(vals) == 1 else (vals[0], vals[1])
+    if th < _MIN_TILE or tw < _MIN_TILE or th % 2 or tw % 2:
+        raise ValueError(
+            f"{_TILE_ENV}={env!r}: tile dims must be even and >= {_MIN_TILE}"
+        )
+    return th, tw
+
+
+def dispatch_state() -> Tuple[str, str]:
+    """The env-derived dispatch inputs, as a hashable token.
+
+    Threaded as a static argument through the multi-level jit wrappers so
+    changing ``REPRO_DWT_TILE`` / ``REPRO_DWT_VMEM_MB`` mid-process
+    retraces instead of silently reusing an executable whose whole-image
+    vs tiled choices were baked under the old state.
+    """
+    return (
+        os.environ.get(_TILE_ENV, "").strip(),
+        os.environ.get(_VMEM_ENV, "").strip(),
+    )
+
+
+def pick_tile(h: int, w: int) -> Tuple[int, int]:
+    """(TH, TW) core-tile shape for a tiled 2D transform of an (h, w) image.
+
+    Cached per (shape, env state).  ``REPRO_DWT_TILE`` ("N" or "TH,TW")
+    overrides — the escape hatch for tuning and the lever tests use to
+    exercise multi-tile grids on small images.  Chosen tiles are even, at
+    least ``_MIN_TILE``, and sized so the ~6 resident window-sized buffers
+    of the tiled kernels fit the derived VMEM budget.
+    """
+    return _pick_tile(h, w, dispatch_state())
+
+
+@functools.lru_cache(maxsize=4096)
+def _pick_tile(h: int, w: int, _state: Tuple[str, str]) -> Tuple[int, int]:
+    override = _tile_env_override()
+    if override is not None:
+        return override
+    budget = fused2d_budget_elems()
+    th = tw = DEFAULT_TILE
+    # shrink square-ish until the halo'd window set fits the budget
+    while (th + 4) * (tw + 4) > budget and th > _MIN_TILE:
+        th = max(th // 2 - (th // 2) % 2, _MIN_TILE)
+        tw = th
+    # never tile beyond the image (ceil to even: odd dims get one pad col)
+    th = min(th, h + (h % 2))
+    tw = min(tw, w + (w % 2))
+    return max(th, _MIN_TILE), max(tw, _MIN_TILE)

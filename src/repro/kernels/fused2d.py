@@ -14,27 +14,41 @@ axis it is a cross-device reshuffle.  This module removes them:
     batch, each cell loads its (H, W) image into VMEM once, computes the
     row lifting, feeds the resident s/d streams straight into the column
     lifting, and writes the four subbands (LL, LH, HL, HH) — one pass
-    over HBM in, four band-writes out.  Images larger than
-    ``backend.FUSED2D_MAX_ELEMS`` (VMEM budget: ~6 resident image-sized
-    buffers) fall back to the transpose-free XLA path.
+    over HBM in, four band-writes out.  Images past the derived VMEM
+    budget (``backend.fused2d_budget_elems``) stay on Pallas through the
+    tiled halo-window engine (``kernels/tiled2d.py``) — no XLA cliff.
   * On the XLA backend the same axis-aware math is one jitted program;
     XLA fuses both stages without materialising transposed copies.
 
+This module is also the multi-level 2D dispatcher: ``dwt53_fwd_2d_multi``
+/ ``dwt53_inv_2d_multi`` fuse the full Mallat pyramid into one compiled
+dispatch on the Pallas engine, choosing whole-image or tiled kernels per
+level from the static shapes.
+
 Bit-exactness: every path reproduces ``core.lifting.dwt53_fwd_2d`` /
 ``dwt53_inv_2d`` exactly, for every (H, W) >= (2, 2) including odd sizes
-and both rounding modes; tests sweep this.  See DESIGN.md §5.
+and both rounding modes; tests sweep this.  See DESIGN.md §5-6.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.lifting import Bands2D, _check_mode, predict, update
+from repro.core.lifting import (
+    Bands2D,
+    Pyramid2D,
+    _check_mode,
+    check_levels_2d,
+    inv_update,
+    predict,
+    update,
+)
 from repro.kernels import backend as _backend
+from repro.kernels import tiled2d as _tiled
 from repro.kernels.ops import _compute_dtype
 
 Array = jax.Array
@@ -106,10 +120,7 @@ def _inv_axis(s: Array, d: Array, axis: int, mode: str) -> Array:
         d_prev_pad = jnp.concatenate([d_prev, last], axis=axis)
     else:
         d_pad, d_prev_pad = d, d_prev
-    t = d_pad + d_prev_pad
-    if mode == "jpeg2000":
-        t = t + 2
-    even = s - jnp.right_shift(t, 2)
+    even = inv_update(s, d_pad, d_prev_pad, mode=mode)
     even_next = _slc(_edge_next(even, axis), 0, n_o, axis)
     odd = d + jnp.right_shift(_slc(even, 0, n_o, axis) + even_next, 1)
     # merge via stack+reshape (no scatter; keeps sharded axes sharded)
@@ -217,12 +228,86 @@ def _inv2d_xla(ll: Array, lh: Array, hl: Array, hh: Array, mode: str):
 
 
 # ---------------------------------------------------------------------------
-# Public API.
+# Level dispatch: whole-image kernel within the VMEM budget, tiled
+# halo-window kernel beyond it (kernels/tiled2d.py) — Pallas either way.
 # ---------------------------------------------------------------------------
 
 
 def _fits_vmem(h: int, w: int) -> bool:
-    return h * w <= _backend.FUSED2D_MAX_ELEMS
+    return h * w <= _backend.fused2d_budget_elems()
+
+
+def _can_tile(h: int, w: int) -> bool:
+    # the tiled engine reflect-pads by 2, which needs >= 3 samples per dim
+    return h >= 3 and w >= 3
+
+
+def _use_tiled(h: int, w: int) -> bool:
+    return _can_tile(h, w) and (_backend.tile_forced() or not _fits_vmem(h, w))
+
+
+def _fwd2d_level(x3: Array, mode: str, interpret: bool):
+    """One forward level on a (B, H, W) compute-dtype batch (trace-time
+    whole-image/tiled choice; both are Pallas)."""
+    h, w = x3.shape[-2], x3.shape[-1]
+    if _use_tiled(h, w):
+        th, tw = _backend.pick_tile(h, w)
+        return _tiled.fwd2d_tiled(x3, mode, th, tw, interpret)
+    if _fits_vmem(h, w):
+        return _fwd2d_pallas(x3, mode=mode, interpret=interpret)
+    # over budget but untileable (a dim < 3, e.g. a deep pyramid level of
+    # an extremely skewed image): in-graph jnp math — never an image-sized
+    # VMEM block.  Level 0 additionally warns via _resolve_2d.
+    return _fwd2d_math(x3, mode)
+
+
+def _inv2d_level(ll3, lh3, hl3, hh3, mode: str, interpret: bool):
+    h = ll3.shape[-2] + lh3.shape[-2]
+    w = ll3.shape[-1] + hl3.shape[-1]
+    if _use_tiled(h, w):
+        th, tw = _backend.pick_tile(h, w)
+        return _tiled.inv2d_tiled(ll3, lh3, hl3, hh3, mode, th, tw, interpret)
+    if _fits_vmem(h, w):
+        return _inv2d_pallas(ll3, lh3, hl3, hh3, mode=mode, interpret=interpret)
+    return _inv2d_math(ll3, lh3, hl3, hh3, mode)  # see _fwd2d_level
+
+
+def _resolve_2d(backend: Optional[str], h: int, w: int) -> str:
+    """Backend for a 2D transform; names the one remaining budget cliff.
+
+    Images too degenerate to tile (a dim of 2) that also exceed the
+    whole-image budget cannot run under Pallas; they degrade to the
+    (unbounded, bit-exact) XLA path with a one-time warning.
+    """
+    b = _backend.resolve(backend)
+    if b != "xla" and not _fits_vmem(h, w) and not _can_tile(h, w):
+        _backend.note_degrade(
+            b, "xla",
+            f"budget: ({h}, {w}) exceeds the whole-image VMEM budget and a "
+            "dim < 3 cannot take the tiled halo path",
+        )
+        return "xla"
+    return b
+
+
+def plan_2d(h: int, w: int, backend: Optional[str] = None) -> str:
+    """Name the execution path a (h, w) 2D transform will take.
+
+    One of ``whole-pallas`` / ``tiled-pallas`` / ``whole-interpret`` /
+    ``tiled-interpret`` / ``xla``.  Benchmarks and the CI smoke gate use
+    this to assert that budget-sized images never silently leave the
+    Pallas path on an accelerator.
+    """
+    b = _resolve_2d(backend, h, w)
+    if b == "xla":
+        return "xla"
+    kind = "tiled" if _use_tiled(h, w) else "whole"
+    return f"{kind}-{'interpret' if b == 'interpret' else 'pallas'}"
+
+
+# ---------------------------------------------------------------------------
+# Public API.
+# ---------------------------------------------------------------------------
 
 
 def dwt53_fwd_2d(
@@ -230,19 +315,22 @@ def dwt53_fwd_2d(
 ) -> Bands2D:
     """One fused 2D level over the last two axes (rows then columns).
 
-    Bit-exact vs ``core.lifting.dwt53_fwd_2d`` on every backend.
+    Runs the whole-image Pallas kernel when the image fits the VMEM
+    budget and the tiled halo-window kernel when it does not — there is
+    no large-image XLA cliff.  Bit-exact vs ``core.lifting.dwt53_fwd_2d``
+    on every backend.
     """
     _check_mode(mode)
     if x.ndim < 2 or x.shape[-1] < 2 or x.shape[-2] < 2:
         raise ValueError(f"need a (..., H>=2, W>=2) input, got {x.shape}")
-    b = _backend.resolve(backend)
     h, w = x.shape[-2], x.shape[-1]
-    if b == "xla" or not _fits_vmem(h, w):
+    b = _resolve_2d(backend, h, w)
+    if b == "xla":
         ll, lh, hl, hh = _fwd2d_xla(x, mode=mode)
         return Bands2D(ll=ll, lh=lh, hl=hl, hh=hh)
     lead = x.shape[:-2]
     xf = x.reshape((-1, h, w)).astype(_compute_dtype(x.dtype))
-    ll, lh, hl, hh = _fwd2d_pallas(xf, mode=mode, interpret=_backend.interpret_flag(b))
+    ll, lh, hl, hh = _fwd2d_level(xf, mode, _backend.interpret_flag(b))
     return Bands2D(
         ll=ll.reshape(lead + ll.shape[1:]),
         lh=lh.reshape(lead + lh.shape[1:]),
@@ -256,11 +344,11 @@ def dwt53_inv_2d(
 ) -> Array:
     """Fused inverse of :func:`dwt53_fwd_2d` (columns then rows)."""
     _check_mode(mode)
-    b = _backend.resolve(backend)
     ll = bands.ll
     h = ll.shape[-2] + bands.lh.shape[-2]
     w = ll.shape[-1] + bands.hl.shape[-1]
-    if b == "xla" or not _fits_vmem(h, w):
+    b = _resolve_2d(backend, h, w)
+    if b == "xla":
         return _inv2d_xla(bands.ll, bands.lh, bands.hl, bands.hh, mode=mode)
     lead = ll.shape[:-2]
     cdt = _compute_dtype(ll.dtype)
@@ -268,5 +356,138 @@ def dwt53_inv_2d(
         a.reshape((-1,) + a.shape[len(lead) :]).astype(cdt)
         for a in (bands.ll, bands.lh, bands.hl, bands.hh)
     )
-    x = _inv2d_pallas(*args, mode=mode, interpret=_backend.interpret_flag(b))
+    x = _inv2d_level(*args, mode=mode, interpret=_backend.interpret_flag(b))
+    return x.reshape(lead + x.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-level 2D Mallat pyramid: one compiled dispatch for every
+# level (mirrors the 1D fusion in kernels/ops.py).  The per-level
+# whole-image/tiled choice is made at trace time from the static shapes,
+# so a 2048x2048 pyramid runs tiled at the fine levels and whole-image at
+# the coarse ones — all inside one executable.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("levels", "mode", "interpret", "dispatch")
+)
+def _fwd2d_multi_kernel(x, levels, mode, interpret, dispatch):
+    # `dispatch` (backend.dispatch_state()) keys the jit cache on the env
+    # overrides so REPRO_DWT_TILE / REPRO_DWT_VMEM_MB retrace, not no-op
+    ll = x.astype(_compute_dtype(x.dtype))  # in-jit: no eager host copy
+    details: List[Tuple[Array, Array, Array]] = []
+    for _ in range(levels):
+        ll, lh, hl, hh = _fwd2d_level(ll, mode, interpret)
+        details.append((lh, hl, hh))
+    return ll, tuple(reversed(details))
+
+
+def _fwd2d_multi_xla(x, levels, mode):
+    # per-level jitted dispatches, NOT one fused program: XLA:CPU compiles
+    # the chained multi-level graph ~2x slower (it refuses to materialise
+    # level l's bands cleanly for level l+1 even behind an
+    # optimization_barrier — measured in BENCH_kernels.json history).  The
+    # single-dispatch fusion is a property of the Pallas engine, whose
+    # per-level kernels are opaque custom calls XLA cannot mis-fuse.
+    ll = x
+    details: List[Tuple[Array, Array, Array]] = []
+    for _ in range(levels):
+        ll, lh, hl, hh = _fwd2d_xla(ll, mode=mode)
+        details.append((lh, hl, hh))
+    return ll, tuple(reversed(details))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "interpret", "dispatch")
+)
+def _inv2d_multi_kernel(ll, details, mode, interpret, dispatch):
+    cdt = _compute_dtype(ll.dtype)  # in-jit promotion: no eager copies
+    ll = ll.astype(cdt)
+    for lh, hl, hh in details:  # coarsest first
+        ll = _inv2d_level(
+            ll, lh.astype(cdt), hl.astype(cdt), hh.astype(cdt), mode, interpret
+        )
+    return ll
+
+
+def _inv2d_multi_xla(ll, details, mode):
+    for lh, hl, hh in details:  # per-level dispatch: see _fwd2d_multi_xla
+        ll = _inv2d_xla(ll, lh, hl, hh, mode=mode)
+    return ll
+
+
+def dwt53_fwd_2d_multi(
+    x: Array,
+    levels: int = 1,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+) -> Pyramid2D:
+    """Fused multi-level 2D forward transform.
+
+    On the Pallas engine (accelerator default) every level traces into
+    ONE compiled dispatch — fine levels tiled, coarse levels whole-image.
+    The XLA reference path dispatches per level (faster there: see
+    ``_fwd2d_multi_xla``).
+    """
+    _check_mode(mode)
+    if x.ndim < 2:
+        raise ValueError(f"need a (..., H, W) input, got {x.shape}")
+    h, w = x.shape[-2], x.shape[-1]
+    check_levels_2d(h, w, levels)
+    b = _resolve_2d(backend, h, w)
+    lead = x.shape[:-2]
+    if b == "xla":
+        # _fwd2d_xla promotes in-jit; no eager cast of the full image here
+        ll, details = _fwd2d_multi_xla(x, levels=levels, mode=mode)
+        return Pyramid2D(ll=ll, details=details)
+    xf = x.reshape((-1, h, w))  # metadata-only; promotion happens in-jit
+    ll, details = _fwd2d_multi_kernel(
+        xf, levels=levels, mode=mode, interpret=_backend.interpret_flag(b),
+        dispatch=_backend.dispatch_state(),
+    )
+
+    def unlead(a: Array) -> Array:
+        return a.reshape(lead + a.shape[1:])
+
+    return Pyramid2D(
+        ll=unlead(ll),
+        details=tuple((unlead(lh), unlead(hl), unlead(hh)) for lh, hl, hh in details),
+    )
+
+
+def dwt53_inv_2d_multi(
+    pyr: Pyramid2D, mode: str = "paper", backend: Optional[str] = None
+) -> Array:
+    """Inverse of :func:`dwt53_fwd_2d_multi` (one dispatch on Pallas)."""
+    _check_mode(mode)
+    ll = pyr.ll
+    h, w = ll.shape[-2], ll.shape[-1]
+    for lh, hl, hh in pyr.details:  # validate band geometry coarsest-first
+        if (
+            lh.shape[-2] not in (h, h - 1)
+            or hl.shape[-1] not in (w, w - 1)
+            or hl.shape[-2] != h
+            or lh.shape[-1] != w
+            or hh.shape[-2:] != (lh.shape[-2], hl.shape[-1])
+        ):
+            raise ValueError(
+                f"band shape mismatch at ll={(h, w)}: "
+                f"lh={lh.shape[-2:]}, hl={hl.shape[-2:]}, hh={hh.shape[-2:]}"
+            )
+        h, w = h + lh.shape[-2], w + hl.shape[-1]
+    b = _resolve_2d(backend, h, w)
+    if b == "xla":
+        # _inv2d_xla promotes in-jit; pass the bands through untouched
+        return _inv2d_multi_xla(ll, tuple(pyr.details), mode=mode)
+    lead = ll.shape[:-2]
+
+    def flat(a: Array) -> Array:
+        return a.reshape((-1,) + a.shape[len(lead) :])  # metadata-only
+
+    details = tuple((flat(lh), flat(hl), flat(hh)) for lh, hl, hh in pyr.details)
+    x = _inv2d_multi_kernel(
+        flat(ll), details, mode=mode, interpret=_backend.interpret_flag(b),
+        dispatch=_backend.dispatch_state(),
+    )
     return x.reshape(lead + x.shape[1:])

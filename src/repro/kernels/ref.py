@@ -5,11 +5,15 @@ re-exported here so the kernels package follows the <name>.py / ops.py /
 ref.py convention and tests can import the oracle from one place.
 """
 from repro.core.lifting import (  # noqa: F401
+    Bands2D,
+    Pyramid2D,
     WaveletPyramid,
     dwt53_fwd,
     dwt53_fwd_1d,
     dwt53_fwd_2d,
+    dwt53_fwd_2d_multi,
     dwt53_inv,
     dwt53_inv_1d,
     dwt53_inv_2d,
+    dwt53_inv_2d_multi,
 )

@@ -1,0 +1,332 @@
+"""Multi-device 2D DWT: rows spatially sharded, halos via ``ppermute``.
+
+The paper's parallel lifting architecture needs only a 2-sample overlap
+between neighboring PEs; across devices that overlap becomes an explicit
+halo exchange.  This module runs the full multi-level 2D Mallat pyramid
+under ``shard_map`` with the image's row axis sharded over a mesh axis
+(``data`` by default, via the same logical-rules machinery as the rest of
+the system — ``sharding.spec_for``):
+
+  * The row-direction (width) lifting is device-local: each shard holds
+    full rows, and the stencils slice along the unsharded last axis.
+  * The column-direction lifting needs 2 rows from each spatial neighbor
+    per level.  Both row-transformed streams (s_r | d_r, together exactly
+    one image row wide) are exchanged in a single ``ppermute`` per
+    direction — 2 rows to the previous neighbor, 2 to the next, per
+    level.  Global edges swap the received halo for the whole-point
+    reflect rows computed locally, so the boundary policy matches the
+    reference exactly (same identity the tiled engine rests on).
+  * The inverse exchanges 1 band-row per direction per level (d from the
+    previous neighbor; s and d from the next) and applies the role
+    policies of ``tiled2d.pad_bands_for_inverse`` at the global edges.
+
+Local compute reuses the interior-math helpers of ``kernels/tiled2d.py``
+(the same functions that run inside the Pallas kernels), so the sharded
+transform is bit-exact vs the single-device engine — the tier-1 CPU-mesh
+test asserts it.  Shapes: H must divide by ``axis_size * 2**levels`` with
+at least 4 local rows at the coarsest level; W >= 3 (any parity).
+
+See DESIGN.md §7 for the communication pattern.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro import sharding as SH
+from repro.core.lifting import Pyramid2D, _check_mode
+from repro.kernels.ops import _compute_dtype
+from repro.kernels.tiled2d import _fwd_axis_ext, _inv_axis_ext
+
+Array = jax.Array
+
+
+def _shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """Full-manual shard_map across jax versions (see train_step.py)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    # check_rep=False: the halo ppermutes over one axis confuse the 0.4.x
+    # replication checker when the mesh has additional (replicated) axes
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def check_shardable(h: int, w: int, n_shards: int, levels: int) -> None:
+    """Raise unless (h, w) supports a row-sharded `levels`-deep pyramid."""
+    if levels < 1:
+        raise ValueError("levels must be >= 1")
+    wl = w
+    for _ in range(levels):  # every level reflect-pads its width by 2
+        if wl < 3:
+            raise ValueError(
+                f"sharded transform needs W >= 3 at every level, got W={w} "
+                f"({wl} at some level) for levels={levels}"
+            )
+        wl = wl - wl // 2
+    step = n_shards << levels
+    if h % step or h // step < 2:
+        raise ValueError(
+            f"sharded transform needs H divisible by axis_size * 2**levels "
+            f"with >= 4 local rows at the coarsest level; got H={h}, "
+            f"axis_size={n_shards}, levels={levels}"
+        )
+
+
+def _row2(x: Array, start: int, stop: int) -> Array:
+    return jax.lax.slice_in_dim(x, start, stop, axis=-2)
+
+
+def _reflect_top(x: Array) -> Array:
+    """Rows [-2, -1] of the whole-point extension: [x[2], x[1]]."""
+    return jnp.concatenate([_row2(x, 2, 3), _row2(x, 1, 2)], axis=-2)
+
+
+def _reflect_bottom(x: Array) -> Array:
+    """Rows [H, H+1] of the whole-point extension: [x[H-2], x[H-3]]."""
+    n = x.shape[-2]
+    return jnp.concatenate([_row2(x, n - 2, n - 1), _row2(x, n - 3, n - 2)], axis=-2)
+
+
+def _exchange_rows(
+    top_send: Array,
+    bot_send: Array,
+    axis: str,
+    n: int,
+    top_edge: Array,
+    bot_edge: Array,
+) -> Tuple[Array, Array]:
+    """Swap border rows with spatial neighbors; edges take the given rows.
+
+    Device i receives ``bot_send`` of device i-1 (its top halo) and
+    ``top_send`` of device i+1 (its bottom halo).  One ppermute per
+    direction; the wire carries exactly the border rows.
+    """
+    idx = jax.lax.axis_index(axis)
+    down = [(i, i + 1) for i in range(n - 1)]
+    up = [(i + 1, i) for i in range(n - 1)]
+    recv_top = jax.lax.ppermute(bot_send, axis, down)
+    recv_bot = jax.lax.ppermute(top_send, axis, up)
+    top = jnp.where(idx == 0, top_edge, recv_top)
+    bot = jnp.where(idx == n - 1, bot_edge, recv_bot)
+    return top, bot
+
+
+def _pad_w_even(x: Array, halo: int = 2) -> Array:
+    """Reflect the last axis by ``halo`` and edge-pad to an even length."""
+    pad = [(0, 0)] * (x.ndim - 1) + [(halo, halo)]
+    xw = jnp.pad(x, pad, mode="reflect")
+    if xw.shape[-1] % 2:
+        xw = jnp.pad(xw, [(0, 0)] * (x.ndim - 1) + [(0, 1)], mode="edge")
+    return xw
+
+
+def _fwd_level_local(x: Array, mode: str, axis: str, n: int):
+    """One forward 2D level on a row shard, exchanging 2-row halos."""
+    w = x.shape[-1]
+    s_r, d_r = _fwd_axis_ext(_pad_w_even(x), -1, mode)
+    w_e, w_o = w - w // 2, w // 2
+    s_r = jax.lax.slice_in_dim(s_r, 0, w_e, axis=-1)
+    d_r = jax.lax.slice_in_dim(d_r, 0, w_o, axis=-1)
+    # one border buffer per direction: s_r | d_r side by side (2, w) rows
+    border = jnp.concatenate  # readability below
+    top_send = border([_row2(s_r, 0, 2), _row2(d_r, 0, 2)], axis=-1)
+    h_loc = s_r.shape[-2]
+    bot_send = border(
+        [_row2(s_r, h_loc - 2, h_loc), _row2(d_r, h_loc - 2, h_loc)], axis=-1
+    )
+    top_edge = border([_reflect_top(s_r), _reflect_top(d_r)], axis=-1)
+    bot_edge = border([_reflect_bottom(s_r), _reflect_bottom(d_r)], axis=-1)
+    top, bot = _exchange_rows(top_send, bot_send, axis, n, top_edge, bot_edge)
+    s_ext = jnp.concatenate(
+        [top[..., :w_e], s_r, bot[..., :w_e]], axis=-2
+    )
+    d_ext = jnp.concatenate(
+        [top[..., w_e:], d_r, bot[..., w_e:]], axis=-2
+    )
+    ll, lh = _fwd_axis_ext(s_ext, -2, mode)
+    hl, hh = _fwd_axis_ext(d_ext, -2, mode)
+    return ll, lh, hl, hh
+
+
+def _inv_axis_local(s: Array, d: Array, mode: str) -> Array:
+    """Device-local inverse along the last axis with reference boundaries.
+
+    Builds the 1-pair halos of ``_inv_axis_ext`` from the reference's own
+    edge policies: d[-1] := d[0]; trailing d := d[-1] for odd length
+    (plus one dead halo entry) and d[-2] for even; trailing s := s[-1].
+    """
+    n_e, n_o = s.shape[-1], d.shape[-1]
+    lead = jax.lax.slice_in_dim(d, 0, 1, axis=-1)
+    last = jax.lax.slice_in_dim(d, n_o - 1, n_o, axis=-1)
+    if n_e > n_o:  # odd length: d[n]:=d[n-1] + a never-read halo entry
+        tail = jnp.concatenate([last, last], axis=-1)
+    else:
+        tail = jax.lax.slice_in_dim(d, n_o - 2, n_o - 1, axis=-1)
+    d_ext = jnp.concatenate([lead, d, tail], axis=-1)  # n_e + 2
+    s_ext = jnp.concatenate(
+        [
+            jax.lax.slice_in_dim(s, 0, 1, axis=-1),
+            s,
+            jax.lax.slice_in_dim(s, n_e - 1, n_e, axis=-1),
+        ],
+        axis=-1,
+    )
+    out = _inv_axis_ext(s_ext, d_ext, -1, mode)  # 2 * n_e
+    return jax.lax.slice_in_dim(out, 0, n_e + n_o, axis=-1)
+
+
+def _inv_level_local(
+    ll: Array, lh: Array, hl: Array, hh: Array, mode: str, axis: str, n: int
+):
+    """One inverse 2D level on row-sharded bands (1 band-row halos)."""
+    n_loc = ll.shape[-2]
+    # neighbors' needs: prev device wants our FIRST s and d band rows
+    # (bottom halo), next device wants our LAST d band rows (top halo)
+    w_e, w_o = ll.shape[-1], hl.shape[-1]
+    last_d_rows = jnp.concatenate(  # flows down: next shard's d_top halo
+        [_row2(lh, n_loc - 1, n_loc), _row2(hh, n_loc - 1, n_loc)], axis=-1
+    )
+    first_rows = jnp.concatenate(  # flows up: prev shard's bottom halos
+        [_row2(ll, 0, 1), _row2(hl, 0, 1), _row2(lh, 0, 1), _row2(hh, 0, 1)],
+        axis=-1,
+    )
+    # global-edge policies (H even by construction): top d := d[0];
+    # bottom s := s[-1] (edge), bottom d := d[-2] (whole-point reflect)
+    top_edge = jnp.concatenate([_row2(lh, 0, 1), _row2(hh, 0, 1)], axis=-1)
+    bot_edge = jnp.concatenate(
+        [
+            _row2(ll, n_loc - 1, n_loc),
+            _row2(hl, n_loc - 1, n_loc),
+            _row2(lh, n_loc - 2, n_loc - 1),
+            _row2(hh, n_loc - 2, n_loc - 1),
+        ],
+        axis=-1,
+    )
+    # same exchange as the forward pass: my top halo is the PREVIOUS
+    # shard's down-flowing payload (its last d-role rows), my bottom halo
+    # is the NEXT shard's up-flowing payload (its first band rows)
+    top, bot = _exchange_rows(
+        first_rows, last_d_rows, axis, n, top_edge, bot_edge
+    )  # top: (1, w_e + w_o), bot: (1, 2*(w_e + w_o))
+    lh_top, hh_top = top[..., :w_e], top[..., w_e:]
+    ll_bot = bot[..., :w_e]
+    hl_bot = bot[..., w_e : w_e + w_o]
+    lh_bot = bot[..., w_e + w_o : 2 * w_e + w_o]
+    hh_bot = bot[..., 2 * w_e + w_o :]
+
+    def s_ext(b: Array, b_bot: Array) -> Array:
+        return jnp.concatenate([_row2(b, 0, 1), b, b_bot], axis=-2)
+
+    def d_ext(b: Array, b_top: Array, b_bot: Array) -> Array:
+        return jnp.concatenate([b_top, b, b_bot], axis=-2)
+
+    s_r = _inv_axis_ext(s_ext(ll, ll_bot), d_ext(lh, lh_top, lh_bot), -2, mode)
+    d_r = _inv_axis_ext(s_ext(hl, hl_bot), d_ext(hh, hh_top, hh_bot), -2, mode)
+    return _inv_axis_local(s_r, d_r, mode)
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrappers (cached per (mesh, axis, levels, mode, ndim)).
+# ---------------------------------------------------------------------------
+
+
+def _row_spec(ndim: int, axis: str):
+    """PartitionSpec sharding the row (-2) axis, via sharding.py rules."""
+    rules = {"rows": axis}
+    axes = (None,) * (ndim - 2) + ("rows", None)
+    return SH.spec_for(axes, rules)
+
+
+@functools.lru_cache(maxsize=None)
+def _fwd_sharded_fn(mesh: Mesh, axis: str, levels: int, mode: str, ndim: int):
+    n = mesh.shape[axis]
+    spec = _row_spec(ndim, axis)
+    out_specs = Pyramid2D(
+        ll=spec, details=tuple((spec, spec, spec) for _ in range(levels))
+    )
+
+    def local_fwd(x_loc: Array) -> Pyramid2D:
+        ll = x_loc
+        details = []
+        for _ in range(levels):
+            ll, lh, hl, hh = _fwd_level_local(ll, mode, axis, n)
+            details.append((lh, hl, hh))
+        return Pyramid2D(ll=ll, details=tuple(reversed(details)))
+
+    return jax.jit(_shard_map_compat(local_fwd, mesh, (spec,), out_specs))
+
+
+@functools.lru_cache(maxsize=None)
+def _inv_sharded_fn(mesh: Mesh, axis: str, levels: int, mode: str, ndim: int):
+    n = mesh.shape[axis]
+    spec = _row_spec(ndim, axis)
+    in_specs = (
+        Pyramid2D(
+            ll=spec, details=tuple((spec, spec, spec) for _ in range(levels))
+        ),
+    )
+
+    def local_inv(pyr: Pyramid2D) -> Array:
+        ll = pyr.ll
+        for lh, hl, hh in pyr.details:  # coarsest first
+            ll = _inv_level_local(ll, lh, hl, hh, mode, axis, n)
+        return ll
+
+    return jax.jit(_shard_map_compat(local_inv, mesh, in_specs, spec))
+
+
+def dwt53_fwd_2d_sharded(
+    x: Array,
+    mesh: Mesh,
+    levels: int = 1,
+    mode: str = "paper",
+    axis: str = "data",
+    backend: Optional[str] = None,  # noqa: ARG001 - reserved: local compute
+    # is the kernels' own interior math under XLA inside shard_map; a
+    # per-shard Pallas routing lands behind the same flag when validated
+) -> Pyramid2D:
+    """Row-sharded multi-level 2D forward transform over ``mesh[axis]``.
+
+    Bit-exact vs :func:`repro.kernels.dwt53_fwd_2d_multi`; only the 2-row
+    borders move between devices (one ppermute per direction per level).
+    """
+    _check_mode(mode)
+    if x.ndim < 2:
+        raise ValueError(f"need a (..., H, W) input, got {x.shape}")
+    check_shardable(x.shape[-2], x.shape[-1], mesh.shape[axis], levels)
+    fn = _fwd_sharded_fn(mesh, axis, levels, mode, x.ndim)
+    return fn(x.astype(_compute_dtype(x.dtype)))
+
+
+def dwt53_inv_2d_sharded(
+    pyr: Pyramid2D,
+    mesh: Mesh,
+    mode: str = "paper",
+    axis: str = "data",
+    backend: Optional[str] = None,  # noqa: ARG001 - see dwt53_fwd_2d_sharded
+) -> Array:
+    """Inverse of :func:`dwt53_fwd_2d_sharded` (same exchange pattern)."""
+    _check_mode(mode)
+    levels = len(pyr.details)
+    h = pyr.ll.shape[-2] * (1 << levels)
+    w = pyr.ll.shape[-1]
+    for lh, hl, _hh in pyr.details:
+        w = w + hl.shape[-1]
+    check_shardable(h, w, mesh.shape[axis], levels)
+    cdt = _compute_dtype(pyr.ll.dtype)
+    fn = _inv_sharded_fn(mesh, axis, levels, mode, pyr.ll.ndim)
+    cast = Pyramid2D(
+        ll=pyr.ll.astype(cdt),
+        details=tuple(
+            (lh.astype(cdt), hl.astype(cdt), hh.astype(cdt))
+            for lh, hl, hh in pyr.details
+        ),
+    )
+    return fn(cast)

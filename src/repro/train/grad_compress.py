@@ -48,6 +48,12 @@ class WaveletSyncConfig:
     # compiled pallas on TPU, jitted XLA reference elsewhere).  Resolved
     # at trace time of the train step, not per call.
     backend: Optional[str] = None
+    # spatial codec: matrix-shaped gradients (ndim >= 2 with both trailing
+    # dims transformable) run the fused multi-level 2D pyramid instead of
+    # the last-axis 1D transform — smoothness along both axes compacts
+    # into one LL band, and the transform stays sharding-aligned on the
+    # leading axes.  Off by default (wire format changes per leaf).
+    spatial_2d: bool = False
 
 
 def init_error_feedback(params: PyTree) -> PyTree:
@@ -63,6 +69,56 @@ def _ring_sum(x: jax.Array, axis_name: str, n: int) -> jax.Array:
         send = jax.lax.ppermute(send, axis_name, perm)
         acc = acc + send.astype(jnp.int32)
     return acc
+
+
+def _can_2d(g, levels: int) -> bool:
+    """True when a leaf's trailing two axes support a `levels`-deep 2D
+    pyramid (the spatial codec's eligibility test, decided at trace).
+    Defers to the kernels' own feasibility rule (lifting.check_levels_2d)
+    so eligibility can never drift from what the engine accepts."""
+    from repro.core import lifting
+
+    if g.ndim < 2:
+        return False
+    try:
+        lifting.check_levels_2d(g.shape[-2], g.shape[-1], levels)
+    except ValueError:
+        return False
+    return True
+
+
+def _tree_pmax(shifts, axis_name: str):
+    return jax.tree_util.tree_map(
+        lambda s: jax.lax.pmax(s, axis_name), shifts
+    )
+
+
+def _sync_leaf_2d(g, g32, scale, cfg: WaveletSyncConfig, axis_name: str, n_pods: int):
+    """Band sync for one matrix-shaped leaf through the 2D pyramid codec."""
+    pyr = C.forward_pyramid_2d(
+        g32, scale, cfg.levels, cfg.mode, backend=cfg.backend
+    )
+    shifts = _tree_pmax(C.pyramid2d_shifts(pyr), axis_name)
+    ll_q, details_q = C.quantize_pyramid_2d(pyr, shifts)
+    sum_ll = _ring_sum(ll_q, axis_name, n_pods)
+    sum_det = tuple(
+        tuple(_ring_sum(b, axis_name, n_pods) for b in lvl) for lvl in details_q
+    )
+    g_sync = (
+        C.decompress_pyramid_2d(
+            sum_ll, sum_det, shifts, scale, cfg.mode, backend=cfg.backend
+        )
+        / n_pods
+    )
+    own = C.decompress_pyramid_2d(
+        ll_q.astype(jnp.int32),
+        tuple(tuple(b.astype(jnp.int32) for b in lvl) for lvl in details_q),
+        shifts,
+        scale,
+        cfg.mode,
+        backend=cfg.backend,
+    )
+    return g_sync.astype(g.dtype), g32 - own
 
 
 def pod_sync_tree(
@@ -101,10 +157,14 @@ def pod_sync_tree(
                 backend=cfg.backend,
             )
             return g_sync.astype(g.dtype), g32 - own
-        # --- band-quantized codec, sharding-aligned (last-axis) ------------
-        # transforming along the tensor's own last axis keeps every band
-        # sharded exactly like the gradient, so the ring exchange ships
-        # only the local shard (a flatten-based codec all-gathers: §Perf)
+        # --- band-quantized codec, sharding-aligned ------------------------
+        # transforming along the tensor's own trailing axes keeps every
+        # band sharded exactly like the gradient, so the ring exchange
+        # ships only the local shard (a flatten-based codec all-gathers:
+        # §Perf).  spatial_2d routes matrix-shaped leaves through the
+        # fused 2D pyramid (kernels/fused2d.py tiled engine underneath).
+        if cfg.spatial_2d and _can_2d(g32, cfg.levels):
+            return _sync_leaf_2d(g, g32, scale, cfg, axis_name, n_pods)
         pyr = C.forward_bands_nd(
             g32, scale, cfg.levels, cfg.mode, backend=cfg.backend
         )
@@ -154,6 +214,9 @@ def pod_collective_bytes(params: PyTree, cfg: WaveletSyncConfig) -> Tuple[int, i
             m = 1 << cfg.levels
             n_pad = (p.size + m - 1) // m * m
             comp += (n_pad >> cfg.levels) * 4 + 4
+        elif cfg.spatial_2d and _can_2d(p, cfg.levels):
+            lead = p.size // (p.shape[-2] * p.shape[-1])
+            comp += lead * C.band_bytes_2d(p.shape[-2], p.shape[-1], cfg.levels)
         else:
             comp += C.band_bytes(p.size, cfg.levels)
     return raw, comp

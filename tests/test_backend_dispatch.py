@@ -1,5 +1,6 @@
 """Backend dispatch tests: resolution policy, overrides, entry point."""
 import os
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -109,3 +110,128 @@ def test_malformed_pyramid_rejected_on_every_backend():
     for name in ("xla", "interpret"):
         with pytest.raises(ValueError, match="band length mismatch"):
             K.dwt53_inv(bad, backend=name)
+
+
+# ---------------------------------------------------------------------------
+# Explain-mode resolution + degrade warnings (the silent-fallback fix).
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_backend_explain_names_the_reason():
+    name, reason = B.resolve_backend("xla", explain=True)
+    assert (name, reason) == ("xla", "explicit")
+    name, reason = B.resolve_backend(None, explain=True)
+    if os.environ.get("REPRO_DWT_BACKEND", "") in ("", "auto"):
+        assert reason == "platform-default"
+    with B.use_backend("interpret"):
+        assert B.resolve_backend(None, explain=True)[1] == "context-override"
+    name, reason = B.resolve_backend("pallas", explain=True)
+    if B.has_compiled_pallas():
+        assert (name, reason) == ("pallas", "explicit")
+    else:
+        assert (name, reason) == ("interpret", "degraded:off-accelerator")
+
+
+def test_env_var_reason(monkeypatch):
+    monkeypatch.setenv("REPRO_DWT_BACKEND", "xla")
+    assert B.resolve_backend(None, explain=True) == ("xla", "env-var")
+
+
+def test_degrade_warns_once():
+    B._warned_degrades.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        B.note_degrade("pallas", "xla", "budget: test reason")
+        B.note_degrade("pallas", "xla", "budget: test reason")
+    assert len(rec) == 1
+    assert "budget: test reason" in str(rec[0].message)
+
+
+def test_untileable_over_budget_image_degrades_with_warning():
+    """A (2, huge) request that cannot tile warns and stays bit-exact."""
+    from repro.kernels import fused2d, ref
+
+    w = B.fused2d_budget_elems() // 2 + 64
+    x = jnp.asarray(np.arange(2 * w).reshape(2, w) % 997, jnp.int32)
+    B._warned_degrades.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = fused2d.dwt53_fwd_2d(x, backend="interpret")
+    assert any("budget" in str(r.message) for r in rec)
+    np.testing.assert_array_equal(
+        np.asarray(got.ll), np.asarray(ref.dwt53_fwd_2d(x).ll)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Derived VMEM budget + tile selection (REPRO_DWT_TILE override, cache).
+# ---------------------------------------------------------------------------
+
+
+def test_budget_is_derived_and_positive():
+    assert B.vmem_budget_bytes() > 0
+    assert B.fused2d_budget_elems() >= 8 * 1024
+    assert (
+        B.fused2d_budget_elems()
+        <= B.vmem_budget_bytes() // (4 * B.FUSED2D_RESIDENT_BUFFERS)
+    )
+
+
+def test_vmem_env_override(monkeypatch):
+    """Budget caches are keyed on the env state — no manual clearing."""
+    baseline = B.vmem_budget_bytes()
+    monkeypatch.setenv("REPRO_DWT_VMEM_MB", "32")
+    assert B.vmem_budget_bytes() == 32 * 1024 * 1024
+    monkeypatch.delenv("REPRO_DWT_VMEM_MB")
+    assert B.vmem_budget_bytes() == baseline
+
+
+def test_pick_tile_env_override(monkeypatch):
+    assert not B.tile_forced()
+    default_tile = B.pick_tile(4096, 4096)
+    monkeypatch.setenv("REPRO_DWT_TILE", "16")
+    assert B.tile_forced()
+    assert B.pick_tile(4096, 4096) == (16, 16)
+    monkeypatch.setenv("REPRO_DWT_TILE", "8,32")
+    assert B.pick_tile(4096, 4096) == (8, 32)
+    monkeypatch.setenv("REPRO_DWT_TILE", "7")  # odd: rejected
+    with pytest.raises(ValueError, match="even"):
+        B.pick_tile(4096, 4096)
+    monkeypatch.delenv("REPRO_DWT_TILE")
+    assert B.pick_tile(4096, 4096) == default_tile  # no stale override
+
+
+def test_pick_tile_defaults_fit_budget_and_image():
+    th, tw = B.pick_tile(1 << 20, 1 << 20)
+    assert th % 2 == 0 and tw % 2 == 0
+    assert (th + 4) * (tw + 4) <= B.fused2d_budget_elems()
+    # small images never get tiles larger than themselves (+odd pad)
+    th, tw = B.pick_tile(10, 11)
+    assert th <= 10 and tw <= 12
+    # per-(shape, env) cache: repeat lookups hit
+    assert B.pick_tile(10, 11) == (th, tw)
+    assert B._pick_tile.cache_info().hits >= 1
+
+
+def test_env_override_retraces_traced_multilevel_shapes(monkeypatch):
+    """A shape already traced by the multi-level jit must re-dispatch when
+    REPRO_DWT_TILE changes — the override is never silently ignored."""
+    from repro import kernels as K
+    from repro.kernels import fused2d, ref, tiled2d
+
+    x = jnp.asarray(np.arange(30 * 34).reshape(30, 34) % 251, jnp.int32)
+    before = K.dwt53_fwd_2d_multi(x, levels=2, backend="interpret")
+    tiled_calls = []
+    orig = tiled2d.fwd2d_tiled
+    monkeypatch.setattr(
+        tiled2d, "fwd2d_tiled",
+        lambda *a, **k: tiled_calls.append(a) or orig(*a, **k),
+    )
+    monkeypatch.setenv("REPRO_DWT_TILE", "8")
+    assert fused2d.plan_2d(30, 34, backend="interpret") == "tiled-interpret"
+    after = K.dwt53_fwd_2d_multi(x, levels=2, backend="interpret")
+    assert tiled_calls, "env override did not reach the traced shape"
+    np.testing.assert_array_equal(np.asarray(after.ll), np.asarray(before.ll))
+    np.testing.assert_array_equal(
+        np.asarray(after.ll), np.asarray(ref.dwt53_fwd_2d_multi(x, levels=2).ll)
+    )

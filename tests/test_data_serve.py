@@ -91,3 +91,34 @@ def test_serve_greedy_deterministic():
         done = eng.run([Request(uid=1, prompt=np.array([4, 4, 4], np.int32), max_new=5)])
         outs.append(tuple(done[0].out_tokens))
     assert outs[0] == outs[1]
+
+
+def test_wavelet_serve_engine_batched():
+    """The 2D transform serving engine: micro-batched fused dispatches."""
+    from repro.core import lifting
+    from repro.serve.serve_step import TransformRequest, WaveletServeEngine
+
+    rng = np.random.default_rng(41)
+    eng = WaveletServeEngine(
+        height=32, width=48, batch_slots=4, levels=2, backend="interpret"
+    )
+    reqs = [
+        TransformRequest(uid=i, image=rng.integers(0, 255, (32, 48)).astype(np.int32))
+        for i in range(7)
+    ]
+    done = eng.run(reqs)
+    assert len(done) == 7 and all(r.done for r in done)
+    # last request (in the second, partially-filled micro-batch) is exact
+    want = lifting.dwt53_fwd_2d_multi(jnp.asarray(reqs[6].image, jnp.int32), levels=2)
+    np.testing.assert_array_equal(np.asarray(done[6].pyramid.ll), np.asarray(want.ll))
+    for got_lvl, want_lvl in zip(done[6].pyramid.details, want.details):
+        for g, w in zip(got_lvl, want_lvl):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_wavelet_serve_engine_rejects_wrong_bucket():
+    from repro.serve.serve_step import TransformRequest, WaveletServeEngine
+
+    eng = WaveletServeEngine(height=16, width=16, batch_slots=2, levels=1)
+    with pytest.raises(ValueError, match="bucket"):
+        eng.submit(TransformRequest(uid=1, image=np.zeros((8, 8), np.int32)))

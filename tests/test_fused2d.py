@@ -57,16 +57,20 @@ def test_fwd2d_int8_promotes():
     np.testing.assert_array_equal(np.asarray(got.ll), np.asarray(want.ll))
 
 
-def test_fwd2d_large_image_falls_back():
-    """Images past the VMEM budget take the XLA path and stay bit-exact."""
+def test_fwd2d_large_image_takes_tiled_pallas_path():
+    """Images past the whole-image VMEM budget stay on the Pallas engine
+    (the tiled halo-window kernels) — there is no XLA cliff anymore."""
     from repro.kernels import backend as B
 
-    h = w = int(np.sqrt(B.FUSED2D_MAX_ELEMS)) + 8  # just past the budget
+    h = w = int(np.sqrt(B.fused2d_budget_elems())) + 8  # just past budget
+    assert fused2d._use_tiled(h, w)  # dispatch decision, pre-compute
     x = jnp.asarray(RNG.integers(-100, 100, size=(h, w)), jnp.int32)
     got = fused2d.dwt53_fwd_2d(x, backend="interpret")
     want = ref.dwt53_fwd_2d(x)
     np.testing.assert_array_equal(np.asarray(got.ll), np.asarray(want.ll))
     np.testing.assert_array_equal(np.asarray(got.hh), np.asarray(want.hh))
+    xr = fused2d.dwt53_inv_2d(got, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(x))
 
 
 def test_fwd2d_rejects_degenerate():
@@ -74,3 +78,52 @@ def test_fwd2d_rejects_degenerate():
         fused2d.dwt53_fwd_2d(jnp.zeros((1, 8), jnp.int32))
     with pytest.raises(ValueError):
         fused2d.dwt53_fwd_2d(jnp.zeros((8,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-level 2D pyramid (one compiled dispatch).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("hw,levels", [((32, 48), 2), ((33, 47), 3), ((16, 16), 1)])
+def test_fwd2d_multi_matches_ref(hw, levels, mode, backend):
+    from repro.core import lifting
+
+    x = jnp.asarray(RNG.integers(-1000, 1000, size=(2,) + hw), jnp.int32)
+    got = fused2d.dwt53_fwd_2d_multi(x, levels=levels, mode=mode, backend=backend)
+    want = lifting.dwt53_fwd_2d_multi(x, levels=levels, mode=mode)
+    np.testing.assert_array_equal(np.asarray(got.ll), np.asarray(want.ll))
+    for got_lvl, want_lvl in zip(got.details, want.details):
+        for g, w in zip(got_lvl, want_lvl):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    xr = fused2d.dwt53_inv_2d_multi(got, mode=mode, backend=backend)
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(x))
+
+
+def test_fwd2d_multi_is_one_dispatch():
+    """All pyramid levels trace into a single compiled computation."""
+    fused2d._fwd2d_multi_kernel._clear_cache()
+    x = jnp.asarray(RNG.integers(0, 255, size=(1, 64, 64)), jnp.int32)
+    fused2d.dwt53_fwd_2d_multi(x, levels=3, backend="interpret")
+    fused2d.dwt53_fwd_2d_multi(x, levels=3, backend="interpret")
+    assert fused2d._fwd2d_multi_kernel._cache_size() == 1
+
+
+def test_fwd2d_multi_rejects_too_deep():
+    with pytest.raises(ValueError, match="too small"):
+        fused2d.dwt53_fwd_2d_multi(jnp.zeros((4, 4), jnp.int32), levels=4)
+
+
+def test_inv2d_multi_rejects_malformed():
+    from repro.core import lifting
+
+    x = jnp.asarray(RNG.integers(0, 255, size=(24, 24)), jnp.int32)
+    pyr = lifting.dwt53_fwd_2d_multi(x, levels=2)
+    bad = lifting.Pyramid2D(
+        ll=jnp.pad(pyr.ll, ((0, 1), (0, 0))),
+        details=pyr.details,
+    )
+    with pytest.raises(ValueError, match="band shape mismatch"):
+        fused2d.dwt53_inv_2d_multi(bad)
