@@ -180,6 +180,44 @@ def run_json() -> Tuple[list, dict]:
     t_batch_loop = _time_us(per_image, xb, iters=3)
     imgs_per_s = SHAPE_2D_BATCH[0] / (t_batch_fused * 1e-6)
 
+    # --- per-scheme engine rows: Table-2 op ledger + roundtrip timing ----
+    # every registered lifting scheme through the fused 1D and 2D engines;
+    # the smoke gate asserts multipliers == 0 and bit-exactness per scheme
+    x_s = jnp.asarray(rng.integers(-4096, 4096, size=(8, 4096)), jnp.int32)
+    img_s = jnp.asarray(rng.integers(-4096, 4096, size=(128, 128)), jnp.int32)
+    schemes_payload = {}
+    for name in K.available_schemes():
+        sch = K.get_scheme(name)
+        ledger = sch.pair_op_counts()
+        t_s1 = _time_us(
+            lambda a, nm=name: K.dwt_fwd(a, levels=3, scheme=nm), x_s, iters=10
+        )
+        pyr_s = K.dwt_fwd(x_s, levels=3, scheme=name)
+        ok = bool(
+            np.array_equal(
+                np.asarray(K.dwt_inv(pyr_s, scheme=name)), np.asarray(x_s)
+            )
+        )
+        t_s2 = _time_us(
+            lambda a, nm=name: K.dwt_fwd_2d(a, scheme=nm), img_s, iters=10
+        )
+        b_s = K.dwt_fwd_2d(img_s, scheme=name)
+        ok = ok and bool(
+            np.array_equal(
+                np.asarray(K.dwt_inv_2d(b_s, scheme=name)), np.asarray(img_s)
+            )
+        )
+        schemes_payload[name] = {
+            "halo": sch.halo,
+            "symmetric": sch.symmetric,
+            "adders_per_pair": ledger["adders"],
+            "shifters_per_pair": ledger["shifters"],
+            "multipliers_per_pair": ledger["multipliers"],
+            "fwd_1d_us": round(t_s1, 1),
+            "fwd_2d_us": round(t_s2, 1),
+            "bit_exact": ok,
+        }
+
     payload = {
         "platform": B.platform(),
         "default_backend": B.default_backend(),
@@ -222,6 +260,7 @@ def run_json() -> Tuple[list, dict]:
             "speedup_batched_vs_loop": round(t_batch_loop / t_batch_fused, 2),
             "images_per_s": round(imgs_per_s, 1),
         },
+        "schemes": schemes_payload,
     }
     rows = [
         ("kernels.platform", B.platform(), "probed once at import"),
@@ -279,6 +318,16 @@ def run_json() -> Tuple[list, dict]:
             f"{round(t_batch_loop / t_batch_fused, 2)}x",
         ),
     ]
+    for name, row in schemes_payload.items():
+        rows.append(
+            (
+                f"kernels.scheme.{name}.fwd_1d_us",
+                row["fwd_1d_us"],
+                f"(8,4096)x3 levels; halo={row['halo']}, "
+                f"{row['adders_per_pair']}add/{row['shifters_per_pair']}shift"
+                f"/pair, bit_exact={row['bit_exact']}",
+            )
+        )
     return rows, payload
 
 

@@ -11,7 +11,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
+echo "== tier-1 tests (stray RuntimeWarnings are errors) =="
+# tests/conftest.py escalates every RuntimeWarning to an error except the
+# dedicated BackendDegradeWarning category (the expected off-accelerator
+# notice), so a degrade-warning leak like the seed's fails this gate.
 python -m pytest -x -q
 
 echo "== benchmarks: op counts + kernel engine =="
@@ -37,14 +40,39 @@ for key, want in [
     ("table2.ls.adders", 4.0),
     ("table2.ls.shifters", 2.0),
     ("table2.ls.multipliers", 0.0),
+    ("table2.scheme.cdf53.adders", 4.0),
+    ("table2.scheme.cdf53.shifters", 2.0),
 ]:
     got = float(rows[key])
     if got != want:
         fails.append(f"{key}: got {got}, want {want}")
+# every registered scheme must trace to ZERO multiplies (the registry's
+# shift-add contract) — schemes are discovered from the emitted rows so
+# a newly registered scheme is gated automatically
+scheme_mul_keys = [
+    k for k in rows if k.startswith("table2.scheme.") and k.endswith(".multipliers")
+]
+if not scheme_mul_keys:
+    fails.append("no per-scheme table2 rows emitted")
+for key in scheme_mul_keys:
+    if float(rows[key]) != 0.0:
+        fails.append(f"{key}: got {rows[key]}, want 0 (multiplierless)")
 
 bench = json.load(open("BENCH_kernels.json"))
 if not bench["bit_exact"]:
     fails.append("kernel outputs diverged from the kernels/ref oracle")
+
+# per-scheme engine rows: every registered scheme must round-trip
+# bit-exactly through the fused 1D + 2D engines
+schemes = bench.get("schemes", {})
+for need in ("cdf53", "haar", "97m", "cdf22"):
+    if need not in schemes:
+        fails.append(f"BENCH_kernels.json missing scheme row for {need!r}")
+for name, row in schemes.items():
+    if not row["bit_exact"]:
+        fails.append(f"scheme {name}: engine round-trip diverged")
+    if row["multipliers_per_pair"] != 0:
+        fails.append(f"scheme {name}: ledger shows multiplies")
 for section in ("1d_multilevel", "2d"):
     s = bench[section]["speedup_fused_vs_interpret"]
     if s <= 1.0:
@@ -90,7 +118,8 @@ print(
     f"2d={bench['2d']['speedup_fused_vs_interpret']}x; "
     f"2d_large plan={large['plan']} fwd={large['fwd_us']}us; "
     f"pyramid fused/per-level={pyr['speedup_fused_vs_per_level']}x; "
-    f"batched {bench['2d_batched']['images_per_s']} img/s "
+    f"batched {bench['2d_batched']['images_per_s']} img/s; "
+    f"schemes bit-exact: {sorted(schemes)} "
     f"(backend={bench['default_backend']}, platform={bench['platform']})"
 )
 PY

@@ -47,6 +47,21 @@ def main():
     s_i, d_i = ops.dwt53_fwd_1d(big, backend="interpret")
     print("interpret == compiled?", bool((s_i == s_k).all() and (d_i == d_k).all()))
 
+    # --- scheme selection: the (5,3) is one entry in a lifting-scheme
+    # registry; every transform takes scheme="haar" / "cdf22" / "97m" /
+    # anything you register (core/schemes.py §9) — same multiplierless
+    # shift-add contract, same bit-exact invertibility, derived halos ----
+    from repro.core import schemes as SCH
+
+    for name in SCH.available_schemes():
+        sch = SCH.get_scheme(name)
+        s_n, d_n = ops.dwt_fwd_1d(big, scheme=name)
+        ok = bool((ops.dwt_inv_1d(s_n, d_n, scheme=name) == big).all())
+        print(
+            f"scheme {name:6s} halo={sch.halo} "
+            f"ops/pair={sch.pair_op_counts()} lossless? {ok}"
+        )
+
 
 if __name__ == "__main__":
     main()

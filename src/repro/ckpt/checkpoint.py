@@ -66,10 +66,12 @@ def _quantize_for_wz(arr: np.ndarray, lim: float) -> Tuple[np.ndarray, float]:
     return q.astype(np.int32), scale
 
 
-def _encode_wz(arr: np.ndarray, wavelet_levels: int) -> Tuple[bytes, Dict]:
+def _encode_wz(
+    arr: np.ndarray, wavelet_levels: int, scheme: str = "cdf53"
+) -> Tuple[bytes, Dict]:
     import jax.numpy as jnp
 
-    # transform headroom: the (5,3) bands grow ~1 bit/level, so quantize
+    # transform headroom: the lifting bands grow ~1 bit/level, so quantize
     # to int16 >> levels so the packed bands still fit int16 exactly
     q, scale = _quantize_for_wz(arr, float(32767 >> (wavelet_levels + 1)))
     flat = q.reshape(-1)
@@ -77,9 +79,14 @@ def _encode_wz(arr: np.ndarray, wavelet_levels: int) -> Tuple[bytes, Dict]:
     pad = (-len(flat)) % m
     if pad:
         flat = np.pad(flat, (0, pad))
-    pyr = K.dwt53_fwd(jnp.asarray(flat[None]), levels=wavelet_levels)
+    pyr = K.dwt_fwd(jnp.asarray(flat[None]), levels=wavelet_levels, scheme=scheme)
     packed = np.asarray(K.pack(pyr))[0].astype(np.int16)
-    meta = {"scale": scale, "padded_len": int(len(flat)), "levels": wavelet_levels}
+    meta = {
+        "scale": scale,
+        "padded_len": int(len(flat)),
+        "levels": wavelet_levels,
+        "scheme": scheme,
+    }
     return zlib.compress(packed.tobytes(), level=1), meta
 
 
@@ -96,7 +103,9 @@ def _wz2d_levels(h: int, w: int, levels: int) -> int:
     return max(1, min(levels, 3, lifting.max_levels_2d(h, w)))
 
 
-def _encode_wz2d(arr: np.ndarray, wavelet_levels: int) -> Tuple[bytes, Dict]:
+def _encode_wz2d(
+    arr: np.ndarray, wavelet_levels: int, scheme: str = "cdf53"
+) -> Tuple[bytes, Dict]:
     """2D Mallat-pyramid codec for matrix-shaped leaves.
 
     Smooth tensors compact into the single small LL band along BOTH axes,
@@ -111,24 +120,28 @@ def _encode_wz2d(arr: np.ndarray, wavelet_levels: int) -> Tuple[bytes, Dict]:
     levels = _wz2d_levels(h, w, wavelet_levels)
     # 2D headroom: ~1 bit per level per AXIS -> 2 bits per level
     q, scale = _quantize_for_wz(arr, float(32767 >> (2 * levels + 1)))
-    pyr = K.dwt53_fwd_2d_multi(jnp.asarray(q.reshape(-1, h, w)), levels=levels)
+    pyr = K.dwt_fwd_2d_multi(
+        jnp.asarray(q.reshape(-1, h, w)), levels=levels, scheme=scheme
+    )
     packed = np.asarray(K.pack2d(pyr)).astype(np.int16)
-    meta = {"scale": scale, "levels": levels, "enc": "2d"}
+    meta = {"scale": scale, "levels": levels, "enc": "2d", "scheme": scheme}
     return zlib.compress(packed.tobytes(), level=1), meta
 
 
-def _encode(arr: np.ndarray, codec: str, wavelet_levels: int) -> Tuple[bytes, Dict]:
+def _encode(
+    arr: np.ndarray, codec: str, wavelet_levels: int, scheme: str = "cdf53"
+) -> Tuple[bytes, Dict]:
     meta: Dict[str, Any] = {}
     if codec == "raw":
         return arr.tobytes(), meta
     if codec == "z":
         return zlib.compress(arr.tobytes(), level=1), meta
     if codec == "wz":
-        return _encode_wz(arr, wavelet_levels)
+        return _encode_wz(arr, wavelet_levels, scheme)
     if codec == "wz2d":
         if arr.ndim >= 2 and arr.shape[-1] >= 4 and arr.shape[-2] >= 4:
-            return _encode_wz2d(arr, wavelet_levels)
-        data, meta = _encode_wz(arr, wavelet_levels)  # vectors/scalars: 1D
+            return _encode_wz2d(arr, wavelet_levels, scheme)
+        data, meta = _encode_wz(arr, wavelet_levels, scheme)  # vectors: 1D
         meta["enc"] = "1d"
         return data, meta
     raise ValueError(codec)
@@ -140,7 +153,7 @@ def _decode_wz(data: bytes, shape, dtype, meta: Dict) -> np.ndarray:
     packed = np.frombuffer(zlib.decompress(data), dtype=np.int16).astype(np.int32)
     n, levels = meta["padded_len"], meta["levels"]
     pyr = K.unpack(jnp.asarray(packed[None]), n, levels)
-    flat = np.asarray(K.dwt53_inv(pyr))[0]
+    flat = np.asarray(K.dwt_inv(pyr, scheme=meta.get("scheme", "cdf53")))[0]
     count = int(np.prod(shape)) if shape else 1
     vals = flat[:count].astype(np.float32) * meta["scale"]
     return vals.reshape(shape).astype(dtype)
@@ -154,7 +167,7 @@ def _decode_wz2d(data: bytes, shape, dtype, meta: Dict) -> np.ndarray:
     packed = np.frombuffer(zlib.decompress(data), dtype=np.int16).astype(np.int32)
     flat = jnp.asarray(packed.reshape(bsz, -1))
     pyr = K.unpack2d(flat, h, w, meta["levels"])
-    x = np.asarray(K.dwt53_inv_2d_multi(pyr))
+    x = np.asarray(K.dwt_inv_2d_multi(pyr, scheme=meta.get("scheme", "cdf53")))
     return (x.astype(np.float32) * meta["scale"]).reshape(shape).astype(dtype)
 
 
@@ -176,8 +189,9 @@ def _decode(data: bytes, shape, dtype, codec: str, meta: Dict) -> np.ndarray:
 class CheckpointManager:
     directory: str | Path
     keep: int = 3
-    codec: str = "z"  # raw | z | wz
+    codec: str = "z"  # raw | z | wz | wz2d
     wavelet_levels: int = 2
+    wavelet_scheme: str = "cdf53"  # lifting scheme for wz/wz2d payloads
     host_id: int = 0
     n_hosts: int = 1
 
@@ -212,7 +226,9 @@ class CheckpointManager:
         manifest: Dict[str, Dict] = {}
         for name, leaf in _leaf_paths(tree):
             arr = np.asarray(leaf)
-            data, meta = _encode(arr, self.codec, self.wavelet_levels)
+            data, meta = _encode(
+                arr, self.codec, self.wavelet_levels, self.wavelet_scheme
+            )
             fname = name.replace("/", "__") + ".bin"
             (tmp_dir / fname).write_bytes(data)
             manifest[name] = {

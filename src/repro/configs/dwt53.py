@@ -1,5 +1,9 @@
-"""The paper's own 'architecture': the integer (5,3) lifting DWT module
-benchmark configs (signal lengths / dtypes from the paper's tests)."""
+"""The paper's own 'architecture': the integer lifting DWT module
+benchmark configs (signal lengths / dtypes from the paper's tests).
+
+``scheme`` names a lifting scheme from the registry
+(``repro.core.schemes.available_schemes()``); the paper's worked example
+is ``cdf53`` and stays the default everywhere."""
 from dataclasses import dataclass
 from typing import Tuple
 
@@ -12,6 +16,7 @@ class DWTConfig:
     dtype: str
     levels: int
     mode: str = "paper"
+    scheme: str = "cdf53"
 
 
 # Fig.5: 64 samples, 8-bit positive, normal distribution
@@ -20,5 +25,8 @@ FIG5 = DWTConfig("fig5", 64, 1, "int16", 1)
 TABLE3 = DWTConfig("table3", 256, 1, "int16", 1)
 # throughput-scale config for the TPU kernel path
 LARGE = DWTConfig("large", 65536, 64, "int32", 4)
+# filter-bank variants: same large workload through the other schemes
+LARGE_HAAR = DWTConfig("large_haar", 65536, 64, "int32", 4, scheme="haar")
+LARGE_97M = DWTConfig("large_97m", 65536, 64, "int32", 4, scheme="97m")
 
-ALL: Tuple[DWTConfig, ...] = (FIG5, TABLE3, LARGE)
+ALL: Tuple[DWTConfig, ...] = (FIG5, TABLE3, LARGE, LARGE_HAAR, LARGE_97M)

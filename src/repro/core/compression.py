@@ -93,11 +93,12 @@ def compress_lowband(
     levels: int,
     mode: str = "paper",
     backend: Optional[str] = None,
+    scheme: str = "cdf53",
 ) -> CompressedBand:
     """Quantize + integer DWT, keep only the approximation band."""
     lines, n_orig = _flatten_pad(g, levels)
     q = quantize(lines, scale)
-    pyr = K.dwt53_fwd(q, levels=levels, mode=mode, backend=backend)
+    pyr = K.dwt_fwd(q, levels=levels, mode=mode, backend=backend, scheme=scheme)
     return CompressedBand(low=pyr.approx, scale=scale, n=lines.size, levels=levels)
 
 
@@ -106,6 +107,7 @@ def decompress_lowband(
     out_shape,
     mode: str = "paper",
     backend: Optional[str] = None,
+    scheme: str = "cdf53",
 ) -> jax.Array:
     """Inverse DWT with zeroed detail bands, dequantize, reshape."""
     n_lines, a_len = band.low.shape
@@ -113,7 +115,7 @@ def decompress_lowband(
     _, d_lens = lifting.band_sizes(line, band.levels)
     details = tuple(jnp.zeros((n_lines, dl), band.low.dtype) for dl in d_lens)
     pyr = lifting.WaveletPyramid(approx=band.low, details=details)
-    flat = K.dwt53_inv(pyr, mode=mode, backend=backend).reshape(-1)
+    flat = K.dwt_inv(pyr, mode=mode, backend=backend, scheme=scheme).reshape(-1)
     n_out = 1
     for s in out_shape:
         n_out *= s
@@ -122,12 +124,12 @@ def decompress_lowband(
 
 
 def lossy_roundtrip(
-    g: jax.Array, levels: int, mode: str = "paper"
+    g: jax.Array, levels: int, mode: str = "paper", scheme: str = "cdf53"
 ) -> Tuple[jax.Array, jax.Array]:
     """g -> lowband channel -> g_hat. Returns (g_hat, residual)."""
     scale = tensor_scale(g)
-    band = compress_lowband(g, scale, levels, mode)
-    g_hat = decompress_lowband(band, g.shape, mode).astype(g.dtype)
+    band = compress_lowband(g, scale, levels, mode, scheme=scheme)
+    g_hat = decompress_lowband(band, g.shape, mode, scheme=scheme).astype(g.dtype)
     return g_hat, (g.astype(jnp.float32) - g_hat.astype(jnp.float32))
 
 
@@ -180,11 +182,12 @@ def forward_bands(
     levels: int,
     mode: str = "paper",
     backend: Optional[str] = None,
+    scheme: str = "cdf53",
 ) -> Tuple[jax.Array, Tuple[jax.Array, ...], int]:
     """fp tensor -> int32 DWT bands ((lines, a), details, padded_len)."""
     lines, _ = _flatten_pad(g, levels)
     q = quantize(lines, scale)
-    pyr = K.dwt53_fwd(q, levels=levels, mode=mode, backend=backend)
+    pyr = K.dwt_fwd(q, levels=levels, mode=mode, backend=backend, scheme=scheme)
     return pyr.approx, tuple(pyr.details), lines.size
 
 
@@ -231,13 +234,16 @@ def compress_bands(
     mode: str = "paper",
     shifts: Optional[Tuple[jax.Array, Tuple[jax.Array, ...]]] = None,
     backend: Optional[str] = None,
+    scheme: str = "cdf53",
 ) -> BandQuantized:
     """fp tensor -> integer DWT -> per-band int16/int8 quantization.
 
     ``shifts`` may be supplied (e.g. the pod-global max of each band's
     shift) so all participants quantize identically.
     """
-    approx, details, n = forward_bands(g, scale, levels, mode, backend=backend)
+    approx, details, n = forward_bands(
+        g, scale, levels, mode, backend=backend, scheme=scheme
+    )
     if shifts is None:
         shifts = band_shifts(approx, details)
     return quantize_bands(approx, details, shifts, scale, n, levels)
@@ -250,6 +256,7 @@ def decompress_bands(
     approx_i32: Optional[jax.Array] = None,
     details_i32: Optional[Tuple[jax.Array, ...]] = None,
     backend: Optional[str] = None,
+    scheme: str = "cdf53",
 ) -> jax.Array:
     """Inverse of compress_bands. ``*_i32`` overrides let callers pass
     locally-accumulated (summed) integer bands (pod sync path)."""
@@ -264,7 +271,7 @@ def decompress_bands(
         jnp.left_shift(d, sh) for d, sh in zip(details, bq.detail_shifts)
     )
     pyr = lifting.WaveletPyramid(approx=approx, details=details)
-    flat = K.dwt53_inv(pyr, mode=mode, backend=backend).reshape(-1)
+    flat = K.dwt_inv(pyr, mode=mode, backend=backend, scheme=scheme).reshape(-1)
     n_out = 1
     for s in out_shape:
         n_out *= s
@@ -272,12 +279,12 @@ def decompress_bands(
 
 
 def band_quantized_roundtrip(
-    g: jax.Array, levels: int, mode: str = "paper"
+    g: jax.Array, levels: int, mode: str = "paper", scheme: str = "cdf53"
 ) -> Tuple[jax.Array, jax.Array]:
     """g -> band-quantized channel -> g_hat. Returns (g_hat, residual)."""
     scale = tensor_scale(g)
-    bq = compress_bands(g, scale, levels, mode)
-    g_hat = decompress_bands(bq, g.shape, mode).astype(g.dtype)
+    bq = compress_bands(g, scale, levels, mode, scheme=scheme)
+    g_hat = decompress_bands(bq, g.shape, mode, scheme=scheme).astype(g.dtype)
     return g_hat, (g.astype(jnp.float32) - g_hat.astype(jnp.float32))
 
 
@@ -299,12 +306,13 @@ def forward_bands_nd(
     levels: int,
     mode: str = "paper",
     backend: Optional[str] = None,
+    scheme: str = "cdf53",
 ) -> lifting.WaveletPyramid:
     """Quantize + integer DWT along the LAST axis (sharding-preserving)."""
     q = quantize(g, scale)
     if q.ndim == 0:
         q = q.reshape(1)
-    return K.dwt53_fwd(q, levels=levels, mode=mode, backend=backend)
+    return K.dwt_fwd(q, levels=levels, mode=mode, backend=backend, scheme=scheme)
 
 
 def quantize_pyramid(
@@ -340,14 +348,16 @@ def decompress_bands_nd(
     out_shape,
     mode: str = "paper",
     backend: Optional[str] = None,
+    scheme: str = "cdf53",
 ) -> jax.Array:
     a_sh, d_shs = shifts
     approx = jnp.left_shift(approx_i32, a_sh)
     details = tuple(jnp.left_shift(d, sh) for d, sh in zip(details_i32, d_shs))
-    flat = K.dwt53_inv(
+    flat = K.dwt_inv(
         lifting.WaveletPyramid(approx=approx, details=details),
         mode=mode,
         backend=backend,
+        scheme=scheme,
     )
     return dequantize(flat.reshape(out_shape), scale)
 
@@ -372,10 +382,13 @@ def forward_pyramid_2d(
     levels: int,
     mode: str = "paper",
     backend: Optional[str] = None,
+    scheme: str = "cdf53",
 ) -> lifting.Pyramid2D:
     """Quantize + integer 2D DWT over the last two axes (batched lead)."""
     q = quantize(g, scale)
-    return K.dwt53_fwd_2d_multi(q, levels=levels, mode=mode, backend=backend)
+    return K.dwt_fwd_2d_multi(
+        q, levels=levels, mode=mode, backend=backend, scheme=scheme
+    )
 
 
 def pyramid2d_shifts(pyr: lifting.Pyramid2D):
@@ -413,6 +426,7 @@ def decompress_pyramid_2d(
     scale: jax.Array,
     mode: str = "paper",
     backend: Optional[str] = None,
+    scheme: str = "cdf53",
 ) -> jax.Array:
     """Un-shift, inverse 2D pyramid (one fused dispatch), dequantize."""
     ll_sh, det_shs = shifts
@@ -423,16 +437,17 @@ def decompress_pyramid_2d(
             for lvl, lvl_shs in zip(details_i32, det_shs)
         ),
     )
-    x = K.dwt53_inv_2d_multi(pyr, mode=mode, backend=backend)
+    x = K.dwt_inv_2d_multi(pyr, mode=mode, backend=backend, scheme=scheme)
     return dequantize(x, scale)
 
 
 def band_quantized_roundtrip_2d(
-    g: jax.Array, levels: int, mode: str = "paper", backend: Optional[str] = None
+    g: jax.Array, levels: int, mode: str = "paper",
+    backend: Optional[str] = None, scheme: str = "cdf53",
 ) -> Tuple[jax.Array, jax.Array]:
     """g -> 2D band-quantized channel -> g_hat. Returns (g_hat, residual)."""
     scale = tensor_scale(g)
-    pyr = forward_pyramid_2d(g, scale, levels, mode, backend=backend)
+    pyr = forward_pyramid_2d(g, scale, levels, mode, backend=backend, scheme=scheme)
     shifts = pyramid2d_shifts(pyr)
     ll_q, details_q = quantize_pyramid_2d(pyr, shifts)
     g_hat = decompress_pyramid_2d(
@@ -442,6 +457,7 @@ def band_quantized_roundtrip_2d(
         scale,
         mode,
         backend=backend,
+        scheme=scheme,
     ).astype(g.dtype)
     return g_hat, (g.astype(jnp.float32) - g_hat.astype(jnp.float32))
 

@@ -1,45 +1,62 @@
-"""Integer (5,3) lifting-scheme DWT — the paper's core algorithm.
+"""Integer lifting-scheme DWT — the paper's core algorithm, generalized.
 
 Implements Kolev (2010) "Multiplierless Modules for Forward and Backward
-Integer Wavelet Transform":
+Integer Wavelet Transform".  The paper's worked example is the (5,3)
+pair:
 
   Predict (eq. 5):  d[n] = x[2n+1] - floor((x[2n] + x[2n+2]) / 2)
   Update  (eq. 7):  s[n] = x[2n]   + floor((d[n]  + d[n-1])  / 4)
 
-and the structural inverse (eqs. 8-10).  Every arithmetic operation is an
-integer add/subtract or an arithmetic right shift (multiplierless): on
-signed integers ``x >> k`` IS ``floor(x / 2**k)``, which matches the paper's
-"negative sum => one-bit correction" hardware trick exactly.
+and the structural inverse (eqs. 8-10), but the lifting *scheme* is the
+general construction: any ordered sequence of multiplierless shift-add
+predict/update steps is losslessly invertible.  The step algebra, the
+scheme registry (``cdf53``, ``haar``, ``cdf22``, ``97m``), and the
+boundary policy live in :mod:`repro.core.schemes`; this module is the
+reference transform built on them.  Every arithmetic operation is an
+integer add/subtract or an arithmetic shift (on signed integers
+``x >> k`` IS ``floor(x / 2**k)``, the paper's "negative sum => one-bit
+correction" hardware trick).
 
-Boundary handling: symmetric (whole-point) extension, the JPEG2000
-convention, so arbitrary (non power-of-two, odd) lengths are supported —
-one of the paper's explicit claims.
+Boundary handling: whole-point symmetric extension (the JPEG2000
+convention) applied per stream entry — see ``schemes.reflect_entry`` —
+so arbitrary (non power-of-two, odd) lengths are supported, one of the
+paper's explicit claims.
 
-Variants:
-  * ``mode="paper"``     — eqs. (5)/(7) verbatim (floor, no offset).
-  * ``mode="jpeg2000"``  — adds the +2 rounding offset in the update step
-    (ITU-T T.800 reversible 5/3).  Both are losslessly invertible because
-    the lifting structure is invertible for ANY predict/update operator.
+Rounding variants (any scheme):
+  * ``mode="paper"``     — the scheme's declared offsets (cdf53: eqs.
+    (5)/(7) verbatim — floor, no offset).
+  * ``mode="jpeg2000"``  — adds the 2^(shift-1) rounding offset to every
+    update step (ITU-T T.800 reversible convention; +2 for cdf53).
+
+Narrow integer inputs (int8/int16) are promoted to int32 before the
+lifting cascade: the transform grows dynamic range by up to ~2 bits per
+level per step, and computing in the input dtype silently wraps the
+predict sums (int8 ``[120, 121, 122, 123]`` used to yield detail
+coefficients ``[-128, -127]``).  Promotion keeps round-trips bit-exact
+and the band values faithful for the int8 band quantizer downstream.
 
 All functions are pure jnp and jit-compatible; they are also the oracle
 (`kernels/ref.py`) for the Pallas TPU kernels.
 """
 from __future__ import annotations
 
-import functools
-from typing import List, NamedTuple, Sequence, Tuple
+from typing import List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import schemes as S
+from repro.core.schemes import (  # noqa: F401  re-exported registry surface
+    LiftingScheme,
+    LiftStep,
+    available_schemes,
+    get_scheme,
+    register_scheme,
+)
+
 Array = jax.Array
 
-_MODES = ("paper", "jpeg2000")
-
-
-def _check_mode(mode: str) -> None:
-    if mode not in _MODES:
-        raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+_check_mode = S.check_mode  # back-compat name (pre-registry callers)
 
 
 def _shift_down(x: Array, k: int) -> Array:
@@ -47,6 +64,32 @@ def _shift_down(x: Array, k: int) -> Array:
     if not jnp.issubdtype(x.dtype, jnp.integer):
         raise TypeError(f"integer DWT requires an integer dtype, got {x.dtype}")
     return jnp.right_shift(x, k)
+
+
+def promote_narrow(x: Array) -> Array:
+    """Promote to a signed dtype wide enough that lifting sums cannot
+    wrap: int8/int16/uint8/uint16 -> int32.  Wide unsigned dtypes are
+    rejected — ``>>`` is a logical shift there, wrapping the negative
+    detail coefficients, and the signed promotion they would need
+    (int64) silently narrows under JAX's default x64-disabled mode.
+    Mirrored by ``kernels.ops._compute_dtype`` so every backend accepts
+    exactly the dtypes the oracle does."""
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise TypeError(f"integer DWT requires an integer dtype, got {x.dtype}")
+    if x.dtype in (jnp.int8, jnp.int16, jnp.uint8, jnp.uint16):
+        return x.astype(jnp.int32)
+    if jnp.issubdtype(x.dtype, jnp.unsignedinteger):
+        raise TypeError(
+            f"integer DWT requires a signed (or narrow unsigned) dtype, "
+            f"got {x.dtype}: detail bands are signed"
+        )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# The paper's (5,3) operators, verbatim — kept as the hardware-model /
+# op-count reference (core/pe.py, Table 2) and for backward compat.
+# ---------------------------------------------------------------------------
 
 
 def predict(even: Array, even_next: Array, odd: Array) -> Array:
@@ -72,10 +115,7 @@ def update(even: Array, d: Array, d_prev: Array, mode: str = "paper") -> Array:
 
 def inv_update(s: Array, d: Array, d_prev: Array, mode: str = "paper") -> Array:
     """eq. (8): even[n] = s[n] - floor((d[n] + d[n-1]) / 4) (+2 offset in
-    jpeg2000 mode) — the structural inverse of :func:`update`.  Every
-    inverse path (reference, fused, tiled, sharded) routes through this
-    so the mode/rounding rule lives in exactly one place.
-    """
+    jpeg2000 mode) — the structural inverse of :func:`update`."""
     _check_mode(mode)
     t = d + d_prev
     if mode == "jpeg2000":
@@ -84,94 +124,30 @@ def inv_update(s: Array, d: Array, d_prev: Array, mode: str = "paper") -> Array:
 
 
 # ---------------------------------------------------------------------------
-# Single-level 1D transform along the last axis.
+# Single-level 1D transform along the last axis (any registered scheme).
 # ---------------------------------------------------------------------------
 
 
-def _split(x: Array) -> Tuple[Array, Array]:
-    """Lazy wavelet (eq. 3): even / odd polyphase split along last axis.
-
-    Even lengths use reshape(..., n/2, 2) + contiguous slices: pure layout
-    ops that the SPMD partitioner keeps sharded (a stride-2 slice on a
-    sharded axis makes XLA all-gather the whole tensor — measured in the
-    pod-sync dry-run).  Odd lengths (rare, small tensors) fall back to
-    strided slices.  Both paths are multiplierless (asserted in tests).
-    """
-    n = x.shape[-1]
-    axis = x.ndim - 1
-    if n % 2 == 0:
-        pairs = x.reshape(x.shape[:-1] + (n // 2, 2))
-        return pairs[..., 0], pairs[..., 1]
-    even = jax.lax.slice_in_dim(x, 0, n, stride=2, axis=axis)
-    odd = jax.lax.slice_in_dim(x, 1, n, stride=2, axis=axis)
-    return even, odd
-
-
-def _sym_even_next(even: Array, x_len: int) -> Array:
-    """even[n+1] with symmetric extension at the right edge.
-
-    For even x_len the final predict needs x[2n+2] = x[x_len], which
-    extends symmetrically to x[x_len-2] = even[-1]; for odd x_len the last
-    slot is unused by d (n_odd < n_even).  Both cases are the same
-    expression — and it is pure slice+concat: a scatter (.at[-1].set) on a
-    sharded axis makes the SPMD partitioner all-gather the whole tensor
-    (measured in the pod-sync dry-run), slices/concats stay sharded.
-    """
-    return jnp.concatenate([even[..., 1:], even[..., -1:]], axis=-1)
-
-
-def dwt53_fwd_1d(x: Array, mode: str = "paper") -> Tuple[Array, Array]:
+def dwt_fwd_1d(
+    x: Array, mode: str = "paper", scheme="cdf53"
+) -> Tuple[Array, Array]:
     """One forward lifting level along the last axis.
 
     Returns (s, d): approximation and detail bands.
     len(s) = ceil(N/2), len(d) = floor(N/2); arbitrary N >= 2.
     """
     _check_mode(mode)
-    n = x.shape[-1]
-    if n < 2:
-        raise ValueError(f"need at least 2 samples, got {n}")
-    even, odd = _split(x)
-    even_for_pred = even[..., : odd.shape[-1]]
-    even_next = _sym_even_next(even, n)[..., : odd.shape[-1]]
-    d = predict(even_for_pred, even_next, odd)
-    # d[n-1] with symmetric extension at the left edge: d[-1] := d[0]
-    d_prev = jnp.concatenate([d[..., :1], d[..., :-1]], axis=-1)
-    if even.shape[-1] > d.shape[-1]:
-        # odd length: the last even sample has no d[n] to its right;
-        # symmetric extension d[n] := d[n-1] for the final update.
-        d_pad = jnp.concatenate([d, d[..., -1:]], axis=-1)
-        d_prev_pad = jnp.concatenate([d_prev, d[..., -1:]], axis=-1)
-    else:
-        d_pad, d_prev_pad = d, d_prev
-    s = update(even, d_pad, d_prev_pad, mode=mode)
-    return s, d
+    return S.lift_fwd_axis(promote_narrow(x), scheme, axis=-1, mode=mode)
 
 
-def dwt53_inv_1d(s: Array, d: Array, mode: str = "paper") -> Array:
-    """One inverse lifting level (eqs. 8-10) along the last axis."""
+def dwt_inv_1d(
+    s: Array, d: Array, mode: str = "paper", scheme="cdf53"
+) -> Array:
+    """One inverse lifting level (cdf53: eqs. 8-10) along the last axis."""
     _check_mode(mode)
-    n_even, n_odd = s.shape[-1], d.shape[-1]
-    if n_even - n_odd not in (0, 1):
-        raise ValueError(f"band length mismatch: s={n_even}, d={n_odd}")
-    n = n_even + n_odd
-    # ---- inverse update (eq. 8): even = s - U(d) --------------------------
-    d_prev = jnp.concatenate([d[..., :1], d[..., :-1]], axis=-1)
-    if n_even > n_odd:
-        d_pad = jnp.concatenate([d, d[..., -1:]], axis=-1)
-        d_prev_pad = jnp.concatenate([d_prev, d[..., -1:]], axis=-1)
-    else:
-        d_pad, d_prev_pad = d, d_prev
-    even = inv_update(s, d_pad, d_prev_pad, mode=mode)
-    # ---- inverse predict (eq. 9): odd = d + P(even) -----------------------
-    even_next = _sym_even_next(even, n)[..., :n_odd]
-    odd = d + _shift_down(even[..., :n_odd] + even_next, 1)
-    # ---- merge (eq. 10): interleave via stack+reshape (no scatter) --------
-    core = jnp.stack([even[..., :n_odd], odd], axis=-1).reshape(
-        s.shape[:-1] + (2 * n_odd,)
+    return S.lift_inv_axis(
+        promote_narrow(s), promote_narrow(d), scheme, axis=-1, mode=mode
     )
-    if n_even > n_odd:
-        core = jnp.concatenate([core, even[..., -1:]], axis=-1)
-    return core
 
 
 # ---------------------------------------------------------------------------
@@ -190,27 +166,33 @@ class WaveletPyramid(NamedTuple):
         return len(self.details)
 
 
-def dwt53_fwd(x: Array, levels: int = 1, mode: str = "paper") -> WaveletPyramid:
-    """Multi-level forward transform along the last axis."""
-    if levels < 1:
-        raise ValueError("levels must be >= 1")
-    s = x
+def dwt_fwd(
+    x: Array, levels: int = 1, mode: str = "paper", scheme="cdf53"
+) -> WaveletPyramid:
+    """Multi-level forward transform along the last axis.
+
+    ``levels=0`` is the identity pyramid (no detail bands) so callers
+    may loop ``levels=max_levels(n)`` over degenerate shapes safely.
+    """
+    if levels < 0:
+        raise ValueError("levels must be >= 0")
+    s = promote_narrow(x)
     details: List[Array] = []
     for _ in range(levels):
         if s.shape[-1] < 2:
             raise ValueError(
                 f"signal too short for {levels} levels (got {x.shape[-1]})"
             )
-        s, d = dwt53_fwd_1d(s, mode=mode)
+        s, d = S.lift_fwd_axis(s, scheme, axis=-1, mode=mode)
         details.append(d)
     return WaveletPyramid(approx=s, details=tuple(reversed(details)))
 
 
-def dwt53_inv(pyr: WaveletPyramid, mode: str = "paper") -> Array:
+def dwt_inv(pyr: WaveletPyramid, mode: str = "paper", scheme="cdf53") -> Array:
     """Multi-level inverse transform."""
-    s = pyr.approx
+    s = promote_narrow(pyr.approx)
     for d in pyr.details:  # coarsest first
-        s = dwt53_inv_1d(s, d, mode=mode)
+        s = S.lift_inv_axis(s, promote_narrow(d), scheme, axis=-1, mode=mode)
     return s
 
 
@@ -226,32 +208,25 @@ class Bands2D(NamedTuple):
     hh: Array
 
 
-def dwt53_fwd_2d(x: Array, mode: str = "paper") -> Bands2D:
-    """One 2D level over the last two axes: rows then columns."""
-    s_r, d_r = dwt53_fwd_1d(x, mode=mode)  # along columns-axis (last)
-    s_rc = jnp.swapaxes(s_r, -1, -2)
-    d_rc = jnp.swapaxes(d_r, -1, -2)
-    ll_t, lh_t = dwt53_fwd_1d(s_rc, mode=mode)
-    hl_t, hh_t = dwt53_fwd_1d(d_rc, mode=mode)
-    return Bands2D(
-        ll=jnp.swapaxes(ll_t, -1, -2),
-        lh=jnp.swapaxes(lh_t, -1, -2),
-        hl=jnp.swapaxes(hl_t, -1, -2),
-        hh=jnp.swapaxes(hh_t, -1, -2),
-    )
+def dwt_fwd_2d(x: Array, mode: str = "paper", scheme="cdf53") -> Bands2D:
+    """One 2D level over the last two axes: rows then columns.
+
+    Axis-aware stencils (no transposes): the row-stage streams feed the
+    column stage directly.
+    """
+    xf = promote_narrow(x)
+    s_r, d_r = S.lift_fwd_axis(xf, scheme, axis=-1, mode=mode)
+    ll, lh = S.lift_fwd_axis(s_r, scheme, axis=-2, mode=mode)
+    hl, hh = S.lift_fwd_axis(d_r, scheme, axis=-2, mode=mode)
+    return Bands2D(ll=ll, lh=lh, hl=hl, hh=hh)
 
 
-def dwt53_inv_2d(bands: Bands2D, mode: str = "paper") -> Array:
-    """Inverse of :func:`dwt53_fwd_2d`."""
-    s_rc = dwt53_inv_1d(
-        jnp.swapaxes(bands.ll, -1, -2), jnp.swapaxes(bands.lh, -1, -2), mode=mode
-    )
-    d_rc = dwt53_inv_1d(
-        jnp.swapaxes(bands.hl, -1, -2), jnp.swapaxes(bands.hh, -1, -2), mode=mode
-    )
-    s_r = jnp.swapaxes(s_rc, -1, -2)
-    d_r = jnp.swapaxes(d_rc, -1, -2)
-    return dwt53_inv_1d(s_r, d_r, mode=mode)
+def dwt_inv_2d(bands: Bands2D, mode: str = "paper", scheme="cdf53") -> Array:
+    """Inverse of :func:`dwt_fwd_2d` (columns then rows)."""
+    ll, lh, hl, hh = (promote_narrow(b) for b in bands)
+    s_r = S.lift_inv_axis(ll, lh, scheme, axis=-2, mode=mode)
+    d_r = S.lift_inv_axis(hl, hh, scheme, axis=-2, mode=mode)
+    return S.lift_inv_axis(s_r, d_r, scheme, axis=-1, mode=mode)
 
 
 class Pyramid2D(NamedTuple):
@@ -271,8 +246,8 @@ class Pyramid2D(NamedTuple):
 
 def check_levels_2d(h: int, w: int, levels: int) -> None:
     """Raise unless a (h, w) image supports `levels` 2D decompositions."""
-    if levels < 1:
-        raise ValueError("levels must be >= 1")
+    if levels < 0:
+        raise ValueError("levels must be >= 0")
     for _ in range(levels):
         if h < 2 or w < 2:
             raise ValueError(
@@ -281,28 +256,74 @@ def check_levels_2d(h: int, w: int, levels: int) -> None:
         h, w = h - h // 2, w - w // 2
 
 
-def dwt53_fwd_2d_multi(x: Array, levels: int = 1, mode: str = "paper") -> Pyramid2D:
+def dwt_fwd_2d_multi(
+    x: Array, levels: int = 1, mode: str = "paper", scheme="cdf53"
+) -> Pyramid2D:
     """Multi-level 2D forward transform (Mallat pyramid, recurse on LL)."""
     check_levels_2d(x.shape[-2], x.shape[-1], levels)
-    ll = x
+    ll = promote_narrow(x)
     details: List[Tuple[Array, Array, Array]] = []
     for _ in range(levels):
-        bands = dwt53_fwd_2d(ll, mode=mode)
+        bands = dwt_fwd_2d(ll, mode=mode, scheme=scheme)
         ll = bands.ll
         details.append((bands.lh, bands.hl, bands.hh))
     return Pyramid2D(ll=ll, details=tuple(reversed(details)))
 
 
-def dwt53_inv_2d_multi(pyr: Pyramid2D, mode: str = "paper") -> Array:
-    """Inverse of :func:`dwt53_fwd_2d_multi`."""
-    ll = pyr.ll
+def dwt_inv_2d_multi(
+    pyr: Pyramid2D, mode: str = "paper", scheme="cdf53"
+) -> Array:
+    """Inverse of :func:`dwt_fwd_2d_multi`."""
+    ll = promote_narrow(pyr.ll)
     for lh, hl, hh in pyr.details:  # coarsest first
-        ll = dwt53_inv_2d(Bands2D(ll=ll, lh=lh, hl=hl, hh=hh), mode=mode)
+        ll = dwt_inv_2d(
+            Bands2D(ll=ll, lh=lh, hl=hl, hh=hh), mode=mode, scheme=scheme
+        )
     return ll
 
 
 # ---------------------------------------------------------------------------
+# (5,3) aliases — the seed's public names; nothing downstream breaks.
+# ---------------------------------------------------------------------------
+
+
+def dwt53_fwd_1d(x: Array, mode: str = "paper") -> Tuple[Array, Array]:
+    """(5,3) forward level: :func:`dwt_fwd_1d` with ``scheme="cdf53"``."""
+    return dwt_fwd_1d(x, mode=mode, scheme="cdf53")
+
+
+def dwt53_inv_1d(s: Array, d: Array, mode: str = "paper") -> Array:
+    return dwt_inv_1d(s, d, mode=mode, scheme="cdf53")
+
+
+def dwt53_fwd(x: Array, levels: int = 1, mode: str = "paper") -> WaveletPyramid:
+    return dwt_fwd(x, levels=levels, mode=mode, scheme="cdf53")
+
+
+def dwt53_inv(pyr: WaveletPyramid, mode: str = "paper") -> Array:
+    return dwt_inv(pyr, mode=mode, scheme="cdf53")
+
+
+def dwt53_fwd_2d(x: Array, mode: str = "paper") -> Bands2D:
+    return dwt_fwd_2d(x, mode=mode, scheme="cdf53")
+
+
+def dwt53_inv_2d(bands: Bands2D, mode: str = "paper") -> Array:
+    return dwt_inv_2d(bands, mode=mode, scheme="cdf53")
+
+
+def dwt53_fwd_2d_multi(x: Array, levels: int = 1, mode: str = "paper") -> Pyramid2D:
+    return dwt_fwd_2d_multi(x, levels=levels, mode=mode, scheme="cdf53")
+
+
+def dwt53_inv_2d_multi(pyr: Pyramid2D, mode: str = "paper") -> Array:
+    return dwt_inv_2d_multi(pyr, mode=mode, scheme="cdf53")
+
+
+# ---------------------------------------------------------------------------
 # Flat coefficient <-> pyramid packing (used by compression / checkpointing).
+# Band geometry is scheme-independent: every registered scheme keeps
+# len(s) = ceil(N/2), len(d) = floor(N/2) (the lazy-wavelet split).
 # ---------------------------------------------------------------------------
 
 
@@ -387,25 +408,34 @@ def unpack2d(flat: Array, h: int, w: int, levels: int) -> Pyramid2D:
 
 
 def max_levels_2d(h: int, w: int) -> int:
-    """Deepest 2D decomposition with >= 2 samples per axis at every level."""
+    """Deepest 2D decomposition with >= 2 samples per axis at every level.
+
+    0 for degenerate images (either axis < 2): no level is possible —
+    ``dwt_fwd_2d`` needs two samples per axis, and ``levels=0`` is the
+    identity pyramid, so ``levels=max_levels_2d(h, w)`` never raises.
+    """
     lv = 0
     while h >= 2 and w >= 2:
         h, w = h - h // 2, w - w // 2
         lv += 1
         if h < 2 or w < 2:
             break
-    return max(lv, 1)
+    return lv
 
 
 def max_levels(n: int) -> int:
-    """Deepest decomposition such that every level has >= 2 samples."""
+    """Deepest decomposition such that every level has >= 2 samples.
+
+    0 for n < 2 (no level possible; the seed reported 1, which made
+    ``levels=max_levels(n)`` loops raise on length-1 axes).
+    """
     lv = 0
     while n >= 2:
         n = n - n // 2
         lv += 1
         if n < 2:
             break
-    return max(lv, 1)
+    return lv
 
 
 # ---------------------------------------------------------------------------

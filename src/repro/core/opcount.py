@@ -119,3 +119,44 @@ def direct_form_pair(x0, x1, x2, x3, x4):
 def example_int_args(k: int):
     """k scalar int32 example args for tracing."""
     return tuple(np.int32(i + 1) for i in range(k))
+
+
+# ---------------------------------------------------------------------------
+# Per-scheme pair functions: trace the registry's step algebra the same
+# way Table 2 frames the (5,3) — one (s, d) output pair per invocation.
+# ---------------------------------------------------------------------------
+
+
+def scheme_pair_fn(scheme):
+    """(fn, n_args): one output pair of the named scheme, for tracing.
+
+    ``fn`` applies every lifting step once to fresh scalar reads, which
+    is exactly the steady-state per-pair hardware cost; tracing it must
+    reproduce ``LiftingScheme.pair_op_counts()`` (tests assert this) and
+    contain zero multiplies for every registered scheme.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import schemes as S
+
+    sch = S.get_scheme(scheme)
+    n_args = 2 + sum(len(st.taps) for st in sch.steps)
+
+    def fn(*args):
+        it = iter(args)
+        cur = {"even": next(it), "odd": next(it)}
+        for st in sch.steps:
+            # the engines' own step application (schemes._apply_taps), so
+            # the traced ledger cannot drift from what the kernels run
+            reads = [next(it) for _ in st.taps]
+            tgt = "odd" if st.kind == "predict" else "even"
+            cur[tgt] = S._apply_taps(st, cur[tgt], reads, inverse=False)
+        return cur["even"], cur["odd"]
+
+    return fn, n_args
+
+
+def scheme_arithmetic_summary(scheme) -> Dict[str, int]:
+    """Traced per-pair op counts for a registered scheme (Table-2 style)."""
+    fn, n_args = scheme_pair_fn(scheme)
+    return arithmetic_summary(fn, *example_int_args(n_args))

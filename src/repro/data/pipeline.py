@@ -103,15 +103,19 @@ class WaveletBandSplit:
     """Pipeline stage: integer DWT band-split of int samples (the paper's
     own application: line-by-line signal decomposition before coding)."""
 
-    def __init__(self, levels: int = 2, mode: str = "paper"):
+    def __init__(self, levels: int = 2, mode: str = "paper", scheme: str = "cdf53"):
         self.levels = levels
         self.mode = mode
+        self.scheme = scheme
 
     def __call__(self, samples: np.ndarray) -> Dict[str, np.ndarray]:
         import jax.numpy as jnp
 
-        pyr = lifting.dwt53_fwd(
-            jnp.asarray(samples, jnp.int32), levels=self.levels, mode=self.mode
+        pyr = lifting.dwt_fwd(
+            jnp.asarray(samples, jnp.int32),
+            levels=self.levels,
+            mode=self.mode,
+            scheme=self.scheme,
         )
         out = {"approx": np.asarray(pyr.approx)}
         for i, d in enumerate(pyr.details):

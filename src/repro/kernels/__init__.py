@@ -1,4 +1,4 @@
-"""Single entry point for the integer (5,3) DWT engine.
+"""Single entry point for the integer lifting DWT engine.
 
 Production consumers (``core/compression.py``, ``train/grad_compress.py``,
 ``ckpt/checkpoint.py``, ``serve/serve_step.py``) import transforms from
@@ -7,15 +7,21 @@ backend dispatch policy (``kernels/backend.py``) applies to every
 workload at once:
 
     from repro import kernels as K
-    pyr = K.dwt53_fwd(x, levels=3)          # compiled on every platform
-    y   = K.dwt53_inv(pyr)
-    bands = K.dwt53_fwd_2d(img)             # fused row-column pass
-    p2d = K.dwt53_fwd_2d_multi(img, levels=3)   # fused Mallat pyramid
-    shd = K.dwt53_fwd_2d_sharded(img, mesh)     # rows over mesh['data']
+    pyr = K.dwt_fwd(x, levels=3, scheme="97m")  # compiled on every platform
+    y   = K.dwt_inv(pyr, scheme="97m")
+    bands = K.dwt_fwd_2d(img, scheme="haar")    # fused row-column pass
+    p2d = K.dwt_fwd_2d_multi(img, levels=3)     # fused Mallat pyramid
+    shd = K.dwt_fwd_2d_sharded(img, mesh)       # rows over mesh['data']
+
+Every transform takes ``scheme=`` — a name from the lifting-scheme
+registry (``available_schemes()``: cdf53, haar, cdf22, 97m; see
+``core/schemes.py`` for the step algebra and how to register more).  The
+``dwt53_*`` names are thin (5,3) aliases, so seed-era callers keep
+working unchanged.
 
 There is no image-size ceiling: past the derived VMEM budget the 2D
-transforms run the tiled halo-window Pallas engine, and batch dims map
-to kernel grid cells.
+transforms run the tiled halo-window Pallas engine (halo width derived
+from the scheme), and batch dims map to kernel grid cells.
 
 Backends — ``pallas`` (compiled kernels; TPU default), ``xla`` (the
 jnp reference under jit; CPU/GPU default), ``interpret`` (Pallas
@@ -23,11 +29,12 @@ emulator, debug only).  Select per call with ``backend=...``, per scope with
 ``use_backend(...)``, per process with ``REPRO_DWT_BACKEND``.  All
 backends are bit-exact vs ``kernels/ref.py`` (== ``core.lifting``).
 
-Layout convention for this package: dwt53.py (raw Pallas kernels),
-fused2d.py (fused 2D kernels + multi-level dispatch), tiled2d.py (tiled
-halo-window kernels), sharded.py (shard_map multi-device transform),
-ops.py (dispatching wrappers), ref.py (jnp oracle), backend.py (dispatch
-policy + budgets/tiles).  See DESIGN.md §3-7.
+Layout convention for this package: dwt53.py (raw Pallas window
+kernels), fused2d.py (fused 2D kernels + multi-level dispatch),
+tiled2d.py (tiled halo-window kernels), sharded.py (shard_map
+multi-device transform), ops.py (dispatching wrappers), ref.py (jnp
+oracle), backend.py (dispatch policy + budgets/tiles).  See DESIGN.md
+§3-7 and §9.
 """
 from repro.core.lifting import (  # noqa: F401  structural types + packing
     Bands2D,
@@ -42,8 +49,16 @@ from repro.core.lifting import (  # noqa: F401  structural types + packing
     unpack,
     unpack2d,
 )
+from repro.core.schemes import (  # noqa: F401  the scheme registry
+    LiftingScheme,
+    LiftStep,
+    available_schemes,
+    get_scheme,
+    register_scheme,
+)
 from repro.kernels.backend import (  # noqa: F401
     VALID_BACKENDS,
+    BackendDegradeWarning,
     default_backend,
     has_compiled_pallas,
     pick_tile,
@@ -57,16 +72,26 @@ from repro.kernels.fused2d import (  # noqa: F401
     dwt53_fwd_2d_multi,
     dwt53_inv_2d,
     dwt53_inv_2d_multi,
+    dwt_fwd_2d,
+    dwt_fwd_2d_multi,
+    dwt_inv_2d,
+    dwt_inv_2d_multi,
 )
 from repro.kernels.ops import (  # noqa: F401
     dwt53_fwd,
     dwt53_fwd_1d,
     dwt53_inv,
     dwt53_inv_1d,
+    dwt_fwd,
+    dwt_fwd_1d,
+    dwt_inv,
+    dwt_inv_1d,
 )
 from repro.kernels.sharded import (  # noqa: F401
     dwt53_fwd_2d_sharded,
     dwt53_inv_2d_sharded,
+    dwt_fwd_2d_sharded,
+    dwt_inv_2d_sharded,
 )
 
 __all__ = [
@@ -81,7 +106,13 @@ __all__ = [
     "pack2d",
     "unpack",
     "unpack2d",
+    "LiftingScheme",
+    "LiftStep",
+    "available_schemes",
+    "get_scheme",
+    "register_scheme",
     "VALID_BACKENDS",
+    "BackendDegradeWarning",
     "default_backend",
     "has_compiled_pallas",
     "pick_tile",
@@ -89,6 +120,16 @@ __all__ = [
     "resolve",
     "resolve_backend",
     "use_backend",
+    "dwt_fwd",
+    "dwt_fwd_1d",
+    "dwt_inv",
+    "dwt_inv_1d",
+    "dwt_fwd_2d",
+    "dwt_fwd_2d_multi",
+    "dwt_inv_2d",
+    "dwt_inv_2d_multi",
+    "dwt_fwd_2d_sharded",
+    "dwt_inv_2d_sharded",
     "dwt53_fwd",
     "dwt53_fwd_1d",
     "dwt53_inv",

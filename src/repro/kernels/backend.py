@@ -122,22 +122,32 @@ def resolve(backend: Optional[str] = None) -> str:
     return resolve_backend(backend)
 
 
-# one-time degrade warnings: a silently-degraded request (pallas ->
-# interpret off-accelerator, pallas -> xla for an untileable shape) warns
-# ONCE per distinct reason so production logs name the cliff without
-# spamming per-call.
+class BackendDegradeWarning(RuntimeWarning):
+    """A backend request silently degraded (pallas -> interpret
+    off-accelerator, pallas -> xla for an untileable shape, ...).
+
+    A dedicated category so operators can filter or escalate degrade
+    notices independently of generic RuntimeWarnings: the tier-1 suite
+    ignores exactly this category (tests/conftest.py) while the CI smoke
+    gate runs with all other RuntimeWarnings as errors.
+    """
+
+
+# one-time degrade warnings: a silently-degraded request warns ONCE per
+# distinct (requested, resolved, reason) so production logs name the
+# cliff without spamming per-call.
 _warned_degrades: set = set()
 
 
 def note_degrade(requested: str, resolved: str, reason: str) -> None:
-    """Warn (once per reason) that a backend request degraded."""
+    """Warn (once per (requested, resolved, reason)) about a degrade."""
     key = (requested, resolved, reason)
     if key in _warned_degrades:
         return
     _warned_degrades.add(key)
     warnings.warn(
         f"DWT backend request {requested!r} degraded to {resolved!r}: {reason}",
-        RuntimeWarning,
+        BackendDegradeWarning,
         stacklevel=3,
     )
 
@@ -296,27 +306,30 @@ def dispatch_state() -> Tuple[str, str]:
     )
 
 
-def pick_tile(h: int, w: int) -> Tuple[int, int]:
+def pick_tile(h: int, w: int, halo: int = 2) -> Tuple[int, int]:
     """(TH, TW) core-tile shape for a tiled 2D transform of an (h, w) image.
 
-    Cached per (shape, env state).  ``REPRO_DWT_TILE`` ("N" or "TH,TW")
-    overrides — the escape hatch for tuning and the lever tests use to
-    exercise multi-tile grids on small images.  Chosen tiles are even, at
-    least ``_MIN_TILE``, and sized so the ~6 resident window-sized buffers
-    of the tiled kernels fit the derived VMEM budget.
+    ``halo`` is the scheme-derived reflect-halo width in samples per side
+    (``LiftingScheme.halo``; 2 for the paper's cdf53, 4 for 97m, 0 for
+    haar) — it enters the VMEM window budget as (TH+2*halo)*(TW+2*halo).
+    Cached per (shape, halo, env state).  ``REPRO_DWT_TILE`` ("N" or
+    "TH,TW") overrides — the escape hatch for tuning and the lever tests
+    use to exercise multi-tile grids on small images.  Chosen tiles are
+    even, at least ``_MIN_TILE``, and sized so the ~6 resident
+    window-sized buffers of the tiled kernels fit the derived budget.
     """
-    return _pick_tile(h, w, dispatch_state())
+    return _pick_tile(h, w, halo, dispatch_state())
 
 
 @functools.lru_cache(maxsize=4096)
-def _pick_tile(h: int, w: int, _state: Tuple[str, str]) -> Tuple[int, int]:
+def _pick_tile(h: int, w: int, halo: int, _state: Tuple[str, str]) -> Tuple[int, int]:
     override = _tile_env_override()
     if override is not None:
         return override
     budget = fused2d_budget_elems()
     th = tw = DEFAULT_TILE
     # shrink square-ish until the halo'd window set fits the budget
-    while (th + 4) * (tw + 4) > budget and th > _MIN_TILE:
+    while (th + 2 * halo) * (tw + 2 * halo) > budget and th > _MIN_TILE:
         th = max(th // 2 - (th // 2) % 2, _MIN_TILE)
         tw = th
     # never tile beyond the image (ceil to even: odd dims get one pad col)

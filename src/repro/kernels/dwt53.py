@@ -1,24 +1,26 @@
-"""Pallas TPU kernels for the integer (5,3) lifting DWT.
+"""Pallas TPU kernels for the integer lifting DWT — any registered scheme.
 
 TPU adaptation of the paper's PE (see DESIGN.md §2): the serial
-delay-line dataflow becomes a blocked-parallel VPU computation.  Each grid
-cell holds one ``(block_rows, block_pairs)`` tile of the even/odd polyphase
-streams in VMEM and evaluates the predict+update lifting steps fused, using
-only integer adds/subtracts and arithmetic shifts (multiplierless).
+delay-line dataflow becomes a blocked-parallel VPU computation over
+halo'd windows.  Each grid cell holds one ``(block_rows, window)`` slice
+of the signal (forward) or of the two bands (inverse) in VMEM and runs
+the scheme's full lifting cascade as interior-only math
+(``schemes.lift_fwd_axis_ext`` / ``lift_inv_axis_ext``) — integer
+adds/subtracts and arithmetic shifts only (multiplierless).
 
-Cross-tile dependencies (the paper's programmable delays) are resolved with
-explicit one-column halo inputs, precomputed by ``ops.py``:
+Cross-tile dependencies (the paper's programmable delays) are resolved
+by OVERLAP, not sequencing: the wrapper (``ops.py``) gathers each cell's
+window through whole-point-reflected index maps
+(``schemes.reflect_indices``), so neighboring windows share
+``scheme.halo`` samples (forward) / ``scheme.inv_margin`` band pairs
+(inverse) and every cell recomputes its fringe locally.  Tiles stay
+embarrassingly parallel, and the halo width is DERIVED from the scheme's
+step supports — the seed's hard-coded one-column (5,3) halos are just
+``cdf53``'s instance.
 
-  forward:  needs x_even[n+1] (right) and d[n-1] (left).  d[n-1] is
-            recomputed in-kernel from two left halo columns, so tiles stay
-            embarrassingly parallel (no sequential grid dependency).
-  inverse:  needs d[n-1] (left, an input — direct halo) and even[n+1]
-            (right, an output of the next tile — recomputed in-kernel from
-            s/d halo columns).
-
-Layout choice: the wrapper performs the polyphase Split/Merge (the paper's
-lazy-wavelet stage; a serial-to-parallel demux in hardware) OUTSIDE the
-kernel so the kernel touches only contiguous, lane-aligned tiles.
+The module keeps its historical ``dwt53.py`` name (the (5,3) is still
+the flagship scheme); the kernels themselves are scheme-parameterized
+via a static argument.
 """
 from __future__ import annotations
 
@@ -26,131 +28,95 @@ import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.backend import DEFAULT_BLOCK_PAIRS, DEFAULT_BLOCK_ROWS
+from repro.core import schemes as S
+
+# re-exported defaults (historical import site for the block geometry)
+from repro.kernels.backend import DEFAULT_BLOCK_PAIRS, DEFAULT_BLOCK_ROWS  # noqa: F401
 
 
-def _fwd_kernel(xe_ref, xo_ref, xel_ref, xol_ref, xer_ref, s_ref, d_ref, *, offset: int):
-    """Fused predict+update for one tile.
-
-    eq. (5): d[n] = xo[n] - ((xe[n] + xe[n+1]) >> 1)
-    eq. (7): s[n] = xe[n] + ((d[n] + d[n-1] [+ offset]) >> 2)
-    """
-    xe = xe_ref[...]
-    xo = xo_ref[...]
-    xe_next = jnp.concatenate([xe[:, 1:], xer_ref[...]], axis=1)
-    d = xo - jnp.right_shift(xe + xe_next, 1)
-    # d[n-1] for the first in-tile column, recomputed from left halos
-    d_left = xol_ref[...] - jnp.right_shift(xel_ref[...] + xe[:, :1], 1)
-    d_prev = jnp.concatenate([d_left, d[:, :-1]], axis=1)
-    t = d + d_prev
-    if offset:
-        t = t + offset
-    s_ref[...] = xe + jnp.right_shift(t, 2)
-    d_ref[...] = d
+def _fwd_kernel(w_ref, s_ref, d_ref, *, scheme: str, mode: str):
+    """Forward lifting cascade over one halo'd window tile."""
+    s, d = S.lift_fwd_axis_ext(w_ref[:, 0, :], scheme, axis=-1, mode=mode)
+    s_ref[:, 0, :] = s
+    d_ref[:, 0, :] = d
 
 
-def _inv_kernel(s_ref, d_ref, dl_ref, sr_ref, dr_ref, xe_ref, xo_ref, *, offset: int):
-    """Fused inverse update+predict for one tile.
-
-    eq. (8): even[n] = s[n] - ((d[n] + d[n-1] [+ offset]) >> 2)
-    eq. (9): odd[n]  = d[n] + ((even[n] + even[n+1]) >> 1)
-    """
-    s = s_ref[...]
-    d = d_ref[...]
-    d_prev = jnp.concatenate([dl_ref[...], d[:, :-1]], axis=1)
-    t = d + d_prev
-    tr = dr_ref[...] + d[:, -1:]
-    if offset:
-        t = t + offset
-        tr = tr + offset
-    even = s - jnp.right_shift(t, 2)
-    even_right = sr_ref[...] - jnp.right_shift(tr, 2)  # even[n+1] of next tile
-    even_next = jnp.concatenate([even[:, 1:], even_right], axis=1)
-    xe_ref[...] = even
-    xo_ref[...] = d + jnp.right_shift(even + even_next, 1)
-
-
-def _grid_specs(n_rows: int, n_pairs: int, block_rows: int, block_pairs: int):
-    grid = (n_rows // block_rows, n_pairs // block_pairs)
-    tile = pl.BlockSpec((block_rows, block_pairs), lambda b, i: (b, i))
-    halo = pl.BlockSpec((block_rows, 1), lambda b, i: (b, i))
-    return grid, tile, halo
+def _inv_kernel(s_ref, d_ref, x_ref, *, scheme: str, mode: str):
+    """Inverse lifting cascade over one pair of margin-extended band tiles."""
+    x_ref[:, 0, :] = S.lift_inv_axis_ext(
+        s_ref[:, 0, :], d_ref[:, 0, :], scheme, axis=-1, mode=mode
+    )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_rows", "block_pairs", "offset", "interpret")
+    jax.jit,
+    static_argnames=("scheme", "mode", "block_rows", "block_pairs", "interpret"),
 )
-def dwt53_fwd_tiles(
-    xe: jax.Array,
-    xo: jax.Array,
-    xe_left: jax.Array,
-    xo_left: jax.Array,
-    xe_right: jax.Array,
+def lift_fwd_windows(
+    wins: jax.Array,
     *,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-    block_pairs: int = DEFAULT_BLOCK_PAIRS,
-    offset: int = 0,
+    scheme: str,
+    mode: str,
+    block_rows: int,
+    block_pairs: int,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Forward lifting over pre-split polyphase streams (padded shapes).
+    """Forward lifting over gathered signal windows.
 
-    xe, xo              : (rows, n_pairs)   even/odd streams, n_pairs % block_pairs == 0
-    xe_left, xo_left    : (rows, n_tiles)   left halo columns per tile
-    xe_right            : (rows, n_tiles)   right halo column per tile
-    returns (s, d)      : (rows, n_pairs) each
+    wins : (rows, n_tiles, 2*block_pairs + 2*halo) — each window carries
+           the scheme's reflect halo on both sides; rows % block_rows == 0.
+    returns (s, d) : (rows, n_tiles, block_pairs) each — the core output
+           pairs of every window.
     """
-    n_rows, n_pairs = xe.shape
-    grid, tile, halo = _grid_specs(n_rows, n_pairs, block_rows, block_pairs)
-    out_shape = (
-        jax.ShapeDtypeStruct(xe.shape, xe.dtype),
-        jax.ShapeDtypeStruct(xe.shape, xe.dtype),
-    )
+    rows, n_tiles, wlen = wins.shape
+    grid = (rows // block_rows, n_tiles)
+    win_spec = pl.BlockSpec((block_rows, 1, wlen), lambda r, t: (r, t, 0))
+    out_spec = pl.BlockSpec((block_rows, 1, block_pairs), lambda r, t: (r, t, 0))
+    out = jax.ShapeDtypeStruct((rows, n_tiles, block_pairs), wins.dtype)
     return pl.pallas_call(
-        functools.partial(_fwd_kernel, offset=offset),
+        functools.partial(_fwd_kernel, scheme=scheme, mode=mode),
         grid=grid,
-        in_specs=[tile, tile, halo, halo, halo],
-        out_specs=(tile, tile),
-        out_shape=out_shape,
+        in_specs=[win_spec],
+        out_specs=(out_spec, out_spec),
+        out_shape=(out, out),
         interpret=interpret,
-    )(xe, xo, xe_left, xo_left, xe_right)
+    )(wins)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_rows", "block_pairs", "offset", "interpret")
+    jax.jit,
+    static_argnames=("scheme", "mode", "block_rows", "block_pairs", "interpret"),
 )
-def dwt53_inv_tiles(
-    s: jax.Array,
-    d: jax.Array,
-    d_left: jax.Array,
-    s_right: jax.Array,
-    d_right: jax.Array,
+def lift_inv_windows(
+    s_wins: jax.Array,
+    d_wins: jax.Array,
     *,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-    block_pairs: int = DEFAULT_BLOCK_PAIRS,
-    offset: int = 0,
+    scheme: str,
+    mode: str,
+    block_rows: int,
+    block_pairs: int,
     interpret: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Inverse lifting over band tiles (padded shapes).
+) -> jax.Array:
+    """Inverse lifting over gathered band windows.
 
-    s, d                   : (rows, n_pairs)
-    d_left                 : (rows, n_tiles)  d[n-1] halo per tile
-    s_right, d_right       : (rows, n_tiles)  halos to recompute even[n+1]
-    returns (x_even, x_odd): (rows, n_pairs) each
+    s_wins, d_wins : (rows, n_tiles, block_pairs + 2*inv_margin) — band
+           entries extended by the scheme's inverse margin per side.
+    returns x : (rows, n_tiles, 2*block_pairs) merged core samples.
     """
-    n_rows, n_pairs = s.shape
-    grid, tile, halo = _grid_specs(n_rows, n_pairs, block_rows, block_pairs)
-    out_shape = (
-        jax.ShapeDtypeStruct(s.shape, s.dtype),
-        jax.ShapeDtypeStruct(s.shape, s.dtype),
+    rows, n_tiles, wlen = s_wins.shape
+    grid = (rows // block_rows, n_tiles)
+    win_spec = pl.BlockSpec((block_rows, 1, wlen), lambda r, t: (r, t, 0))
+    out_spec = pl.BlockSpec(
+        (block_rows, 1, 2 * block_pairs), lambda r, t: (r, t, 0)
     )
+    out = jax.ShapeDtypeStruct((rows, n_tiles, 2 * block_pairs), s_wins.dtype)
     return pl.pallas_call(
-        functools.partial(_inv_kernel, offset=offset),
+        functools.partial(_inv_kernel, scheme=scheme, mode=mode),
         grid=grid,
-        in_specs=[tile, tile, halo, halo, halo],
-        out_specs=(tile, tile),
-        out_shape=out_shape,
+        in_specs=[win_spec, win_spec],
+        out_specs=out_spec,
+        out_shape=out,
         interpret=interpret,
-    )(s, d, d_left, s_right, d_right)
+    )(s_wins, d_wins)

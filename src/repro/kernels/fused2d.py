@@ -1,14 +1,14 @@
-"""Fused 2D (row-column) integer (5,3) DWT — a single tiled pass.
+"""Fused 2D (row-column) integer lifting DWT — a single tiled pass.
 
-``core.lifting.dwt53_fwd_2d`` composes the 1D transform with FOUR
-transposes per level (rows, swap, columns on s, columns on d, swap back);
-the inverse does the same in reverse.  On real accelerators each
-transpose is a full relayout of the image through HBM, and on a sharded
-axis it is a cross-device reshuffle.  This module removes them:
+``core.lifting.dwt_fwd_2d`` composes the 1D transform with per-axis
+stencils; a transpose-based layout would relayout the image through HBM
+twice per level (and reshuffle across devices on a sharded axis).  This
+module removes all of that:
 
-  * The lifting stencils are applied ALONG AN AXIS (last for rows, -2 for
-    columns) with pure slice/concat ops — no data movement between the
-    row and column stages beyond what the stencils themselves read.
+  * The lifting cascade is applied ALONG AN AXIS (last for rows, -2 for
+    columns) with pure slice/concat ops — ``schemes.lift_fwd_axis`` /
+    ``lift_inv_axis``, the same band-policy math as the reference, for
+    ANY registered scheme.
   * On the Pallas backends the whole row+column pipeline for one image
     tile runs inside ONE kernel: the grid iterates over the flattened
     batch, each cell loads its (H, W) image into VMEM once, computes the
@@ -16,18 +16,23 @@ axis it is a cross-device reshuffle.  This module removes them:
     lifting, and writes the four subbands (LL, LH, HL, HH) — one pass
     over HBM in, four band-writes out.  Images past the derived VMEM
     budget (``backend.fused2d_budget_elems``) stay on Pallas through the
-    tiled halo-window engine (``kernels/tiled2d.py``) — no XLA cliff.
+    tiled halo-window engine (``kernels/tiled2d.py``), whose halo width
+    is the scheme's — no XLA cliff.
   * On the XLA backend the same axis-aware math is one jitted program;
     XLA fuses both stages without materialising transposed copies.
 
-This module is also the multi-level 2D dispatcher: ``dwt53_fwd_2d_multi``
-/ ``dwt53_inv_2d_multi`` fuse the full Mallat pyramid into one compiled
+This module is also the multi-level 2D dispatcher: ``dwt_fwd_2d_multi``
+/ ``dwt_inv_2d_multi`` fuse the full Mallat pyramid into one compiled
 dispatch on the Pallas engine, choosing whole-image or tiled kernels per
-level from the static shapes.
+level from the static shapes.  Schemes that cannot run the windowed
+tile dataflow on a given shape (``scheme.can_window``; e.g. cdf22's
+antisymmetric lift, or haar on odd dims) use the whole-image kernel
+within budget and in-graph band-policy math beyond it.
 
-Bit-exactness: every path reproduces ``core.lifting.dwt53_fwd_2d`` /
-``dwt53_inv_2d`` exactly, for every (H, W) >= (2, 2) including odd sizes
-and both rounding modes; tests sweep this.  See DESIGN.md §5-6.
+Bit-exactness: every path reproduces ``core.lifting.dwt_fwd_2d`` /
+``dwt_inv_2d`` exactly, for every scheme, every (H, W) >= (2, 2)
+including odd sizes and both rounding modes; tests sweep this.  See
+DESIGN.md §5-6 and §9.
 """
 from __future__ import annotations
 
@@ -38,14 +43,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import lifting as _lift
+from repro.core import schemes as S
 from repro.core.lifting import (
     Bands2D,
     Pyramid2D,
     _check_mode,
     check_levels_2d,
-    inv_update,
-    predict,
-    update,
 )
 from repro.kernels import backend as _backend
 from repro.kernels import tiled2d as _tiled
@@ -54,113 +58,43 @@ from repro.kernels.ops import _compute_dtype
 Array = jax.Array
 
 
-# ---------------------------------------------------------------------------
-# Axis-aware lifting stencils (pure slice/concat: no transposes, and the
-# building blocks stay sharding-friendly on the un-transformed axes).
-# ---------------------------------------------------------------------------
+def _fwd2d_math(x: Array, mode: str, scheme="cdf53"):
+    """One reference 2D level (``core.lifting.dwt_fwd_2d``) as a tuple.
+
+    Delegating to the oracle — not re-composing the axis cascade here —
+    keeps the 'xla backend == oracle' contract structural: there is one
+    implementation of the level composition to maintain.
+    """
+    b = _lift.dwt_fwd_2d(x, mode=mode, scheme=scheme)
+    return b.ll, b.lh, b.hl, b.hh
 
 
-def _slc(x: Array, start: int, stop: int, axis: int, stride: int = 1) -> Array:
-    return jax.lax.slice_in_dim(x, start, stop, stride=stride, axis=axis)
-
-
-def _split_axis(x: Array, axis: int) -> Tuple[Array, Array]:
-    """Even/odd polyphase split along ``axis`` (the lazy wavelet)."""
-    n = x.shape[axis]
-    if n % 2 == 0:
-        shape = x.shape[:axis] + (n // 2, 2) + x.shape[axis + 1 :]
-        pairs = x.reshape(shape)
-        return (
-            jax.lax.index_in_dim(pairs, 0, axis=axis + 1, keepdims=False),
-            jax.lax.index_in_dim(pairs, 1, axis=axis + 1, keepdims=False),
-        )
-    return _slc(x, 0, n, axis, stride=2), _slc(x, 1, n, axis, stride=2)
-
-
-def _edge_next(a: Array, axis: int) -> Array:
-    """a[n+1] with edge replication: concat(a[1:], a[-1:]) along axis."""
-    n = a.shape[axis]
-    return jnp.concatenate([_slc(a, 1, n, axis), _slc(a, n - 1, n, axis)], axis=axis)
-
-
-def _fwd_axis(x: Array, axis: int, mode: str) -> Tuple[Array, Array]:
-    """One forward lifting level along ``axis`` (== lifting.dwt53_fwd_1d)."""
-    axis = axis % x.ndim
-    even, odd = _split_axis(x, axis)
-    n_o = odd.shape[axis]
-    even_p = _slc(even, 0, n_o, axis)
-    even_next = _slc(_edge_next(even, axis), 0, n_o, axis)
-    # the arithmetic is the reference's own predict/update operators —
-    # only the extension/slicing here is axis-generalised
-    d = predict(even_p, even_next, odd)
-    d_prev = jnp.concatenate(
-        [_slc(d, 0, 1, axis), _slc(d, 0, n_o - 1, axis)], axis=axis
+def _inv2d_math(
+    ll: Array, lh: Array, hl: Array, hh: Array, mode: str, scheme="cdf53"
+) -> Array:
+    return _lift.dwt_inv_2d(
+        Bands2D(ll=ll, lh=lh, hl=hl, hh=hh), mode=mode, scheme=scheme
     )
-    if even.shape[axis] > n_o:
-        # odd length: symmetric extension d[n] := d[n-1] for the final update
-        last = _slc(d, n_o - 1, n_o, axis)
-        d_pad = jnp.concatenate([d, last], axis=axis)
-        d_prev_pad = jnp.concatenate([d_prev, last], axis=axis)
-    else:
-        d_pad, d_prev_pad = d, d_prev
-    s = update(even, d_pad, d_prev_pad, mode=mode)
-    return s, d
-
-
-def _inv_axis(s: Array, d: Array, axis: int, mode: str) -> Array:
-    """One inverse lifting level along ``axis`` (== lifting.dwt53_inv_1d)."""
-    axis = axis % s.ndim
-    n_e, n_o = s.shape[axis], d.shape[axis]
-    d_prev = jnp.concatenate(
-        [_slc(d, 0, 1, axis), _slc(d, 0, n_o - 1, axis)], axis=axis
-    )
-    if n_e > n_o:
-        last = _slc(d, n_o - 1, n_o, axis)
-        d_pad = jnp.concatenate([d, last], axis=axis)
-        d_prev_pad = jnp.concatenate([d_prev, last], axis=axis)
-    else:
-        d_pad, d_prev_pad = d, d_prev
-    even = inv_update(s, d_pad, d_prev_pad, mode=mode)
-    even_next = _slc(_edge_next(even, axis), 0, n_o, axis)
-    odd = d + jnp.right_shift(_slc(even, 0, n_o, axis) + even_next, 1)
-    # merge via stack+reshape (no scatter; keeps sharded axes sharded)
-    core = jnp.stack([_slc(even, 0, n_o, axis), odd], axis=axis + 1)
-    core = core.reshape(s.shape[:axis] + (2 * n_o,) + s.shape[axis + 1 :])
-    if n_e > n_o:
-        core = jnp.concatenate([core, _slc(even, n_e - 1, n_e, axis)], axis=axis)
-    return core
-
-
-def _fwd2d_math(x: Array, mode: str) -> Tuple[Array, Array, Array, Array]:
-    """Rows then columns, streams stay resident between the stages."""
-    s_r, d_r = _fwd_axis(x, -1, mode)  # rows (last axis)
-    ll, lh = _fwd_axis(s_r, -2, mode)  # columns, low stream
-    hl, hh = _fwd_axis(d_r, -2, mode)  # columns, high stream
-    return ll, lh, hl, hh
-
-
-def _inv2d_math(ll: Array, lh: Array, hl: Array, hh: Array, mode: str) -> Array:
-    s_r = _inv_axis(ll, lh, -2, mode)  # columns, low stream
-    d_r = _inv_axis(hl, hh, -2, mode)  # columns, high stream
-    return _inv_axis(s_r, d_r, -1, mode)  # rows
 
 
 # ---------------------------------------------------------------------------
 # Pallas fused kernel: one grid cell = one image, rows+columns in VMEM.
+# The kernel body IS the band-policy reference math, so the whole-image
+# path supports every registered scheme (windowability not required).
 # ---------------------------------------------------------------------------
 
 
-def _fwd2d_kernel(x_ref, ll_ref, lh_ref, hl_ref, hh_ref, *, mode: str):
-    ll, lh, hl, hh = _fwd2d_math(x_ref[...], mode)
+def _fwd2d_kernel(x_ref, ll_ref, lh_ref, hl_ref, hh_ref, *, scheme: str, mode: str):
+    ll, lh, hl, hh = _fwd2d_math(x_ref[...], mode, scheme)
     ll_ref[...] = ll
     lh_ref[...] = lh
     hl_ref[...] = hl
     hh_ref[...] = hh
 
 
-def _inv2d_kernel(ll_ref, lh_ref, hl_ref, hh_ref, x_ref, *, mode: str):
+def _inv2d_kernel(ll_ref, lh_ref, hl_ref, hh_ref, x_ref, *, scheme: str, mode: str):
     x_ref[...] = _inv2d_math(
-        ll_ref[...], lh_ref[...], hl_ref[...], hh_ref[...], mode
+        ll_ref[...], lh_ref[...], hl_ref[...], hh_ref[...], mode, scheme
     )
 
 
@@ -168,8 +102,8 @@ def _img_spec(h: int, w: int):
     return pl.BlockSpec((1, h, w), lambda b: (b, 0, 0))
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
-def _fwd2d_pallas(x: Array, mode: str, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("scheme", "mode", "interpret"))
+def _fwd2d_pallas(x: Array, scheme: str, mode: str, interpret: bool):
     bsz, h, w = x.shape
     h_e, h_o = h - h // 2, h // 2
     w_e, w_o = w - w // 2, w // 2
@@ -180,7 +114,7 @@ def _fwd2d_pallas(x: Array, mode: str, interpret: bool):
         jax.ShapeDtypeStruct((bsz, h_o, w_o), x.dtype),  # HH
     )
     return pl.pallas_call(
-        functools.partial(_fwd2d_kernel, mode=mode),
+        functools.partial(_fwd2d_kernel, scheme=scheme, mode=mode),
         grid=(bsz,),
         in_specs=[_img_spec(h, w)],
         out_specs=(
@@ -194,13 +128,16 @@ def _fwd2d_pallas(x: Array, mode: str, interpret: bool):
     )(x)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
-def _inv2d_pallas(ll: Array, lh: Array, hl: Array, hh: Array, mode: str, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("scheme", "mode", "interpret"))
+def _inv2d_pallas(
+    ll: Array, lh: Array, hl: Array, hh: Array,
+    scheme: str, mode: str, interpret: bool,
+):
     bsz, h_e, w_e = ll.shape
     h_o, w_o = lh.shape[1], hl.shape[2]
     h, w = h_e + h_o, w_e + w_o
     return pl.pallas_call(
-        functools.partial(_inv2d_kernel, mode=mode),
+        functools.partial(_inv2d_kernel, scheme=scheme, mode=mode),
         grid=(bsz,),
         in_specs=[
             _img_spec(h_e, w_e),
@@ -214,16 +151,17 @@ def _inv2d_pallas(ll: Array, lh: Array, hl: Array, hh: Array, mode: str, interpr
     )(ll, lh, hl, hh)
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def _fwd2d_xla(x: Array, mode: str):
-    return _fwd2d_math(x.astype(_compute_dtype(x.dtype)), mode)
+@functools.partial(jax.jit, static_argnames=("scheme", "mode"))
+def _fwd2d_xla(x: Array, scheme: str, mode: str):
+    return _fwd2d_math(x.astype(_compute_dtype(x.dtype)), mode, scheme)
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def _inv2d_xla(ll: Array, lh: Array, hl: Array, hh: Array, mode: str):
+@functools.partial(jax.jit, static_argnames=("scheme", "mode"))
+def _inv2d_xla(ll: Array, lh: Array, hl: Array, hh: Array, scheme: str, mode: str):
     cdt = _compute_dtype(ll.dtype)
     return _inv2d_math(
-        ll.astype(cdt), lh.astype(cdt), hl.astype(cdt), hh.astype(cdt), mode
+        ll.astype(cdt), lh.astype(cdt), hl.astype(cdt), hh.astype(cdt),
+        mode, scheme,
     )
 
 
@@ -237,60 +175,72 @@ def _fits_vmem(h: int, w: int) -> bool:
     return h * w <= _backend.fused2d_budget_elems()
 
 
-def _can_tile(h: int, w: int) -> bool:
-    # the tiled engine reflect-pads by 2, which needs >= 3 samples per dim
-    return h >= 3 and w >= 3
+def _can_tile(h: int, w: int, scheme: str) -> bool:
+    # the tiled engine's window dataflow must reproduce the band policy
+    # along both dims (scheme.can_window: symmetric schemes anywhere,
+    # halo-0 schemes on even dims, never cdf22-style antisymmetric lifts)
+    sch = S.get_scheme(scheme)
+    return sch.can_window(h) and sch.can_window(w)
 
 
-def _use_tiled(h: int, w: int) -> bool:
-    return _can_tile(h, w) and (_backend.tile_forced() or not _fits_vmem(h, w))
+def _use_tiled(h: int, w: int, scheme: str = "cdf53") -> bool:
+    return _can_tile(h, w, scheme) and (
+        _backend.tile_forced() or not _fits_vmem(h, w)
+    )
 
 
-def _fwd2d_level(x3: Array, mode: str, interpret: bool):
+def _fwd2d_level(x3: Array, scheme: str, mode: str, interpret: bool):
     """One forward level on a (B, H, W) compute-dtype batch (trace-time
     whole-image/tiled choice; both are Pallas)."""
     h, w = x3.shape[-2], x3.shape[-1]
-    if _use_tiled(h, w):
-        th, tw = _backend.pick_tile(h, w)
-        return _tiled.fwd2d_tiled(x3, mode, th, tw, interpret)
+    if _use_tiled(h, w, scheme):
+        th, tw = _backend.pick_tile(h, w, S.get_scheme(scheme).halo)
+        return _tiled.fwd2d_tiled(x3, mode, th, tw, interpret, scheme=scheme)
     if _fits_vmem(h, w):
-        return _fwd2d_pallas(x3, mode=mode, interpret=interpret)
-    # over budget but untileable (a dim < 3, e.g. a deep pyramid level of
-    # an extremely skewed image): in-graph jnp math — never an image-sized
-    # VMEM block.  Level 0 additionally warns via _resolve_2d.
-    return _fwd2d_math(x3, mode)
+        return _fwd2d_pallas(x3, scheme=scheme, mode=mode, interpret=interpret)
+    # over budget but untileable (a dim < 3 / an unwindowable scheme):
+    # in-graph jnp math — never an image-sized VMEM block.  Level 0
+    # additionally warns via _resolve_2d.
+    return _fwd2d_math(x3, mode, scheme)
 
 
-def _inv2d_level(ll3, lh3, hl3, hh3, mode: str, interpret: bool):
+def _inv2d_level(ll3, lh3, hl3, hh3, scheme: str, mode: str, interpret: bool):
     h = ll3.shape[-2] + lh3.shape[-2]
     w = ll3.shape[-1] + hl3.shape[-1]
-    if _use_tiled(h, w):
-        th, tw = _backend.pick_tile(h, w)
-        return _tiled.inv2d_tiled(ll3, lh3, hl3, hh3, mode, th, tw, interpret)
+    if _use_tiled(h, w, scheme):
+        th, tw = _backend.pick_tile(h, w, S.get_scheme(scheme).halo)
+        return _tiled.inv2d_tiled(
+            ll3, lh3, hl3, hh3, mode, th, tw, interpret, scheme=scheme
+        )
     if _fits_vmem(h, w):
-        return _inv2d_pallas(ll3, lh3, hl3, hh3, mode=mode, interpret=interpret)
-    return _inv2d_math(ll3, lh3, hl3, hh3, mode)  # see _fwd2d_level
+        return _inv2d_pallas(
+            ll3, lh3, hl3, hh3, scheme=scheme, mode=mode, interpret=interpret
+        )
+    return _inv2d_math(ll3, lh3, hl3, hh3, mode, scheme)  # see _fwd2d_level
 
 
-def _resolve_2d(backend: Optional[str], h: int, w: int) -> str:
+def _resolve_2d(backend: Optional[str], h: int, w: int, scheme: str = "cdf53") -> str:
     """Backend for a 2D transform; names the one remaining budget cliff.
 
-    Images too degenerate to tile (a dim of 2) that also exceed the
-    whole-image budget cannot run under Pallas; they degrade to the
-    (unbounded, bit-exact) XLA path with a one-time warning.
+    Images too degenerate (or schemes too asymmetric) to tile that also
+    exceed the whole-image budget cannot run under Pallas; they degrade
+    to the (unbounded, bit-exact) XLA path with a one-time warning.
     """
     b = _backend.resolve(backend)
-    if b != "xla" and not _fits_vmem(h, w) and not _can_tile(h, w):
+    if b != "xla" and not _fits_vmem(h, w) and not _can_tile(h, w, scheme):
         _backend.note_degrade(
             b, "xla",
-            f"budget: ({h}, {w}) exceeds the whole-image VMEM budget and a "
-            "dim < 3 cannot take the tiled halo path",
+            f"budget: ({h}, {w}) exceeds the whole-image VMEM budget and "
+            f"scheme {S.get_scheme(scheme).name!r} cannot take the tiled "
+            "halo path there",
         )
         return "xla"
     return b
 
 
-def plan_2d(h: int, w: int, backend: Optional[str] = None) -> str:
+def plan_2d(
+    h: int, w: int, backend: Optional[str] = None, scheme: str = "cdf53"
+) -> str:
     """Name the execution path a (h, w) 2D transform will take.
 
     One of ``whole-pallas`` / ``tiled-pallas`` / ``whole-interpret`` /
@@ -298,10 +248,11 @@ def plan_2d(h: int, w: int, backend: Optional[str] = None) -> str:
     this to assert that budget-sized images never silently leave the
     Pallas path on an accelerator.
     """
-    b = _resolve_2d(backend, h, w)
+    sch = S.get_scheme(scheme)
+    b = _resolve_2d(backend, h, w, sch)
     if b == "xla":
         return "xla"
-    kind = "tiled" if _use_tiled(h, w) else "whole"
+    kind = "tiled" if _use_tiled(h, w, sch) else "whole"
     return f"{kind}-{'interpret' if b == 'interpret' else 'pallas'}"
 
 
@@ -310,27 +261,28 @@ def plan_2d(h: int, w: int, backend: Optional[str] = None) -> str:
 # ---------------------------------------------------------------------------
 
 
-def dwt53_fwd_2d(
-    x: Array, mode: str = "paper", backend: Optional[str] = None
+def dwt_fwd_2d(
+    x: Array, mode: str = "paper", backend: Optional[str] = None, scheme="cdf53"
 ) -> Bands2D:
     """One fused 2D level over the last two axes (rows then columns).
 
     Runs the whole-image Pallas kernel when the image fits the VMEM
     budget and the tiled halo-window kernel when it does not — there is
-    no large-image XLA cliff.  Bit-exact vs ``core.lifting.dwt53_fwd_2d``
-    on every backend.
+    no large-image XLA cliff.  Bit-exact vs ``core.lifting.dwt_fwd_2d``
+    on every backend, for every registered scheme.
     """
     _check_mode(mode)
+    sch = S.get_scheme(scheme)
     if x.ndim < 2 or x.shape[-1] < 2 or x.shape[-2] < 2:
         raise ValueError(f"need a (..., H>=2, W>=2) input, got {x.shape}")
     h, w = x.shape[-2], x.shape[-1]
-    b = _resolve_2d(backend, h, w)
+    b = _resolve_2d(backend, h, w, sch)
     if b == "xla":
-        ll, lh, hl, hh = _fwd2d_xla(x, mode=mode)
+        ll, lh, hl, hh = _fwd2d_xla(x, scheme=sch, mode=mode)
         return Bands2D(ll=ll, lh=lh, hl=hl, hh=hh)
     lead = x.shape[:-2]
     xf = x.reshape((-1, h, w)).astype(_compute_dtype(x.dtype))
-    ll, lh, hl, hh = _fwd2d_level(xf, mode, _backend.interpret_flag(b))
+    ll, lh, hl, hh = _fwd2d_level(xf, sch, mode, _backend.interpret_flag(b))
     return Bands2D(
         ll=ll.reshape(lead + ll.shape[1:]),
         lh=lh.reshape(lead + lh.shape[1:]),
@@ -339,24 +291,30 @@ def dwt53_fwd_2d(
     )
 
 
-def dwt53_inv_2d(
-    bands: Bands2D, mode: str = "paper", backend: Optional[str] = None
+def dwt_inv_2d(
+    bands: Bands2D, mode: str = "paper", backend: Optional[str] = None,
+    scheme="cdf53",
 ) -> Array:
-    """Fused inverse of :func:`dwt53_fwd_2d` (columns then rows)."""
+    """Fused inverse of :func:`dwt_fwd_2d` (columns then rows)."""
     _check_mode(mode)
+    sch = S.get_scheme(scheme)
     ll = bands.ll
     h = ll.shape[-2] + bands.lh.shape[-2]
     w = ll.shape[-1] + bands.hl.shape[-1]
-    b = _resolve_2d(backend, h, w)
+    b = _resolve_2d(backend, h, w, sch)
     if b == "xla":
-        return _inv2d_xla(bands.ll, bands.lh, bands.hl, bands.hh, mode=mode)
+        return _inv2d_xla(
+            bands.ll, bands.lh, bands.hl, bands.hh, scheme=sch, mode=mode
+        )
     lead = ll.shape[:-2]
     cdt = _compute_dtype(ll.dtype)
     args = tuple(
         a.reshape((-1,) + a.shape[len(lead) :]).astype(cdt)
         for a in (bands.ll, bands.lh, bands.hl, bands.hh)
     )
-    x = _inv2d_level(*args, mode=mode, interpret=_backend.interpret_flag(b))
+    x = _inv2d_level(
+        *args, scheme=sch, mode=mode, interpret=_backend.interpret_flag(b)
+    )
     return x.reshape(lead + x.shape[1:])
 
 
@@ -370,20 +328,20 @@ def dwt53_inv_2d(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("levels", "mode", "interpret", "dispatch")
+    jax.jit, static_argnames=("levels", "scheme", "mode", "interpret", "dispatch")
 )
-def _fwd2d_multi_kernel(x, levels, mode, interpret, dispatch):
+def _fwd2d_multi_kernel(x, levels, scheme, mode, interpret, dispatch):
     # `dispatch` (backend.dispatch_state()) keys the jit cache on the env
     # overrides so REPRO_DWT_TILE / REPRO_DWT_VMEM_MB retrace, not no-op
     ll = x.astype(_compute_dtype(x.dtype))  # in-jit: no eager host copy
     details: List[Tuple[Array, Array, Array]] = []
     for _ in range(levels):
-        ll, lh, hl, hh = _fwd2d_level(ll, mode, interpret)
+        ll, lh, hl, hh = _fwd2d_level(ll, scheme, mode, interpret)
         details.append((lh, hl, hh))
     return ll, tuple(reversed(details))
 
 
-def _fwd2d_multi_xla(x, levels, mode):
+def _fwd2d_multi_xla(x, levels, scheme, mode):
     # per-level jitted dispatches, NOT one fused program: XLA:CPU compiles
     # the chained multi-level graph ~2x slower (it refuses to materialise
     # level l's bands cleanly for level l+1 even behind an
@@ -393,35 +351,37 @@ def _fwd2d_multi_xla(x, levels, mode):
     ll = x
     details: List[Tuple[Array, Array, Array]] = []
     for _ in range(levels):
-        ll, lh, hl, hh = _fwd2d_xla(ll, mode=mode)
+        ll, lh, hl, hh = _fwd2d_xla(ll, scheme=scheme, mode=mode)
         details.append((lh, hl, hh))
     return ll, tuple(reversed(details))
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mode", "interpret", "dispatch")
+    jax.jit, static_argnames=("scheme", "mode", "interpret", "dispatch")
 )
-def _inv2d_multi_kernel(ll, details, mode, interpret, dispatch):
+def _inv2d_multi_kernel(ll, details, scheme, mode, interpret, dispatch):
     cdt = _compute_dtype(ll.dtype)  # in-jit promotion: no eager copies
     ll = ll.astype(cdt)
     for lh, hl, hh in details:  # coarsest first
         ll = _inv2d_level(
-            ll, lh.astype(cdt), hl.astype(cdt), hh.astype(cdt), mode, interpret
+            ll, lh.astype(cdt), hl.astype(cdt), hh.astype(cdt),
+            scheme, mode, interpret,
         )
     return ll
 
 
-def _inv2d_multi_xla(ll, details, mode):
+def _inv2d_multi_xla(ll, details, scheme, mode):
     for lh, hl, hh in details:  # per-level dispatch: see _fwd2d_multi_xla
-        ll = _inv2d_xla(ll, lh, hl, hh, mode=mode)
+        ll = _inv2d_xla(ll, lh, hl, hh, scheme=scheme, mode=mode)
     return ll
 
 
-def dwt53_fwd_2d_multi(
+def dwt_fwd_2d_multi(
     x: Array,
     levels: int = 1,
     mode: str = "paper",
     backend: Optional[str] = None,
+    scheme="cdf53",
 ) -> Pyramid2D:
     """Fused multi-level 2D forward transform.
 
@@ -431,19 +391,21 @@ def dwt53_fwd_2d_multi(
     ``_fwd2d_multi_xla``).
     """
     _check_mode(mode)
+    sch = S.get_scheme(scheme)
     if x.ndim < 2:
         raise ValueError(f"need a (..., H, W) input, got {x.shape}")
     h, w = x.shape[-2], x.shape[-1]
     check_levels_2d(h, w, levels)
-    b = _resolve_2d(backend, h, w)
+    b = _resolve_2d(backend, h, w, sch)
     lead = x.shape[:-2]
     if b == "xla":
         # _fwd2d_xla promotes in-jit; no eager cast of the full image here
-        ll, details = _fwd2d_multi_xla(x, levels=levels, mode=mode)
+        ll, details = _fwd2d_multi_xla(x, levels=levels, scheme=sch, mode=mode)
         return Pyramid2D(ll=ll, details=details)
     xf = x.reshape((-1, h, w))  # metadata-only; promotion happens in-jit
     ll, details = _fwd2d_multi_kernel(
-        xf, levels=levels, mode=mode, interpret=_backend.interpret_flag(b),
+        xf, levels=levels, scheme=sch, mode=mode,
+        interpret=_backend.interpret_flag(b),
         dispatch=_backend.dispatch_state(),
     )
 
@@ -456,11 +418,13 @@ def dwt53_fwd_2d_multi(
     )
 
 
-def dwt53_inv_2d_multi(
-    pyr: Pyramid2D, mode: str = "paper", backend: Optional[str] = None
+def dwt_inv_2d_multi(
+    pyr: Pyramid2D, mode: str = "paper", backend: Optional[str] = None,
+    scheme="cdf53",
 ) -> Array:
-    """Inverse of :func:`dwt53_fwd_2d_multi` (one dispatch on Pallas)."""
+    """Inverse of :func:`dwt_fwd_2d_multi` (one dispatch on Pallas)."""
     _check_mode(mode)
+    sch = S.get_scheme(scheme)
     ll = pyr.ll
     h, w = ll.shape[-2], ll.shape[-1]
     for lh, hl, hh in pyr.details:  # validate band geometry coarsest-first
@@ -476,10 +440,10 @@ def dwt53_inv_2d_multi(
                 f"lh={lh.shape[-2:]}, hl={hl.shape[-2:]}, hh={hh.shape[-2:]}"
             )
         h, w = h + lh.shape[-2], w + hl.shape[-1]
-    b = _resolve_2d(backend, h, w)
+    b = _resolve_2d(backend, h, w, sch)
     if b == "xla":
         # _inv2d_xla promotes in-jit; pass the bands through untouched
-        return _inv2d_multi_xla(ll, tuple(pyr.details), mode=mode)
+        return _inv2d_multi_xla(ll, tuple(pyr.details), scheme=sch, mode=mode)
     lead = ll.shape[:-2]
 
     def flat(a: Array) -> Array:
@@ -487,7 +451,40 @@ def dwt53_inv_2d_multi(
 
     details = tuple((flat(lh), flat(hl), flat(hh)) for lh, hl, hh in pyr.details)
     x = _inv2d_multi_kernel(
-        flat(ll), details, mode=mode, interpret=_backend.interpret_flag(b),
+        flat(ll), details, scheme=sch, mode=mode,
+        interpret=_backend.interpret_flag(b),
         dispatch=_backend.dispatch_state(),
     )
     return x.reshape(lead + x.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# (5,3) aliases — the seed's public names; nothing downstream breaks.
+# ---------------------------------------------------------------------------
+
+
+def dwt53_fwd_2d(
+    x: Array, mode: str = "paper", backend: Optional[str] = None
+) -> Bands2D:
+    return dwt_fwd_2d(x, mode=mode, backend=backend, scheme="cdf53")
+
+
+def dwt53_inv_2d(
+    bands: Bands2D, mode: str = "paper", backend: Optional[str] = None
+) -> Array:
+    return dwt_inv_2d(bands, mode=mode, backend=backend, scheme="cdf53")
+
+
+def dwt53_fwd_2d_multi(
+    x: Array,
+    levels: int = 1,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+) -> Pyramid2D:
+    return dwt_fwd_2d_multi(x, levels=levels, mode=mode, backend=backend, scheme="cdf53")
+
+
+def dwt53_inv_2d_multi(
+    pyr: Pyramid2D, mode: str = "paper", backend: Optional[str] = None
+) -> Array:
+    return dwt_inv_2d_multi(pyr, mode=mode, backend=backend, scheme="cdf53")

@@ -1,27 +1,35 @@
-"""Public wrappers around the Pallas (5,3) lifting kernels, with
-compiled-by-default backend dispatch (see ``kernels/backend.py``).
+"""Public wrappers around the Pallas lifting kernels, with
+compiled-by-default backend dispatch (see ``kernels/backend.py``) and
+scheme parameterization (see ``core/schemes.py``).
 
-Handles everything the kernel keeps out of VMEM: polyphase Split/Merge
-(the paper's lazy wavelet), arbitrary lengths (odd lengths, non powers of
-two — an explicit paper claim), right-edge padding with the symmetric
-extension policy of ``core.lifting``, halo-column gathering, dtype
-promotion (int8 inputs are computed in int16: the transform grows dynamic
-range by <= 2 bits per level, the paper's 8-bit-in / 9-bit-register
-design), and multi-level recursion.
+Handles everything the kernel keeps out of VMEM: window gathering
+through whole-point-reflected index maps (the boundary policy — halo
+width derived from ``scheme.halo`` instead of the seed's hard-coded
+(5,3) columns), arbitrary lengths (odd lengths, non powers of two — an
+explicit paper claim), dtype promotion (int8/int16 inputs are computed
+in int32: narrow-dtype lifting sums used to wrap silently, destroying
+the band statistics the int8 quantizer downstream relies on), and
+multi-level recursion.
 
 Every public function takes ``backend=None`` and resolves it through
 ``backend.resolve``: ``pallas`` (compiled kernels, TPU default),
 ``xla`` (the jnp reference under jit, CPU/GPU default), or ``interpret``
 (Pallas emulator, debugging only).  The multi-level entry points
-(``dwt53_fwd`` / ``dwt53_inv``) are FUSED: all levels trace into one
+(``dwt_fwd`` / ``dwt_inv``) are FUSED: all levels trace into one
 compiled computation, the batch flattening / dtype promotion / row
 padding happen once, and the polyphase streams stay device-resident
 between levels instead of round-tripping through a per-level dispatch
 (DESIGN.md §4).
 
-Bit-exactness contract: for every shape/dtype/mode and every backend
-these wrappers return exactly what `kernels.ref` (== `core.lifting`)
-returns. Tests sweep this.
+Schemes whose steps do not commute with whole-point reflection (e.g.
+``cdf22``'s antisymmetric gradient lift) cannot run the windowed kernel
+dataflow; on the kernel backends they fall back to the in-graph
+band-policy math inside the same jitted dispatch — still compiled,
+still bit-exact (the same precedent as the small-signal fallback).
+
+Bit-exactness contract: for every scheme/shape/dtype/mode and every
+backend these wrappers return exactly what `kernels.ref` (==
+`core.lifting`) returns. Tests sweep this.
 """
 from __future__ import annotations
 
@@ -32,20 +40,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import lifting as _lift
+from repro.core import schemes as S
 from repro.core.lifting import WaveletPyramid, _check_mode
 from repro.kernels import backend as _backend
 from repro.kernels import dwt53 as _k
-from repro.kernels import ref as _ref
 
 # below this many pairs the kernel grid degenerates; use the jnp reference
 _MIN_KERNEL_PAIRS = 8
 
 
 def _compute_dtype(dtype) -> jnp.dtype:
-    if dtype == jnp.int8:
-        return jnp.dtype(jnp.int16)
-    if dtype in (jnp.int16, jnp.int32, jnp.int64):
-        return jnp.dtype(dtype)
+    """Narrow ints (signed or unsigned) promote to int32: the lifting
+    cascade grows dynamic range (up to ~2 bits per level per step; more
+    for weighted schemes like 97m), details go negative, and narrow
+    predict sums wrap silently otherwise.  Mirrors
+    ``lifting.promote_narrow`` so every backend matches the oracle."""
+    if dtype in (jnp.int8, jnp.int16, jnp.int32, jnp.uint8, jnp.uint16):
+        return jnp.dtype(jnp.int32)
+    if dtype == jnp.int64:
+        return jnp.dtype(jnp.int64)
     raise TypeError(f"integer DWT requires an int dtype, got {dtype}")
 
 
@@ -59,146 +73,94 @@ def _ceil_to(x: int, m: int) -> int:
 # ---------------------------------------------------------------------------
 
 
+def _pad_rows(a: jax.Array, rows_pad: int) -> jax.Array:
+    rows = a.shape[0]
+    if rows_pad == rows:
+        return a
+    return jnp.pad(a, ((0, rows_pad - rows), (0, 0)), mode="edge")
+
+
 def _fwd_level(
-    xf: jax.Array, mode: str, interpret: bool
+    xf: jax.Array, scheme: str, mode: str, interpret: bool
 ) -> Tuple[jax.Array, jax.Array]:
     """One forward level over a 2D (rows, n) array; returns (s, d)."""
-    offset = 2 if mode == "jpeg2000" else 0
+    sch = S.get_scheme(scheme)
     rows, n = xf.shape
-    n_o = n // 2  # number of (s, d) pairs the kernel computes
+    n_o = n // 2
     n_e = n - n_o
-    if n_o < _MIN_KERNEL_PAIRS:
-        return _ref.dwt53_fwd_1d(xf, mode=mode)
+    if n_o < _MIN_KERNEL_PAIRS or not sch.can_window(n):
+        return S.lift_fwd_axis(xf, scheme, axis=-1, mode=mode)
 
-    xe = xf[:, 0::2][:, :n_o]  # pair-aligned evens
-    xo = xf[:, 1::2]
-
-    block_rows, block_pairs = _backend.pick_blocks(rows, n_o)
+    halo = sch.halo
+    block_rows, block_pairs = _backend.pick_blocks(rows, n_e)
     rows_pad = _ceil_to(rows, block_rows)
-    pairs_pad = _ceil_to(n_o, block_pairs)
-    # edge replication implements the right symmetric extension (DESIGN §2)
-    xe_p = jnp.pad(xe, ((0, rows_pad - rows), (0, pairs_pad - n_o)), mode="edge")
-    xo_p = jnp.pad(xo, ((0, rows_pad - rows), (0, pairs_pad - n_o)), mode="edge")
-
+    pairs_pad = _ceil_to(n_e, block_pairs)
     n_tiles = pairs_pad // block_pairs
-    tile_starts = np.arange(n_tiles) * block_pairs
-    # left halos: tile 0 uses (xe[1], xo[0]) so the in-kernel recomputed
-    # d_left equals d[0] — the reference's  d[-1] := d[0]  policy.
-    xel_idx = np.maximum(tile_starts - 1, 0)
-    xel_idx[0] = min(1, n_o - 1)
-    xol_idx = np.maximum(tile_starts - 1, 0)
-    # right halo: xe[n+1] of the next tile; last tile takes the true next
-    # even if one exists (odd N), else the edge (symmetric extension).
-    xer_idx = np.minimum(tile_starts + block_pairs, pairs_pad - 1)
-
-    xe_left = xe_p[:, xel_idx]
-    xo_left = xo_p[:, xol_idx]
-    xe_right = xe_p[:, xer_idx]
-    if n_e > n_o and pairs_pad == n_o:
-        # odd N, no pair padding: the last tile's right halo is the real
-        # final even sample, not the edge replica.
-        xe_right = xe_right.at[:rows, -1].set(xf[:, n - 1])
-    elif n_e > n_o:
-        # odd N with padding: overwrite the padded evens' first column so
-        # in-tile xe_next for the last real pair is the true last sample.
-        xe_p = xe_p.at[:rows, n_o].set(xf[:, n - 1])
-        xe_right = xe_p[:, xer_idx]
-
-    s_p, d_p = _k.dwt53_fwd_tiles(
-        xe_p,
-        xo_p,
-        xe_left,
-        xo_left,
-        xe_right,
+    wlen = 2 * block_pairs + 2 * halo
+    # trace-time window maps: tile t covers core pairs [t*bp, (t+1)*bp),
+    # i.e. samples [2*t*bp - halo, ...+wlen) reflected into range — every
+    # window entry is an exact whole-point extension value.
+    idx = np.stack(
+        [
+            S.reflect_indices(2 * t * block_pairs - halo, wlen, n)
+            for t in range(n_tiles)
+        ]
+    )
+    wins = _pad_rows(xf, rows_pad)[:, idx]  # (rows_pad, n_tiles, wlen)
+    s_t, d_t = _k.lift_fwd_windows(
+        wins,
+        scheme=sch,
+        mode=mode,
         block_rows=block_rows,
         block_pairs=block_pairs,
-        offset=offset,
         interpret=interpret,
     )
-    s = s_p[:rows, :n_o]
-    d = d_p[:rows, :n_o]
-    if n_e > n_o:
-        # final s column for odd N: s[n_e-1] = x[N-1] + ((d[-1]+d[-1])>>2)
-        t = d[:, -1:] + d[:, -1:]
-        if offset:
-            t = t + offset
-        s_last = xf[:, n - 1 :] + jnp.right_shift(t, 2)
-        s = jnp.concatenate([s, s_last], axis=1)
+    s = s_t.reshape(rows_pad, pairs_pad)[:rows, :n_e]
+    d = d_t.reshape(rows_pad, pairs_pad)[:rows, :n_o]
     return s, d
 
 
 def _inv_level(
-    sf: jax.Array, df: jax.Array, mode: str, interpret: bool
+    sf: jax.Array, df: jax.Array, scheme: str, mode: str, interpret: bool
 ) -> jax.Array:
     """One inverse level over 2D (rows, n_e)/(rows, n_o) bands."""
-    offset = 2 if mode == "jpeg2000" else 0
+    sch = S.get_scheme(scheme)
     rows, n_e = sf.shape
     n_o = df.shape[-1]
     n = n_e + n_o
-    if n_o < _MIN_KERNEL_PAIRS:
-        return _ref.dwt53_inv_1d(sf, df, mode=mode)
+    if n_o < _MIN_KERNEL_PAIRS or not sch.can_window(n):
+        return S.lift_inv_axis(sf, df, scheme, axis=-1, mode=mode)
 
-    s_k = sf[:, :n_o]
-    block_rows, block_pairs = _backend.pick_blocks(rows, n_o)
+    m = sch.inv_margin
+    block_rows, block_pairs = _backend.pick_blocks(rows, n_e)
     rows_pad = _ceil_to(rows, block_rows)
-    pairs_pad = _ceil_to(n_o, block_pairs)
-    s_p = jnp.pad(s_k, ((0, rows_pad - rows), (0, pairs_pad - n_o)), mode="edge")
-    d_p = jnp.pad(df, ((0, rows_pad - rows), (0, pairs_pad - n_o)), mode="edge")
-    if pairs_pad > n_o and n_o >= 2 and n_e == n_o:
-        # even N: the first padded d column must hold d[n_o-2] so the
-        # recomputed even[n_o] equals the reference's symmetric policy.
-        d_p = d_p.at[:rows, n_o].set(df[:, n_o - 2])
-    if pairs_pad > n_o and n_e > n_o:
-        # odd N: d extension is d[n] := d[n-1] (edge) — already satisfied —
-        # and even[n_o] = s[n_o] - ((d[n_o-1]+d[n_o-1])>>2) needs the true
-        # final s in the first padded column.
-        s_p = s_p.at[:rows, n_o].set(sf[:, n_e - 1])
-
+    pairs_pad = _ceil_to(n_e, block_pairs)
     n_tiles = pairs_pad // block_pairs
-    tile_starts = np.arange(n_tiles) * block_pairs
-    dl_idx = np.maximum(tile_starts - 1, 0)  # tile 0: d[-1] := d[0]
-    r_idx = np.minimum(tile_starts + block_pairs, pairs_pad - 1)
-
-    d_left = d_p[:, dl_idx]
-    s_right = s_p[:, r_idx]
-    d_right = d_p[:, r_idx]
-    if pairs_pad == n_o:  # no padding: right halos of the LAST tile
-        if n_e > n_o:
-            # odd N: even[n_o] = s[n_e-1] - ((d[n_o-1]+d[n_o-1]) >> 2)
-            s_right = s_right.at[:rows, -1].set(sf[:, n_e - 1])
-            d_right = d_right.at[:rows, -1].set(df[:, n_o - 1])
-        else:
-            # even N: even_next[last] = even[n_e-1] =
-            #   s[n_e-1] - ((d[n_e-1] + d[n_e-2]) >> 2)
-            s_right = s_right.at[:rows, -1].set(sf[:, n_e - 1])
-            d_right = d_right.at[:rows, -1].set(df[:, n_o - 2])
-
-    xe_p, xo_p = _k.dwt53_inv_tiles(
-        s_p,
-        d_p,
-        d_left,
-        s_right,
-        d_right,
+    wlen = block_pairs + 2 * m
+    idx_s = np.stack(
+        [
+            S.reflect_entries(t * block_pairs - m, wlen, 0, n)
+            for t in range(n_tiles)
+        ]
+    )
+    idx_d = np.stack(
+        [
+            S.reflect_entries(t * block_pairs - m, wlen, 1, n)
+            for t in range(n_tiles)
+        ]
+    )
+    s_wins = _pad_rows(sf, rows_pad)[:, idx_s]
+    d_wins = _pad_rows(df, rows_pad)[:, idx_d]
+    x_t = _k.lift_inv_windows(
+        s_wins,
+        d_wins,
+        scheme=sch,
+        mode=mode,
         block_rows=block_rows,
         block_pairs=block_pairs,
-        offset=offset,
         interpret=interpret,
     )
-    xe = xe_p[:rows, :n_o]
-    xo = xo_p[:rows, :n_o]
-    # interleave via stack+reshape: pure layout ops that the SPMD
-    # partitioner keeps sharded (a scatter .at[0::2].set on a sharded axis
-    # all-gathers the whole tensor — core.lifting's own sharding note).
-    out = jnp.stack([xe, xo], axis=-1).reshape(rows, 2 * n_o)
-    if n_e > n_o:
-        # final even sample for odd N: x[N-1] = s[n_e-1] - ((d[-1]+d[-1])>>2)
-        t = df[:, -1:] + df[:, -1:]
-        if offset:
-            t = t + offset
-        out = jnp.concatenate(
-            [out, sf[:, n_e - 1 :] - jnp.right_shift(t, 2)], axis=1
-        )
-    return out
+    return x_t.reshape(rows_pad, 2 * pairs_pad)[:rows, :n]
 
 
 # ---------------------------------------------------------------------------
@@ -206,44 +168,46 @@ def _inv_level(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
-def _fwd_1d_kernel(x, mode, interpret):
+@functools.partial(jax.jit, static_argnames=("scheme", "mode", "interpret"))
+def _fwd_1d_kernel(x, scheme, mode, interpret):
     n = x.shape[-1]
     lead = x.shape[:-1]
     cdt = _compute_dtype(x.dtype)
     xf = x.reshape((-1, n)).astype(cdt)
-    s, d = _fwd_level(xf, mode, interpret)
+    s, d = _fwd_level(xf, scheme, mode, interpret)
     return (
         s.reshape(lead + (s.shape[-1],)),
         d.reshape(lead + (d.shape[-1],)),
     )
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def _fwd_1d_xla(x, mode):
-    cdt = _compute_dtype(x.dtype)
-    return _ref.dwt53_fwd_1d(x.astype(cdt), mode=mode)
+@functools.partial(jax.jit, static_argnames=("scheme", "mode"))
+def _fwd_1d_xla(x, scheme, mode):
+    # delegate to the oracle (promotion included): one implementation of
+    # the reference semantics keeps this path structurally bit-exact
+    return _lift.dwt_fwd_1d(x, mode=mode, scheme=scheme)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
-def _inv_1d_kernel(s, d, mode, interpret):
+@functools.partial(jax.jit, static_argnames=("scheme", "mode", "interpret"))
+def _inv_1d_kernel(s, d, scheme, mode, interpret):
     n_e, n_o = s.shape[-1], d.shape[-1]
     lead = s.shape[:-1]
     cdt = _compute_dtype(s.dtype)
     sf = s.reshape((-1, n_e)).astype(cdt)
     df = d.reshape((-1, n_o)).astype(cdt)
-    x = _inv_level(sf, df, mode, interpret)
+    x = _inv_level(sf, df, scheme, mode, interpret)
     return x.reshape(lead + (n_e + n_o,))
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def _inv_1d_xla(s, d, mode):
-    cdt = _compute_dtype(s.dtype)
-    return _ref.dwt53_inv_1d(s.astype(cdt), d.astype(cdt), mode=mode)
+@functools.partial(jax.jit, static_argnames=("scheme", "mode"))
+def _inv_1d_xla(s, d, scheme, mode):
+    return _lift.dwt_inv_1d(s, d, mode=mode, scheme=scheme)
 
 
-@functools.partial(jax.jit, static_argnames=("levels", "mode", "interpret"))
-def _fwd_multi_kernel(x, levels, mode, interpret):
+@functools.partial(
+    jax.jit, static_argnames=("levels", "scheme", "mode", "interpret")
+)
+def _fwd_multi_kernel(x, levels, scheme, mode, interpret):
     """Fused multi-level forward: one compiled computation for all levels.
 
     Flatten/promote once, keep the (rows, n) streams resident, recurse on
@@ -255,7 +219,7 @@ def _fwd_multi_kernel(x, levels, mode, interpret):
     s = x.reshape((-1, n)).astype(cdt)
     details: List[jax.Array] = []
     for _ in range(levels):
-        s, d = _fwd_level(s, mode, interpret)
+        s, d = _fwd_level(s, scheme, mode, interpret)
         details.append(d)
     return (
         s.reshape(lead + (s.shape[-1],)),
@@ -263,32 +227,31 @@ def _fwd_multi_kernel(x, levels, mode, interpret):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("levels", "mode"))
-def _fwd_multi_xla(x, levels, mode):
-    cdt = _compute_dtype(x.dtype)
-    pyr = _ref.dwt53_fwd(x.astype(cdt), levels=levels, mode=mode)
+@functools.partial(jax.jit, static_argnames=("levels", "scheme", "mode"))
+def _fwd_multi_xla(x, levels, scheme, mode):
+    pyr = _lift.dwt_fwd(x, levels=levels, mode=mode, scheme=scheme)
     return pyr.approx, pyr.details
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
-def _inv_multi_kernel(approx, details, mode, interpret):
+@functools.partial(jax.jit, static_argnames=("scheme", "mode", "interpret"))
+def _inv_multi_kernel(approx, details, scheme, mode, interpret):
     """Fused multi-level inverse: all levels in one compiled computation."""
     lead = approx.shape[:-1]
     cdt = _compute_dtype(approx.dtype)
     s = approx.reshape((-1, approx.shape[-1])).astype(cdt)
     for d in details:  # coarsest first
         df = d.reshape((-1, d.shape[-1])).astype(cdt)
-        s = _inv_level(s, df, mode, interpret)
+        s = _inv_level(s, df, scheme, mode, interpret)
     return s.reshape(lead + (s.shape[-1],))
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def _inv_multi_xla(approx, details, mode):
-    cdt = _compute_dtype(approx.dtype)
-    pyr = WaveletPyramid(
-        approx=approx.astype(cdt), details=tuple(d.astype(cdt) for d in details)
+@functools.partial(jax.jit, static_argnames=("scheme", "mode"))
+def _inv_multi_xla(approx, details, scheme, mode):
+    return _lift.dwt_inv(
+        WaveletPyramid(approx=approx, details=tuple(details)),
+        mode=mode,
+        scheme=scheme,
     )
-    return _ref.dwt53_inv(pyr, mode=mode)
 
 
 # ---------------------------------------------------------------------------
@@ -296,66 +259,97 @@ def _inv_multi_xla(approx, details, mode):
 # ---------------------------------------------------------------------------
 
 
-def dwt53_fwd_1d(
-    x: jax.Array, mode: str = "paper", backend: Optional[str] = None
+def dwt_fwd_1d(
+    x: jax.Array,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+    scheme="cdf53",
 ) -> Tuple[jax.Array, jax.Array]:
     """Backend-dispatched forward transform along the last axis. N >= 2.
 
     Returns (s, d) with len(s) = ceil(N/2), len(d) = floor(N/2), matching
-    ``core.lifting.dwt53_fwd_1d`` bit-exactly.
+    ``core.lifting.dwt_fwd_1d`` bit-exactly for the same scheme.
     """
     _check_mode(mode)
+    sch = S.get_scheme(scheme)
     if x.shape[-1] < 2:
         raise ValueError("need at least 2 samples")
     b = _backend.resolve(backend)
     if b == "xla":
-        return _fwd_1d_xla(x, mode=mode)
-    return _fwd_1d_kernel(x, mode=mode, interpret=_backend.interpret_flag(b))
+        return _fwd_1d_xla(x, scheme=sch, mode=mode)
+    return _fwd_1d_kernel(
+        x, scheme=sch, mode=mode, interpret=_backend.interpret_flag(b)
+    )
 
 
-def dwt53_inv_1d(
-    s: jax.Array, d: jax.Array, mode: str = "paper", backend: Optional[str] = None
+def dwt_inv_1d(
+    s: jax.Array,
+    d: jax.Array,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+    scheme="cdf53",
 ) -> jax.Array:
     """Backend-dispatched inverse transform; bit-exact vs core.lifting."""
     _check_mode(mode)
+    sch = S.get_scheme(scheme)
     if s.shape[-1] - d.shape[-1] not in (0, 1):
         raise ValueError("band length mismatch")
     b = _backend.resolve(backend)
     if b == "xla":
-        return _inv_1d_xla(s, d, mode=mode)
-    return _inv_1d_kernel(s, d, mode=mode, interpret=_backend.interpret_flag(b))
+        return _inv_1d_xla(s, d, scheme=sch, mode=mode)
+    return _inv_1d_kernel(
+        s, d, scheme=sch, mode=mode, interpret=_backend.interpret_flag(b)
+    )
 
 
-def dwt53_fwd(
+def dwt_fwd(
     x: jax.Array,
     levels: int = 1,
     mode: str = "paper",
     backend: Optional[str] = None,
+    scheme="cdf53",
 ) -> WaveletPyramid:
-    """Fused multi-level forward transform (one compiled dispatch)."""
+    """Fused multi-level forward transform (one compiled dispatch).
+
+    ``levels=0`` is the identity pyramid, so ``levels=max_levels(n)``
+    loops are safe on degenerate shapes.
+    """
     _check_mode(mode)
-    if levels < 1:
-        raise ValueError("levels must be >= 1")
+    sch = S.get_scheme(scheme)
+    if levels < 0:
+        raise ValueError("levels must be >= 0")
     n = x.shape[-1]
     for _ in range(levels):
         if n < 2:
-            raise ValueError(f"signal too short for {levels} levels (got {x.shape[-1]})")
+            raise ValueError(
+                f"signal too short for {levels} levels (got {x.shape[-1]})"
+            )
         n = n - n // 2
     b = _backend.resolve(backend)
     if b == "xla":
-        approx, details = _fwd_multi_xla(x, levels=levels, mode=mode)
+        approx, details = _fwd_multi_xla(
+            x, levels=levels, scheme=sch, mode=mode
+        )
     else:
         approx, details = _fwd_multi_kernel(
-            x, levels=levels, mode=mode, interpret=_backend.interpret_flag(b)
+            x,
+            levels=levels,
+            scheme=sch,
+            mode=mode,
+            interpret=_backend.interpret_flag(b),
         )
     return WaveletPyramid(approx=approx, details=details)
 
 
-def dwt53_inv(
-    pyr: WaveletPyramid, mode: str = "paper", backend: Optional[str] = None
+def dwt_inv(
+    pyr: WaveletPyramid,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+    scheme="cdf53",
 ) -> jax.Array:
     """Fused multi-level inverse transform (one compiled dispatch)."""
     _check_mode(mode)
+    sch = S.get_scheme(scheme)
     # validate band lengths per level up front: every backend must reject a
     # malformed pyramid identically (the xla path raises inside ref, the
     # kernel path would otherwise silently reconstruct garbage)
@@ -368,8 +362,45 @@ def dwt53_inv(
         n = n + d.shape[-1]
     b = _backend.resolve(backend)
     if b == "xla":
-        return _inv_multi_xla(pyr.approx, tuple(pyr.details), mode=mode)
+        return _inv_multi_xla(
+            pyr.approx, tuple(pyr.details), scheme=sch, mode=mode
+        )
     return _inv_multi_kernel(
-        pyr.approx, tuple(pyr.details), mode=mode,
+        pyr.approx,
+        tuple(pyr.details),
+        scheme=sch,
+        mode=mode,
         interpret=_backend.interpret_flag(b),
     )
+
+
+# ---------------------------------------------------------------------------
+# (5,3) aliases — the seed's public names; nothing downstream breaks.
+# ---------------------------------------------------------------------------
+
+
+def dwt53_fwd_1d(
+    x: jax.Array, mode: str = "paper", backend: Optional[str] = None
+) -> Tuple[jax.Array, jax.Array]:
+    return dwt_fwd_1d(x, mode=mode, backend=backend, scheme="cdf53")
+
+
+def dwt53_inv_1d(
+    s: jax.Array, d: jax.Array, mode: str = "paper", backend: Optional[str] = None
+) -> jax.Array:
+    return dwt_inv_1d(s, d, mode=mode, backend=backend, scheme="cdf53")
+
+
+def dwt53_fwd(
+    x: jax.Array,
+    levels: int = 1,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+) -> WaveletPyramid:
+    return dwt_fwd(x, levels=levels, mode=mode, backend=backend, scheme="cdf53")
+
+
+def dwt53_inv(
+    pyr: WaveletPyramid, mode: str = "paper", backend: Optional[str] = None
+) -> jax.Array:
+    return dwt_inv(pyr, mode=mode, backend=backend, scheme="cdf53")

@@ -1,6 +1,7 @@
 """Pure-jnp oracle for the Pallas DWT kernels.
 
-The reference IS the paper-faithful implementation in ``core.lifting``;
+The reference IS the paper-faithful implementation in ``core.lifting``
+(scheme-parameterized band-policy math from ``core.schemes``);
 re-exported here so the kernels package follows the <name>.py / ops.py /
 ref.py convention and tests can import the oracle from one place.
 """
@@ -16,4 +17,12 @@ from repro.core.lifting import (  # noqa: F401
     dwt53_inv_1d,
     dwt53_inv_2d,
     dwt53_inv_2d_multi,
+    dwt_fwd,
+    dwt_fwd_1d,
+    dwt_fwd_2d,
+    dwt_fwd_2d_multi,
+    dwt_inv,
+    dwt_inv_1d,
+    dwt_inv_2d,
+    dwt_inv_2d_multi,
 )

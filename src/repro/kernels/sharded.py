@@ -1,30 +1,36 @@
 """Multi-device 2D DWT: rows spatially sharded, halos via ``ppermute``.
 
-The paper's parallel lifting architecture needs only a 2-sample overlap
-between neighboring PEs; across devices that overlap becomes an explicit
-halo exchange.  This module runs the full multi-level 2D Mallat pyramid
-under ``shard_map`` with the image's row axis sharded over a mesh axis
-(``data`` by default, via the same logical-rules machinery as the rest of
-the system — ``sharding.spec_for``):
+The paper's parallel lifting architecture needs only a small boundary
+overlap between neighboring PEs — ``scheme.halo`` samples, derived from
+the scheme's step supports — and across devices that overlap becomes an
+explicit halo exchange.  This module runs the full multi-level 2D Mallat
+pyramid under ``shard_map`` with the image's row axis sharded over a
+mesh axis (``data`` by default, via the same logical-rules machinery as
+the rest of the system — ``sharding.spec_for``):
 
   * The row-direction (width) lifting is device-local: each shard holds
-    full rows, and the stencils slice along the unsharded last axis.
-  * The column-direction lifting needs 2 rows from each spatial neighbor
-    per level.  Both row-transformed streams (s_r | d_r, together exactly
-    one image row wide) are exchanged in a single ``ppermute`` per
-    direction — 2 rows to the previous neighbor, 2 to the next, per
-    level.  Global edges swap the received halo for the whole-point
-    reflect rows computed locally, so the boundary policy matches the
-    reference exactly (same identity the tiled engine rests on).
-  * The inverse exchanges 1 band-row per direction per level (d from the
-    previous neighbor; s and d from the next) and applies the role
-    policies of ``tiled2d.pad_bands_for_inverse`` at the global edges.
+    full rows and runs the band-policy reference math
+    (``schemes.lift_fwd_axis``) along the unsharded last axis — any
+    scheme, any width parity.
+  * The column-direction lifting needs ``scheme.halo`` rows from each
+    spatial neighbor per level (2 for the paper's cdf53, 4 for 97m, none
+    for haar).  Both row-transformed streams (s_r | d_r, together
+    exactly one image row wide) are exchanged in a single ``ppermute``
+    per direction per level.  Global edges swap the received halo for
+    whole-point reflect rows computed locally, so the boundary policy
+    matches the reference exactly (same identity the tiled engine rests
+    on — hence the scheme gate: steps must commute with reflection, or
+    exchange nothing at all).
+  * The inverse exchanges ``scheme.inv_margin`` band-rows of all four
+    subbands per direction per level and swaps global edges for the
+    band-policy rows (``schemes.reflect_entry`` patterns).
 
-Local compute reuses the interior-math helpers of ``kernels/tiled2d.py``
-(the same functions that run inside the Pallas kernels), so the sharded
-transform is bit-exact vs the single-device engine — the tier-1 CPU-mesh
-test asserts it.  Shapes: H must divide by ``axis_size * 2**levels`` with
-at least 4 local rows at the coarsest level; W >= 3 (any parity).
+Local compute reuses the interior-math primitives of
+``core/schemes.py`` (the same functions that run inside the Pallas
+kernels), so the sharded transform is bit-exact vs the single-device
+engine — the tier-1 CPU-mesh test asserts it per scheme.  Shapes: H must
+divide by ``axis_size * 2**levels`` with enough local rows for the
+scheme's halo at the coarsest level; W >= 3 at every level (any parity).
 
 See DESIGN.md §7 for the communication pattern.
 """
@@ -38,9 +44,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro import sharding as SH
+from repro.core import schemes as S
 from repro.core.lifting import Pyramid2D, _check_mode
 from repro.kernels.ops import _compute_dtype
-from repro.kernels.tiled2d import _fwd_axis_ext, _inv_axis_ext
 
 Array = jax.Array
 
@@ -58,12 +64,28 @@ def _shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
     )
 
 
-def check_shardable(h: int, w: int, n_shards: int, levels: int) -> None:
+def _scheme_shardable(sch: S.LiftingScheme) -> bool:
+    # the column stage's exchanged-halo interior math must reproduce the
+    # band policy: reflection-commuting steps, or no halo at all (haar —
+    # column lengths are even by the divisibility constraint)
+    return sch.symmetric or sch.halo == 0
+
+
+def check_shardable(
+    h: int, w: int, n_shards: int, levels: int, scheme="cdf53"
+) -> None:
     """Raise unless (h, w) supports a row-sharded `levels`-deep pyramid."""
+    sch = S.get_scheme(scheme)
     if levels < 1:
         raise ValueError("levels must be >= 1")
+    if not _scheme_shardable(sch):
+        raise ValueError(
+            f"scheme {sch.name!r} has reflection-asymmetric steps and no "
+            "halo-free form; the sharded engine cannot reproduce its "
+            "boundary policy — use the fused 2D engine instead"
+        )
     wl = w
-    for _ in range(levels):  # every level reflect-pads its width by 2
+    for _ in range(levels):
         if wl < 3:
             raise ValueError(
                 f"sharded transform needs W >= 3 at every level, got W={w} "
@@ -71,27 +93,23 @@ def check_shardable(h: int, w: int, n_shards: int, levels: int) -> None:
             )
         wl = wl - wl // 2
     step = n_shards << levels
-    if h % step or h // step < 2:
+    min_local = max(4, sch.halo + 2)  # coarsest-level local rows floor
+    if h % step or 2 * (h // step) < min_local:
         raise ValueError(
             f"sharded transform needs H divisible by axis_size * 2**levels "
-            f"with >= 4 local rows at the coarsest level; got H={h}, "
-            f"axis_size={n_shards}, levels={levels}"
+            f"with >= {min_local} local rows at the coarsest level; got "
+            f"H={h}, axis_size={n_shards}, levels={levels}, "
+            f"scheme={sch.name!r} (halo={sch.halo})"
         )
 
 
-def _row2(x: Array, start: int, stop: int) -> Array:
+def _rows(x: Array, start: int, stop: int) -> Array:
     return jax.lax.slice_in_dim(x, start, stop, axis=-2)
 
 
-def _reflect_top(x: Array) -> Array:
-    """Rows [-2, -1] of the whole-point extension: [x[2], x[1]]."""
-    return jnp.concatenate([_row2(x, 2, 3), _row2(x, 1, 2)], axis=-2)
-
-
-def _reflect_bottom(x: Array) -> Array:
-    """Rows [H, H+1] of the whole-point extension: [x[H-2], x[H-3]]."""
-    n = x.shape[-2]
-    return jnp.concatenate([_row2(x, n - 2, n - 1), _row2(x, n - 3, n - 2)], axis=-2)
+def _pick_rows(x: Array, idx) -> Array:
+    """Concatenate single rows of ``x`` in the given (static) order."""
+    return jnp.concatenate([_rows(x, i, i + 1) for i in idx], axis=-2)
 
 
 def _exchange_rows(
@@ -118,122 +136,100 @@ def _exchange_rows(
     return top, bot
 
 
-def _pad_w_even(x: Array, halo: int = 2) -> Array:
-    """Reflect the last axis by ``halo`` and edge-pad to an even length."""
-    pad = [(0, 0)] * (x.ndim - 1) + [(halo, halo)]
-    xw = jnp.pad(x, pad, mode="reflect")
-    if xw.shape[-1] % 2:
-        xw = jnp.pad(xw, [(0, 0)] * (x.ndim - 1) + [(0, 1)], mode="edge")
-    return xw
-
-
-def _fwd_level_local(x: Array, mode: str, axis: str, n: int):
-    """One forward 2D level on a row shard, exchanging 2-row halos."""
+def _fwd_level_local(x: Array, scheme: str, mode: str, axis: str, n: int):
+    """One forward 2D level on a row shard, exchanging halo rows."""
+    sch = S.get_scheme(scheme)
+    halo = sch.halo
     w = x.shape[-1]
-    s_r, d_r = _fwd_axis_ext(_pad_w_even(x), -1, mode)
-    w_e, w_o = w - w // 2, w // 2
-    s_r = jax.lax.slice_in_dim(s_r, 0, w_e, axis=-1)
-    d_r = jax.lax.slice_in_dim(d_r, 0, w_o, axis=-1)
-    # one border buffer per direction: s_r | d_r side by side (2, w) rows
-    border = jnp.concatenate  # readability below
-    top_send = border([_row2(s_r, 0, 2), _row2(d_r, 0, 2)], axis=-1)
-    h_loc = s_r.shape[-2]
-    bot_send = border(
-        [_row2(s_r, h_loc - 2, h_loc), _row2(d_r, h_loc - 2, h_loc)], axis=-1
-    )
-    top_edge = border([_reflect_top(s_r), _reflect_top(d_r)], axis=-1)
-    bot_edge = border([_reflect_bottom(s_r), _reflect_bottom(d_r)], axis=-1)
-    top, bot = _exchange_rows(top_send, bot_send, axis, n, top_edge, bot_edge)
-    s_ext = jnp.concatenate(
-        [top[..., :w_e], s_r, bot[..., :w_e]], axis=-2
-    )
-    d_ext = jnp.concatenate(
-        [top[..., w_e:], d_r, bot[..., w_e:]], axis=-2
-    )
-    ll, lh = _fwd_axis_ext(s_ext, -2, mode)
-    hl, hh = _fwd_axis_ext(d_ext, -2, mode)
+    w_e = w - w // 2
+    # width stage: device-local band-policy reference math (full rows)
+    s_r, d_r = S.lift_fwd_axis(x, scheme, axis=-1, mode=mode)
+    if halo == 0:
+        s_ext, d_ext = s_r, d_r
+    else:
+        h_loc = s_r.shape[-2]
+        border = jnp.concatenate  # one buffer per direction: s_r | d_r
+        top_send = border([_rows(s_r, 0, halo), _rows(d_r, 0, halo)], axis=-1)
+        bot_send = border(
+            [_rows(s_r, h_loc - halo, h_loc), _rows(d_r, h_loc - halo, h_loc)],
+            axis=-1,
+        )
+        # global-edge whole-point reflect rows, computed locally (only
+        # read on shards 0 / n-1): top entries [-halo..-1] -> [halo..1],
+        # bottom entries [H..H+halo-1] -> [H-2..H-halo-1]
+        top_idx = list(range(halo, 0, -1))
+        bot_idx = [h_loc - 2 - j for j in range(halo)]
+        top_edge = border([_pick_rows(s_r, top_idx), _pick_rows(d_r, top_idx)], axis=-1)
+        bot_edge = border([_pick_rows(s_r, bot_idx), _pick_rows(d_r, bot_idx)], axis=-1)
+        top, bot = _exchange_rows(top_send, bot_send, axis, n, top_edge, bot_edge)
+        s_ext = jnp.concatenate([top[..., :w_e], s_r, bot[..., :w_e]], axis=-2)
+        d_ext = jnp.concatenate([top[..., w_e:], d_r, bot[..., w_e:]], axis=-2)
+    ll, lh = S.lift_fwd_axis_ext(s_ext, scheme, axis=-2, mode=mode)
+    hl, hh = S.lift_fwd_axis_ext(d_ext, scheme, axis=-2, mode=mode)
     return ll, lh, hl, hh
 
 
-def _inv_axis_local(s: Array, d: Array, mode: str) -> Array:
-    """Device-local inverse along the last axis with reference boundaries.
-
-    Builds the 1-pair halos of ``_inv_axis_ext`` from the reference's own
-    edge policies: d[-1] := d[0]; trailing d := d[-1] for odd length
-    (plus one dead halo entry) and d[-2] for even; trailing s := s[-1].
-    """
-    n_e, n_o = s.shape[-1], d.shape[-1]
-    lead = jax.lax.slice_in_dim(d, 0, 1, axis=-1)
-    last = jax.lax.slice_in_dim(d, n_o - 1, n_o, axis=-1)
-    if n_e > n_o:  # odd length: d[n]:=d[n-1] + a never-read halo entry
-        tail = jnp.concatenate([last, last], axis=-1)
-    else:
-        tail = jax.lax.slice_in_dim(d, n_o - 2, n_o - 1, axis=-1)
-    d_ext = jnp.concatenate([lead, d, tail], axis=-1)  # n_e + 2
-    s_ext = jnp.concatenate(
-        [
-            jax.lax.slice_in_dim(s, 0, 1, axis=-1),
-            s,
-            jax.lax.slice_in_dim(s, n_e - 1, n_e, axis=-1),
-        ],
-        axis=-1,
-    )
-    out = _inv_axis_ext(s_ext, d_ext, -1, mode)  # 2 * n_e
-    return jax.lax.slice_in_dim(out, 0, n_e + n_o, axis=-1)
-
-
 def _inv_level_local(
-    ll: Array, lh: Array, hl: Array, hh: Array, mode: str, axis: str, n: int
+    ll: Array, lh: Array, hl: Array, hh: Array,
+    scheme: str, mode: str, axis: str, n: int,
 ):
-    """One inverse 2D level on row-sharded bands (1 band-row halos)."""
-    n_loc = ll.shape[-2]
-    # neighbors' needs: prev device wants our FIRST s and d band rows
-    # (bottom halo), next device wants our LAST d band rows (top halo)
-    w_e, w_o = ll.shape[-1], hl.shape[-1]
-    last_d_rows = jnp.concatenate(  # flows down: next shard's d_top halo
-        [_row2(lh, n_loc - 1, n_loc), _row2(hh, n_loc - 1, n_loc)], axis=-1
-    )
-    first_rows = jnp.concatenate(  # flows up: prev shard's bottom halos
-        [_row2(ll, 0, 1), _row2(hl, 0, 1), _row2(lh, 0, 1), _row2(hh, 0, 1)],
-        axis=-1,
-    )
-    # global-edge policies (H even by construction): top d := d[0];
-    # bottom s := s[-1] (edge), bottom d := d[-2] (whole-point reflect)
-    top_edge = jnp.concatenate([_row2(lh, 0, 1), _row2(hh, 0, 1)], axis=-1)
-    bot_edge = jnp.concatenate(
-        [
-            _row2(ll, n_loc - 1, n_loc),
-            _row2(hl, n_loc - 1, n_loc),
-            _row2(lh, n_loc - 2, n_loc - 1),
-            _row2(hh, n_loc - 2, n_loc - 1),
-        ],
-        axis=-1,
-    )
-    # same exchange as the forward pass: my top halo is the PREVIOUS
-    # shard's down-flowing payload (its last d-role rows), my bottom halo
-    # is the NEXT shard's up-flowing payload (its first band rows)
-    top, bot = _exchange_rows(
-        first_rows, last_d_rows, axis, n, top_edge, bot_edge
-    )  # top: (1, w_e + w_o), bot: (1, 2*(w_e + w_o))
-    lh_top, hh_top = top[..., :w_e], top[..., w_e:]
-    ll_bot = bot[..., :w_e]
-    hl_bot = bot[..., w_e : w_e + w_o]
-    lh_bot = bot[..., w_e + w_o : 2 * w_e + w_o]
-    hh_bot = bot[..., 2 * w_e + w_o :]
-
-    def s_ext(b: Array, b_bot: Array) -> Array:
-        return jnp.concatenate([_row2(b, 0, 1), b, b_bot], axis=-2)
-
-    def d_ext(b: Array, b_top: Array, b_bot: Array) -> Array:
-        return jnp.concatenate([b_top, b, b_bot], axis=-2)
-
-    s_r = _inv_axis_ext(s_ext(ll, ll_bot), d_ext(lh, lh_top, lh_bot), -2, mode)
-    d_r = _inv_axis_ext(s_ext(hl, hl_bot), d_ext(hh, hh_top, hh_bot), -2, mode)
-    return _inv_axis_local(s_r, d_r, mode)
+    """One inverse 2D level on row-sharded bands (inv_margin band-rows)."""
+    sch = S.get_scheme(scheme)
+    m = sch.inv_margin
+    bands = (ll, lh, hl, hh)
+    if m == 0:
+        ext = bands
+    else:
+        n_loc = ll.shape[-2]
+        widths = [b.shape[-1] for b in bands]
+        top_send = jnp.concatenate([_rows(b, 0, m) for b in bands], axis=-1)
+        bot_send = jnp.concatenate(
+            [_rows(b, n_loc - m, n_loc) for b in bands], axis=-1
+        )
+        # global-edge band-policy rows (column length even by
+        # construction): s-role (ll, hl): entries [-j] -> [j],
+        # [n_e+j] -> [n_e-1-j]; d-role (lh, hh): [-j] -> [j-1],
+        # [n_o+j] -> [n_o-2-j] — reflect_entry's whole-point patterns.
+        s_top = list(range(m, 0, -1))
+        d_top = list(range(m - 1, -1, -1))
+        s_bot = [n_loc - 1 - j for j in range(m)]
+        d_bot = [n_loc - 2 - j for j in range(m)]
+        roles = ("s", "d", "s", "d")  # rows of ll/hl are s-role, lh/hh d-role
+        top_edge = jnp.concatenate(
+            [
+                _pick_rows(b, s_top if r == "s" else d_top)
+                for b, r in zip(bands, roles)
+            ],
+            axis=-1,
+        )
+        bot_edge = jnp.concatenate(
+            [
+                _pick_rows(b, s_bot if r == "s" else d_bot)
+                for b, r in zip(bands, roles)
+            ],
+            axis=-1,
+        )
+        top, bot = _exchange_rows(top_send, bot_send, axis, n, top_edge, bot_edge)
+        ext = []
+        off = 0
+        for b, wd in zip(bands, widths):
+            ext.append(
+                jnp.concatenate(
+                    [top[..., off : off + wd], b, bot[..., off : off + wd]],
+                    axis=-2,
+                )
+            )
+            off += wd
+        ext = tuple(ext)
+    ll_e, lh_e, hl_e, hh_e = ext
+    s_r = S.lift_inv_axis_ext(ll_e, lh_e, scheme, axis=-2, mode=mode)
+    d_r = S.lift_inv_axis_ext(hl_e, hh_e, scheme, axis=-2, mode=mode)
+    # width stage: device-local band-policy inverse (full rows)
+    return S.lift_inv_axis(s_r, d_r, scheme, axis=-1, mode=mode)
 
 
 # ---------------------------------------------------------------------------
-# shard_map wrappers (cached per (mesh, axis, levels, mode, ndim)).
+# shard_map wrappers (cached per (mesh, axis, levels, mode, scheme, ndim)).
 # ---------------------------------------------------------------------------
 
 
@@ -245,7 +241,9 @@ def _row_spec(ndim: int, axis: str):
 
 
 @functools.lru_cache(maxsize=None)
-def _fwd_sharded_fn(mesh: Mesh, axis: str, levels: int, mode: str, ndim: int):
+def _fwd_sharded_fn(
+    mesh: Mesh, axis: str, levels: int, mode: str, scheme: str, ndim: int
+):
     n = mesh.shape[axis]
     spec = _row_spec(ndim, axis)
     out_specs = Pyramid2D(
@@ -256,7 +254,7 @@ def _fwd_sharded_fn(mesh: Mesh, axis: str, levels: int, mode: str, ndim: int):
         ll = x_loc
         details = []
         for _ in range(levels):
-            ll, lh, hl, hh = _fwd_level_local(ll, mode, axis, n)
+            ll, lh, hl, hh = _fwd_level_local(ll, scheme, mode, axis, n)
             details.append((lh, hl, hh))
         return Pyramid2D(ll=ll, details=tuple(reversed(details)))
 
@@ -264,7 +262,9 @@ def _fwd_sharded_fn(mesh: Mesh, axis: str, levels: int, mode: str, ndim: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _inv_sharded_fn(mesh: Mesh, axis: str, levels: int, mode: str, ndim: int):
+def _inv_sharded_fn(
+    mesh: Mesh, axis: str, levels: int, mode: str, scheme: str, ndim: int
+):
     n = mesh.shape[axis]
     spec = _row_spec(ndim, axis)
     in_specs = (
@@ -276,13 +276,13 @@ def _inv_sharded_fn(mesh: Mesh, axis: str, levels: int, mode: str, ndim: int):
     def local_inv(pyr: Pyramid2D) -> Array:
         ll = pyr.ll
         for lh, hl, hh in pyr.details:  # coarsest first
-            ll = _inv_level_local(ll, lh, hl, hh, mode, axis, n)
+            ll = _inv_level_local(ll, lh, hl, hh, scheme, mode, axis, n)
         return ll
 
     return jax.jit(_shard_map_compat(local_inv, mesh, in_specs, spec))
 
 
-def dwt53_fwd_2d_sharded(
+def dwt_fwd_2d_sharded(
     x: Array,
     mesh: Mesh,
     levels: int = 1,
@@ -291,37 +291,42 @@ def dwt53_fwd_2d_sharded(
     backend: Optional[str] = None,  # noqa: ARG001 - reserved: local compute
     # is the kernels' own interior math under XLA inside shard_map; a
     # per-shard Pallas routing lands behind the same flag when validated
+    scheme="cdf53",
 ) -> Pyramid2D:
     """Row-sharded multi-level 2D forward transform over ``mesh[axis]``.
 
-    Bit-exact vs :func:`repro.kernels.dwt53_fwd_2d_multi`; only the 2-row
-    borders move between devices (one ppermute per direction per level).
+    Bit-exact vs :func:`repro.kernels.dwt_fwd_2d_multi` for the same
+    scheme; only the scheme's halo rows move between devices (one
+    ppermute per direction per level).
     """
     _check_mode(mode)
+    sch = S.get_scheme(scheme)
     if x.ndim < 2:
         raise ValueError(f"need a (..., H, W) input, got {x.shape}")
-    check_shardable(x.shape[-2], x.shape[-1], mesh.shape[axis], levels)
-    fn = _fwd_sharded_fn(mesh, axis, levels, mode, x.ndim)
+    check_shardable(x.shape[-2], x.shape[-1], mesh.shape[axis], levels, sch)
+    fn = _fwd_sharded_fn(mesh, axis, levels, mode, sch, x.ndim)
     return fn(x.astype(_compute_dtype(x.dtype)))
 
 
-def dwt53_inv_2d_sharded(
+def dwt_inv_2d_sharded(
     pyr: Pyramid2D,
     mesh: Mesh,
     mode: str = "paper",
     axis: str = "data",
-    backend: Optional[str] = None,  # noqa: ARG001 - see dwt53_fwd_2d_sharded
+    backend: Optional[str] = None,  # noqa: ARG001 - see dwt_fwd_2d_sharded
+    scheme="cdf53",
 ) -> Array:
-    """Inverse of :func:`dwt53_fwd_2d_sharded` (same exchange pattern)."""
+    """Inverse of :func:`dwt_fwd_2d_sharded` (same exchange pattern)."""
     _check_mode(mode)
+    sch = S.get_scheme(scheme)
     levels = len(pyr.details)
     h = pyr.ll.shape[-2] * (1 << levels)
     w = pyr.ll.shape[-1]
     for lh, hl, _hh in pyr.details:
         w = w + hl.shape[-1]
-    check_shardable(h, w, mesh.shape[axis], levels)
+    check_shardable(h, w, mesh.shape[axis], levels, sch)
     cdt = _compute_dtype(pyr.ll.dtype)
-    fn = _inv_sharded_fn(mesh, axis, levels, mode, pyr.ll.ndim)
+    fn = _inv_sharded_fn(mesh, axis, levels, mode, sch, pyr.ll.ndim)
     cast = Pyramid2D(
         ll=pyr.ll.astype(cdt),
         details=tuple(
@@ -330,3 +335,34 @@ def dwt53_inv_2d_sharded(
         ),
     )
     return fn(cast)
+
+
+# ---------------------------------------------------------------------------
+# (5,3) aliases — the seed's public names; nothing downstream breaks.
+# ---------------------------------------------------------------------------
+
+
+def dwt53_fwd_2d_sharded(
+    x: Array,
+    mesh: Mesh,
+    levels: int = 1,
+    mode: str = "paper",
+    axis: str = "data",
+    backend: Optional[str] = None,
+) -> Pyramid2D:
+    return dwt_fwd_2d_sharded(
+        x, mesh, levels=levels, mode=mode, axis=axis, backend=backend,
+        scheme="cdf53",
+    )
+
+
+def dwt53_inv_2d_sharded(
+    pyr: Pyramid2D,
+    mesh: Mesh,
+    mode: str = "paper",
+    axis: str = "data",
+    backend: Optional[str] = None,
+) -> Array:
+    return dwt_inv_2d_sharded(
+        pyr, mesh, mode=mode, axis=axis, backend=backend, scheme="cdf53"
+    )

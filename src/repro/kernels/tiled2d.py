@@ -1,38 +1,44 @@
-"""Tiled halo-exchange 2D integer (5,3) DWT — Pallas at any image size.
+"""Tiled halo-exchange 2D integer lifting DWT — Pallas at any image size.
 
 The whole-image fused kernel (``kernels/fused2d.py``) needs ~6 image-sized
 buffers resident in VMEM, which caps the images it can take; everything
 larger used to fall off a cliff onto the XLA path.  This module removes
 the cliff with the paper's own parallel-lifting structure: polyphase PEs
-need only a 2-sample boundary overlap, so the image is blocked into
-``(TH, TW)`` core tiles, each extended by a 2-sample halo on every side,
-and a Pallas grid sweeps ``(batch, tile_row, tile_col)`` cells.  The grid
-pipeline streams one halo'd window per cell HBM->VMEM (Pallas
-double-buffers blocked operands: the next cell's DMA overlaps this cell's
-compute), runs the full row+column lifting on the resident window, and
+need only a small boundary overlap — ``scheme.halo`` samples, DERIVED
+from the scheme's step supports (2 for the paper's cdf53, 4 for 97m, 0
+for haar) — so the image is blocked into ``(TH, TW)`` core tiles, each
+extended by the scheme's halo on every side, and a Pallas grid sweeps
+``(batch, tile_row, tile_col)`` cells.  The grid pipeline streams one
+halo'd window per cell HBM->VMEM (Pallas double-buffers blocked
+operands: the next cell's DMA overlaps this cell's compute), runs the
+scheme's full row+column lifting cascade on the resident window, and
 writes the four subband tiles.
 
-Correctness rests on one identity (validated by the tier-1 sweeps): the
-reference's entire boundary policy — d[-1] := d[0], the even_next edge
-rule, and the odd-length d[n] := d[n-1] extension — IS whole-point
-symmetric (reflect) extension of the *input*.  Reflect-padding the image
-by 2 therefore lets every tile run the same interior-only lifting math,
+Correctness rests on one identity (validated by the tier-1 sweeps): for
+schemes whose steps commute with whole-point reflection
+(``scheme.symmetric`` — the registry's cdf53 and 97m; haar qualifies on
+even dims because it reads no extension at all), the reference's entire
+boundary policy IS whole-point reflect extension of the *input*.  The
+windows are therefore gathered through reflected index maps
+(``schemes.reflect_indices`` forward, ``schemes.reflect_entries`` for
+the band windows of the inverse), every window entry is an exact
+extension value, and every tile runs the same interior-only lifting math
 with no boundary special cases inside the kernel:
 
-  forward : window (TH+4, TW+4) -> LL/LH/HL/HH tiles (TH/2, TW/2)
-  inverse : band windows (TH/2+2, TW/2+2) (1-pair halos, role-dependent
-            edge policies precomputed on the small band arrays) ->
-            image tile (TH, TW)
+  forward : window (TH + 2*halo, TW + 2*halo) -> LL/LH/HL/HH (TH/2, TW/2)
+  inverse : band windows (TH/2 + 2*m, TW/2 + 2*m), m = scheme.inv_margin
+            -> image tile (TH, TW)
 
-The ``_fwd_axis_ext`` / ``_inv_axis_ext`` helpers implement that interior
-math along one axis of an already-extended array; they are pure
-slice/concat + the paper's add/shift arithmetic, so the SAME functions run
-inside the Pallas kernels, under plain XLA, and as the local compute of
-the ``shard_map`` transform (``kernels/sharded.py``), which swaps the
+``schemes.lift_fwd_axis_ext`` / ``lift_inv_axis_ext`` implement that
+interior math along one axis of an already-extended array; they are pure
+slice/concat + the scheme's add/shift arithmetic, so the SAME functions
+run inside the Pallas kernels, under plain XLA, and as the local compute
+of the ``shard_map`` transform (``kernels/sharded.py``), which swaps the
 reflect halo for ``ppermute``-exchanged neighbor rows.
 
 Tile selection (``backend.pick_tile``) derives from the queried device
-memory budget; ``REPRO_DWT_TILE`` overrides.  See DESIGN.md §6.
+memory budget and the scheme's halo; ``REPRO_DWT_TILE`` overrides.  See
+DESIGN.md §6 and §9.
 """
 from __future__ import annotations
 
@@ -44,95 +50,43 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.lifting import inv_update, predict, update
+from repro.core import schemes as S
 
 Array = jax.Array
 
 
-def _slc(x: Array, start: int, stop: int, axis: int) -> Array:
-    return jax.lax.slice_in_dim(x, start, stop, axis=axis)
-
-
-def _split_pairs(x: Array, axis: int) -> Tuple[Array, Array]:
-    """Even/odd polyphase split along an even-length ``axis`` (layout-only)."""
-    n = x.shape[axis]
-    shape = x.shape[:axis] + (n // 2, 2) + x.shape[axis + 1 :]
-    pairs = x.reshape(shape)
-    return (
-        jax.lax.index_in_dim(pairs, 0, axis=axis + 1, keepdims=False),
-        jax.lax.index_in_dim(pairs, 1, axis=axis + 1, keepdims=False),
-    )
-
-
+# back-compat aliases (cdf53 instance of the generic interior math; the
+# tier-1 identity test drives them directly)
 def _fwd_axis_ext(x: Array, axis: int, mode: str) -> Tuple[Array, Array]:
-    """One forward lifting level along ``axis`` of a 2-sample-halo'd array.
-
-    ``x`` carries 2 extension samples at BOTH ends of ``axis`` (so
-    ``n_ext = n + 4``, even).  Returns the core ``(s, d)`` bands, ``n/2``
-    long each.  Interior math only — the halo encodes the boundary policy
-    — through the reference's own ``predict``/``update`` operators, so the
-    mode/rounding rule lives in exactly one place (``core.lifting``).
-    """
-    axis = axis % x.ndim
-    even, odd = _split_pairs(x, axis)  # P = n/2 + 2 entries each
-    p = even.shape[axis]
-    d_full = predict(
-        _slc(even, 0, p - 1, axis), _slc(even, 1, p, axis),
-        _slc(odd, 0, p - 1, axis),
-    )
-    s = update(
-        _slc(even, 1, p - 1, axis),
-        _slc(d_full, 1, p - 1, axis),
-        _slc(d_full, 0, p - 2, axis),
-        mode=mode,
-    )
-    return s, _slc(d_full, 1, p - 1, axis)
+    return S.lift_fwd_axis_ext(x, "cdf53", axis=axis, mode=mode)
 
 
 def _inv_axis_ext(s_ext: Array, d_ext: Array, axis: int, mode: str) -> Array:
-    """One inverse lifting level along ``axis`` from 1-pair-halo'd bands.
-
-    ``s_ext`` / ``d_ext`` carry one extension pair at both ends of
-    ``axis`` (``m_ext = m + 2``; the leading s entry is never read).
-    Returns the merged core signal, ``2m`` long.
-    """
-    axis = axis % s_ext.ndim
-    m = s_ext.shape[axis]  # core pairs + 2
-    even = inv_update(  # pairs 1..m-1
-        _slc(s_ext, 1, m, axis),
-        _slc(d_ext, 1, m, axis),
-        _slc(d_ext, 0, m - 1, axis),
-        mode=mode,
-    )
-    e0 = _slc(even, 0, m - 2, axis)
-    e1 = _slc(even, 1, m - 1, axis)
-    odd = _slc(d_ext, 1, m - 1, axis) + jnp.right_shift(e0 + e1, 1)
-    core = jnp.stack([e0, odd], axis=axis + 1)
-    return core.reshape(
-        s_ext.shape[:axis] + (2 * (m - 2),) + s_ext.shape[axis + 1 :]
-    )
+    return S.lift_inv_axis_ext(s_ext, d_ext, "cdf53", axis=axis, mode=mode)
 
 
-def fwd_window_math(w: Array, mode: str) -> Tuple[Array, Array, Array, Array]:
-    """Full 2D level on a (..., TH+4, TW+4) halo'd window: rows then cols."""
-    s_r, d_r = _fwd_axis_ext(w, -1, mode)  # rows: (..., TH+4, TW/2)
-    ll, lh = _fwd_axis_ext(s_r, -2, mode)  # cols, low stream
-    hl, hh = _fwd_axis_ext(d_r, -2, mode)  # cols, high stream
+def fwd_window_math(
+    w: Array, mode: str, scheme: str = "cdf53"
+) -> Tuple[Array, Array, Array, Array]:
+    """Full 2D level on a halo'd (..., TH+2h, TW+2h) window: rows, cols."""
+    s_r, d_r = S.lift_fwd_axis_ext(w, scheme, axis=-1, mode=mode)
+    ll, lh = S.lift_fwd_axis_ext(s_r, scheme, axis=-2, mode=mode)
+    hl, hh = S.lift_fwd_axis_ext(d_r, scheme, axis=-2, mode=mode)
     return ll, lh, hl, hh
 
 
 def inv_window_math(
-    llw: Array, lhw: Array, hlw: Array, hhw: Array, mode: str
+    llw: Array, lhw: Array, hlw: Array, hhw: Array, mode: str,
+    scheme: str = "cdf53",
 ) -> Array:
-    """Inverse 2D level on (..., TH/2+2, TW/2+2) halo'd band windows."""
-    s_col = _inv_axis_ext(llw, lhw, -2, mode)  # (..., TH, TW/2+2)
-    d_col = _inv_axis_ext(hlw, hhw, -2, mode)
-    return _inv_axis_ext(s_col, d_col, -1, mode)  # (..., TH, TW)
+    """Inverse 2D level on margin-extended (..., P+2m, Q+2m) band windows."""
+    s_col = S.lift_inv_axis_ext(llw, lhw, scheme, axis=-2, mode=mode)
+    d_col = S.lift_inv_axis_ext(hlw, hhw, scheme, axis=-2, mode=mode)
+    return S.lift_inv_axis_ext(s_col, d_col, scheme, axis=-1, mode=mode)
 
 
 # ---------------------------------------------------------------------------
-# Window layout: reflect halo + edge padding to the tile grid, and the
-# overlapping-window gather (trace-time numpy index maps, XLA gather).
+# Window gathering: trace-time reflected index maps, XLA gather.
 # ---------------------------------------------------------------------------
 
 
@@ -140,84 +94,15 @@ def _ceil_to(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def _window_index(n_tiles: int, tile: int, halo: int) -> np.ndarray:
-    """(n_tiles, tile + 2*halo) gather rows for stride-``tile`` windows."""
-    starts = np.arange(n_tiles) * tile
-    return starts[:, None] + np.arange(tile + 2 * halo)[None, :]
+def _win_rows(n_tiles: int, core: int, ext: int, idx_fn) -> np.ndarray:
+    """(n_tiles, core + 2*ext) index rows for stride-``core`` windows."""
+    return np.stack([idx_fn(t * core - ext, core + 2 * ext) for t in range(n_tiles)])
 
 
-def _gather_windows(x: Array, th: int, tw: int, halo: int) -> Array:
-    """(B, Hp + 2*halo, Wp + 2*halo) -> (B, n_th, n_tw, th+2h, tw+2h)."""
-    hp = x.shape[-2] - 2 * halo
-    wp = x.shape[-1] - 2 * halo
-    rows = _window_index(hp // th, th, halo)
-    cols = _window_index(wp // tw, tw, halo)
-    win = x[:, rows][:, :, :, cols]  # (B, n_th, th+2h, n_tw, tw+2h)
+def _gather2d(x: Array, rows: np.ndarray, cols: np.ndarray) -> Array:
+    """(B, H', W') -> (B, n_th, n_tw, wh, ww) overlapping windows."""
+    win = x[:, rows][:, :, :, cols]  # (B, n_th, wh, n_tw, ww)
     return jnp.transpose(win, (0, 1, 3, 2, 4))
-
-
-def _pad_image(x: Array, th: int, tw: int) -> Array:
-    """Reflect halo (the boundary policy) + edge pad to the tile grid.
-
-    The edge padding only feeds outputs that are cropped away; the kept
-    outputs read at most 2 samples past the image edge — the reflect halo.
-    """
-    h, w = x.shape[-2], x.shape[-1]
-    xp = jnp.pad(x, ((0, 0), (2, 2), (2, 2)), mode="reflect")
-    return jnp.pad(
-        xp,
-        ((0, 0), (0, _ceil_to(h, th) - h), (0, _ceil_to(w, tw) - w)),
-        mode="edge",
-    )
-
-
-def _pad_band(b: Array, axis: int, role: str, n_core: int) -> Array:
-    """One-pair extension at both ends of ``axis`` for the tiled inverse.
-
-    ``n_core`` is the ORIGINAL signal length along this axis (pre-split).
-    s-role: leading pad is never read; trailing pad replicates the edge.
-    d-role: leading pad is d[0] (the reference's d[-1] := d[0]); trailing
-    pad is d[-1] for odd ``n_core`` (the d[n] := d[n-1] rule) and d[-2]
-    (whole-point reflect) for even ``n_core``.
-    """
-    n = b.shape[axis]
-    left = _slc(b, 0, 1, axis)
-    if role == "s" or n_core % 2:
-        right = _slc(b, n - 1, n, axis)
-    else:
-        right = _slc(b, n - 2, n - 1, axis)
-    return jnp.concatenate([left, b, right], axis=axis)
-
-
-def pad_bands_for_inverse(
-    ll: Array, lh: Array, hl: Array, hh: Array, h: int, w: int
-) -> Tuple[Array, Array, Array, Array]:
-    """Extend the four subbands by one pair per side with the role policies.
-
-    Along rows ll/hl play the s role and lh/hh the d role; along cols
-    ll/lh are s and hl/hh are d.  Odd h/w leave the d-bands one entry
-    short of the even grid; edge-extending them first IS the reference's
-    d[n] := d[n-1] odd-length rule, so ``grow`` is semantic, not filler.
-    """
-    h_e, w_e = ll.shape[-2], ll.shape[-1]
-
-    def grow(b: Array) -> Array:
-        return jnp.pad(
-            b,
-            ((0, 0), (0, h_e - b.shape[-2]), (0, w_e - b.shape[-1])),
-            mode="edge",
-        )
-
-    def prep(b: Array, row_role: str, col_role: str) -> Array:
-        b = _pad_band(grow(b), -2, row_role, h)
-        return _pad_band(b, -1, col_role, w)
-
-    return (
-        prep(ll, "s", "s"),
-        prep(lh, "d", "s"),
-        prep(hl, "s", "d"),
-        prep(hh, "d", "d"),
-    )
 
 
 # ---------------------------------------------------------------------------
@@ -225,17 +110,18 @@ def pad_bands_for_inverse(
 # ---------------------------------------------------------------------------
 
 
-def _fwd_tile_kernel(w_ref, ll_ref, lh_ref, hl_ref, hh_ref, *, mode: str):
-    ll, lh, hl, hh = fwd_window_math(w_ref[0, 0, 0], mode)
+def _fwd_tile_kernel(w_ref, ll_ref, lh_ref, hl_ref, hh_ref, *, scheme: str, mode: str):
+    ll, lh, hl, hh = fwd_window_math(w_ref[0, 0, 0], mode, scheme)
     ll_ref[0] = ll
     lh_ref[0] = lh
     hl_ref[0] = hl
     hh_ref[0] = hh
 
 
-def _inv_tile_kernel(ll_ref, lh_ref, hl_ref, hh_ref, x_ref, *, mode: str):
+def _inv_tile_kernel(ll_ref, lh_ref, hl_ref, hh_ref, x_ref, *, scheme: str, mode: str):
     x_ref[0] = inv_window_math(
-        ll_ref[0, 0, 0], lh_ref[0, 0, 0], hl_ref[0, 0, 0], hh_ref[0, 0, 0], mode
+        ll_ref[0, 0, 0], lh_ref[0, 0, 0], hl_ref[0, 0, 0], hh_ref[0, 0, 0],
+        mode, scheme,
     )
 
 
@@ -250,29 +136,39 @@ def _out_spec(bh: int, bw: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mode", "th", "tw", "interpret")
+    jax.jit, static_argnames=("scheme", "mode", "th", "tw", "interpret")
 )
-def fwd2d_tiled(x: Array, mode: str, th: int, tw: int, interpret: bool):
-    """Tiled forward 2D level over a (B, H, W) batch; any H, W >= 3.
+def fwd2d_tiled(
+    x: Array, mode: str, th: int, tw: int, interpret: bool,
+    scheme: str = "cdf53",
+):
+    """Tiled forward 2D level over a (B, H, W) batch.
 
-    Returns (ll, lh, hl, hh) with the reference band shapes.  Bit-exact vs
-    ``core.lifting.dwt53_fwd_2d`` — the tier-1 property sweep asserts it.
+    Returns (ll, lh, hl, hh) with the reference band shapes.  Bit-exact
+    vs ``core.lifting.dwt_fwd_2d`` for every scheme/shape the dispatcher
+    routes here (``scheme.can_window`` along both dims) — the tier-1
+    property sweep asserts it.
     """
+    sch = S.get_scheme(scheme)
+    halo = sch.halo
     bsz, h, w = x.shape
-    windows = _gather_windows(_pad_image(x, th, tw), th, tw, halo=2)
-    _, n_th, n_tw = windows.shape[:3]
+    h_e, w_e = h - h // 2, w - w // 2
+    h_o, w_o = h // 2, w // 2
     bh, bw = th // 2, tw // 2
+    n_th = _ceil_to(h_e, bh) // bh
+    n_tw = _ceil_to(w_e, bw) // bw
+    rows = _win_rows(n_th, th, halo, lambda s, c: S.reflect_indices(s, c, h))
+    cols = _win_rows(n_tw, tw, halo, lambda s, c: S.reflect_indices(s, c, w))
+    windows = _gather2d(x, rows, cols)
     out = jax.ShapeDtypeStruct((bsz, n_th * bh, n_tw * bw), x.dtype)
     ll, lh, hl, hh = pl.pallas_call(
-        functools.partial(_fwd_tile_kernel, mode=mode),
+        functools.partial(_fwd_tile_kernel, scheme=sch, mode=mode),
         grid=(bsz, n_th, n_tw),
-        in_specs=[_win_spec(th + 4, tw + 4)],
+        in_specs=[_win_spec(th + 2 * halo, tw + 2 * halo)],
         out_specs=(_out_spec(bh, bw),) * 4,
         out_shape=(out,) * 4,
         interpret=interpret,
     )(windows)
-    h_e, w_e = h - h // 2, w - w // 2
-    h_o, w_o = h // 2, w // 2
     return (
         ll[:, :h_e, :w_e],
         lh[:, :h_o, :w_e],
@@ -282,33 +178,40 @@ def fwd2d_tiled(x: Array, mode: str, th: int, tw: int, interpret: bool):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mode", "th", "tw", "interpret")
+    jax.jit, static_argnames=("scheme", "mode", "th", "tw", "interpret")
 )
 def inv2d_tiled(
     ll: Array, lh: Array, hl: Array, hh: Array,
     mode: str, th: int, tw: int, interpret: bool,
+    scheme: str = "cdf53",
 ):
     """Tiled inverse of :func:`fwd2d_tiled` over (B, ...) band batches."""
+    sch = S.get_scheme(scheme)
+    m = sch.inv_margin
     bsz = ll.shape[0]
     h = ll.shape[-2] + lh.shape[-2]
     w = ll.shape[-1] + hl.shape[-1]
     h_e, w_e = ll.shape[-2], ll.shape[-1]
     me, mo = th // 2, tw // 2
-    hp, wp = _ceil_to(h_e, me), _ceil_to(w_e, mo)
-    n_th, n_tw = hp // me, wp // mo
-    padded = pad_bands_for_inverse(ll, lh, hl, hh, h, w)
-
-    def windows(b: Array) -> Array:
-        b = jnp.pad(
-            b, ((0, 0), (0, hp - h_e), (0, wp - w_e)), mode="edge"
-        )
-        return _gather_windows(b, me, mo, halo=1)
-
-    llw, lhw, hlw, hhw = (windows(b) for b in padded)
+    n_th = _ceil_to(h_e, me) // me
+    n_tw = _ceil_to(w_e, mo) // mo
+    # band-entry window maps per (axis, polyphase role): rows of ll/hl are
+    # even-role over H, rows of lh/hh odd-role; columns of ll/lh are
+    # even-role over W, columns of hl/hh odd-role.  Every window entry is
+    # an exact policy extension value (schemes.reflect_entries), which
+    # subsumes the seed's grow/edge/whole-point special cases.
+    r_s = _win_rows(n_th, me, m, lambda s, c: S.reflect_entries(s, c, 0, h))
+    r_d = _win_rows(n_th, me, m, lambda s, c: S.reflect_entries(s, c, 1, h))
+    c_s = _win_rows(n_tw, mo, m, lambda s, c: S.reflect_entries(s, c, 0, w))
+    c_d = _win_rows(n_tw, mo, m, lambda s, c: S.reflect_entries(s, c, 1, w))
+    llw = _gather2d(ll, r_s, c_s)
+    lhw = _gather2d(lh, r_d, c_s)
+    hlw = _gather2d(hl, r_s, c_d)
+    hhw = _gather2d(hh, r_d, c_d)
     x = pl.pallas_call(
-        functools.partial(_inv_tile_kernel, mode=mode),
+        functools.partial(_inv_tile_kernel, scheme=sch, mode=mode),
         grid=(bsz, n_th, n_tw),
-        in_specs=[_win_spec(me + 2, mo + 2)] * 4,
+        in_specs=[_win_spec(me + 2 * m, mo + 2 * m)] * 4,
         out_specs=_out_spec(th, tw),
         out_shape=jax.ShapeDtypeStruct((bsz, n_th * th, n_tw * tw), ll.dtype),
         interpret=interpret,

@@ -151,21 +151,25 @@ class WaveletServeEngine:
     batch_slots: int = 8
     levels: int = 2
     mode: str = "paper"
+    scheme: str = "cdf53"  # lifting scheme from the registry
     backend: Optional[str] = None
     mesh: Optional[Any] = None  # jax.sharding.Mesh -> sharded transform
     mesh_axis: str = "data"
 
     def __post_init__(self):
         from repro.core import lifting as _lifting
+        from repro.core import schemes as _schemes
 
         if self.batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {self.batch_slots}")
+        _schemes.get_scheme(self.scheme)  # fail fast on unknown names
         _lifting.check_levels_2d(self.height, self.width, self.levels)
         if self.mesh is not None:
             from repro.kernels import sharded as _sharded
 
             _sharded.check_shardable(
-                self.height, self.width, self.mesh.shape[self.mesh_axis], self.levels
+                self.height, self.width, self.mesh.shape[self.mesh_axis],
+                self.levels, self.scheme,
             )
         self._pending: List[TransformRequest] = []
 
@@ -187,12 +191,13 @@ class WaveletServeEngine:
         from repro import kernels as K
 
         if self.mesh is not None:
-            return K.dwt53_fwd_2d_sharded(
+            return K.dwt_fwd_2d_sharded(
                 batch, self.mesh, levels=self.levels, mode=self.mode,
-                axis=self.mesh_axis,
+                axis=self.mesh_axis, scheme=self.scheme,
             )
-        return K.dwt53_fwd_2d_multi(
-            batch, levels=self.levels, mode=self.mode, backend=self.backend
+        return K.dwt_fwd_2d_multi(
+            batch, levels=self.levels, mode=self.mode, backend=self.backend,
+            scheme=self.scheme,
         )
 
     def step(self) -> List[TransformRequest]:

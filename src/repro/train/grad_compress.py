@@ -48,6 +48,10 @@ class WaveletSyncConfig:
     # compiled pallas on TPU, jitted XLA reference elsewhere).  Resolved
     # at trace time of the train step, not per call.
     backend: Optional[str] = None
+    # lifting scheme from the registry (core/schemes.py): cdf53 (the
+    # paper's default), haar (cheapest), 97m (better energy compaction
+    # on smooth gradients), cdf22.  All participants must agree.
+    scheme: str = "cdf53"
     # spatial codec: matrix-shaped gradients (ndim >= 2 with both trailing
     # dims transformable) run the fused multi-level 2D pyramid instead of
     # the last-axis 1D transform — smoothness along both axes compacts
@@ -96,7 +100,8 @@ def _tree_pmax(shifts, axis_name: str):
 def _sync_leaf_2d(g, g32, scale, cfg: WaveletSyncConfig, axis_name: str, n_pods: int):
     """Band sync for one matrix-shaped leaf through the 2D pyramid codec."""
     pyr = C.forward_pyramid_2d(
-        g32, scale, cfg.levels, cfg.mode, backend=cfg.backend
+        g32, scale, cfg.levels, cfg.mode, backend=cfg.backend,
+        scheme=cfg.scheme,
     )
     shifts = _tree_pmax(C.pyramid2d_shifts(pyr), axis_name)
     ll_q, details_q = C.quantize_pyramid_2d(pyr, shifts)
@@ -106,7 +111,8 @@ def _sync_leaf_2d(g, g32, scale, cfg: WaveletSyncConfig, axis_name: str, n_pods:
     )
     g_sync = (
         C.decompress_pyramid_2d(
-            sum_ll, sum_det, shifts, scale, cfg.mode, backend=cfg.backend
+            sum_ll, sum_det, shifts, scale, cfg.mode, backend=cfg.backend,
+            scheme=cfg.scheme,
         )
         / n_pods
     )
@@ -117,6 +123,7 @@ def _sync_leaf_2d(g, g32, scale, cfg: WaveletSyncConfig, axis_name: str, n_pods:
         scale,
         cfg.mode,
         backend=cfg.backend,
+        scheme=cfg.scheme,
     )
     return g_sync.astype(g.dtype), g32 - own
 
@@ -142,12 +149,16 @@ def pod_sync_tree(
         scale = jax.lax.pmax(C.tensor_scale(g32), axis_name)
         if cfg.codec == "lowband":
             approx, details, n = C.forward_bands(
-                g32, scale, cfg.levels, cfg.mode, backend=cfg.backend
+                g32, scale, cfg.levels, cfg.mode, backend=cfg.backend,
+                scheme=cfg.scheme,
             )
             low_sum = jax.lax.psum(approx, axis_name)
             band = C.CompressedBand(low_sum, scale, n, cfg.levels)
             g_sync = (
-                C.decompress_lowband(band, g.shape, cfg.mode, backend=cfg.backend)
+                C.decompress_lowband(
+                    band, g.shape, cfg.mode, backend=cfg.backend,
+                    scheme=cfg.scheme,
+                )
                 / n_pods
             )
             own = C.decompress_lowband(
@@ -155,6 +166,7 @@ def pod_sync_tree(
                 g.shape,
                 cfg.mode,
                 backend=cfg.backend,
+                scheme=cfg.scheme,
             )
             return g_sync.astype(g.dtype), g32 - own
         # --- band-quantized codec, sharding-aligned ------------------------
@@ -166,7 +178,8 @@ def pod_sync_tree(
         if cfg.spatial_2d and _can_2d(g32, cfg.levels):
             return _sync_leaf_2d(g, g32, scale, cfg, axis_name, n_pods)
         pyr = C.forward_bands_nd(
-            g32, scale, cfg.levels, cfg.mode, backend=cfg.backend
+            g32, scale, cfg.levels, cfg.mode, backend=cfg.backend,
+            scheme=cfg.scheme,
         )
         shifts = C.pyramid_shifts(pyr)
         a_sh = jax.lax.pmax(shifts[0], axis_name)
@@ -180,6 +193,7 @@ def pod_sync_tree(
             C.decompress_bands_nd(
                 sum_a, sum_d, shifts, scale, shape_nd, cfg.mode,
                 backend=cfg.backend,
+                scheme=cfg.scheme,
             )
             / n_pods
         ).reshape(g.shape)
@@ -191,6 +205,7 @@ def pod_sync_tree(
             shape_nd,
             cfg.mode,
             backend=cfg.backend,
+            scheme=cfg.scheme,
         ).reshape(g.shape)
         return g_sync.astype(g.dtype), g32 - own
 

@@ -4,6 +4,16 @@ Registers the deterministic ``hypothesis`` fallback shim when the real
 package is unavailable (kernel CI images bake in only the jax/pallas
 toolchain), so test collection succeeds everywhere.  The real hypothesis
 always wins when installed; pin it via requirements-dev.txt locally.
+
+Warning policy: every RuntimeWarning is an ERROR except
+``BackendDegradeWarning`` (the dedicated category for backend-degrade
+notices, ``kernels/backend.py``), which is expected on CPU runs — an
+explicit ``pallas`` request legitimately degrades to the emulator
+off-accelerator.  The seed leaked those notices into the pytest warnings
+summary; with the dedicated category filtered and everything else
+escalated, a degrade-warning leak (or any new stray RuntimeWarning)
+fails the tier-1 suite — and therefore the CI smoke gate — outright.
+Filters are ini-ordered: the later (more specific) line wins.
 """
 import importlib.util
 import pathlib
@@ -18,3 +28,11 @@ except ImportError:
     _spec.loader.exec_module(_shim)
     sys.modules["hypothesis"] = _shim
     sys.modules["hypothesis.strategies"] = _shim.strategies
+
+
+def pytest_configure(config):
+    config.addinivalue_line("filterwarnings", "error::RuntimeWarning")
+    config.addinivalue_line(
+        "filterwarnings",
+        "ignore::repro.kernels.backend.BackendDegradeWarning",
+    )

@@ -148,19 +148,30 @@ def test_degrade_warns_once():
 
 
 def test_untileable_over_budget_image_degrades_with_warning():
-    """A (2, huge) request that cannot tile warns and stays bit-exact."""
-    from repro.kernels import fused2d, ref
+    """An over-budget request whose scheme cannot tile (cdf22's
+    antisymmetric lift) warns with the dedicated category, stays
+    bit-exact; a symmetric scheme on the same shape tiles instead."""
+    from repro.core import lifting
+    from repro.kernels import fused2d
 
     w = B.fused2d_budget_elems() // 2 + 64
     x = jnp.asarray(np.arange(2 * w).reshape(2, w) % 997, jnp.int32)
     B._warned_degrades.clear()
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
-        got = fused2d.dwt53_fwd_2d(x, backend="interpret")
-    assert any("budget" in str(r.message) for r in rec)
-    np.testing.assert_array_equal(
-        np.asarray(got.ll), np.asarray(ref.dwt53_fwd_2d(x).ll)
+        got = fused2d.dwt_fwd_2d(x, backend="interpret", scheme="cdf22")
+    assert any(
+        "budget" in str(r.message)
+        and issubclass(r.category, B.BackendDegradeWarning)
+        for r in rec
     )
+    np.testing.assert_array_equal(
+        np.asarray(got.ll), np.asarray(lifting.dwt_fwd_2d(x, scheme="cdf22").ll)
+    )
+    # cdf53 handles the same shape on the tiled Pallas path (no degrade):
+    # scheme-derived windowability replaced the seed's dim >= 3 limit
+    assert fused2d._can_tile(2, w, "cdf53")
+    assert fused2d.plan_2d(2, w, backend="interpret") == "tiled-interpret"
 
 
 # ---------------------------------------------------------------------------

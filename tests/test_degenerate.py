@@ -1,0 +1,175 @@
+"""Degenerate and tiny shapes across every backend and scheme.
+
+The seed crashed on ``levels=max_levels(n)`` loops for length-1 axes
+(max_levels reported 1 where no level is possible) and wrapped narrow
+integer dtypes inside the lifting sums; these tests pin the fixes and
+sweep the smallest legal shapes through every engine layer.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import kernels as K
+from repro.core import lifting as L
+
+RNG = np.random.default_rng(7)
+
+SCHEMES = ("cdf53", "haar", "cdf22", "97m")
+BACKENDS = ("xla", "interpret")
+
+
+# ---------------------------------------------------------------------------
+# max_levels off-by-one (the seed reported 1 level for a length-1 axis).
+# ---------------------------------------------------------------------------
+
+
+def test_max_levels_zero_for_degenerate():
+    assert L.max_levels(0) == 0
+    assert L.max_levels(1) == 0
+    assert L.max_levels(2) == 1
+    assert L.max_levels(3) == 2
+    assert L.max_levels_2d(1, 64) == 0
+    assert L.max_levels_2d(64, 1) == 0
+    assert L.max_levels_2d(2, 2) == 1
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 9, 64])
+def test_max_levels_loop_never_raises_1d(n):
+    """levels=max_levels(n) must be usable for EVERY n >= 1."""
+    x = jnp.asarray(RNG.integers(0, 255, (2, n)), jnp.int32)
+    levels = L.max_levels(n)
+    pyr = L.dwt_fwd(x, levels=levels)
+    assert pyr.levels == levels
+    np.testing.assert_array_equal(np.asarray(L.dwt_inv(pyr)), np.asarray(x))
+    for backend in BACKENDS:
+        pk = K.dwt_fwd(x, levels=levels, backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(K.dwt_inv(pk, backend=backend)), np.asarray(x)
+        )
+
+
+@pytest.mark.parametrize("hw", [(1, 7), (7, 1), (1, 1), (2, 2), (3, 3), (5, 4)])
+def test_max_levels_loop_never_raises_2d(hw):
+    h, w = hw
+    levels = L.max_levels_2d(h, w)
+    x = jnp.asarray(RNG.integers(0, 255, hw), jnp.int32)
+    pyr = L.dwt_fwd_2d_multi(x, levels=levels)
+    np.testing.assert_array_equal(
+        np.asarray(L.dwt_inv_2d_multi(pyr)), np.asarray(x)
+    )
+    if levels:
+        for backend in BACKENDS:
+            pk = K.dwt_fwd_2d_multi(x, levels=levels, backend=backend)
+            np.testing.assert_array_equal(
+                np.asarray(K.dwt_inv_2d_multi(pk, backend=backend)),
+                np.asarray(x),
+            )
+
+
+def test_levels_zero_is_identity():
+    x = jnp.asarray(RNG.integers(0, 255, (2, 5)), jnp.int32)
+    pyr = L.dwt_fwd(x, levels=0)
+    assert pyr.levels == 0
+    np.testing.assert_array_equal(np.asarray(pyr.approx), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(L.dwt_inv(pyr)), np.asarray(x))
+    img = jnp.asarray(RNG.integers(0, 255, (1, 3)), jnp.int32)
+    p2 = L.dwt_fwd_2d_multi(img, levels=0)
+    np.testing.assert_array_equal(np.asarray(p2.ll), np.asarray(img))
+
+
+# ---------------------------------------------------------------------------
+# Tiny 1D shapes: n = 1 rejects, n = 2 / 3 round-trip on every backend.
+# ---------------------------------------------------------------------------
+
+
+def test_length_one_rejected_everywhere():
+    x = jnp.asarray([[5]], jnp.int32)
+    with pytest.raises(ValueError):
+        L.dwt_fwd_1d(x)
+    for backend in BACKENDS:
+        with pytest.raises(ValueError):
+            K.dwt_fwd_1d(x, backend=backend)
+    with pytest.raises(ValueError):
+        L.dwt_fwd(x, levels=1)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", SCHEMES)
+@pytest.mark.parametrize("n", [2, 3])
+def test_tiny_1d_roundtrip_every_scheme(n, name, backend):
+    x = jnp.asarray(RNG.integers(-500, 500, (2, n)), jnp.int32)
+    s, d = K.dwt_fwd_1d(x, backend=backend, scheme=name)
+    ws, wd = L.dwt_fwd_1d(x, scheme=name)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ws))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(wd))
+    np.testing.assert_array_equal(
+        np.asarray(K.dwt_inv_1d(s, d, backend=backend, scheme=name)),
+        np.asarray(x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tiny 2D shapes: 1xW / Hx1 reject; 2x2 and 3x3 round-trip everywhere.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hw", [(1, 8), (8, 1), (1, 1)])
+def test_degenerate_2d_rejected(hw):
+    x = jnp.zeros(hw, jnp.int32)
+    with pytest.raises(ValueError):
+        K.dwt_fwd_2d(x)
+    with pytest.raises(ValueError):
+        L.dwt_fwd_2d_multi(x, levels=1)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", SCHEMES)
+@pytest.mark.parametrize("hw", [(2, 2), (3, 3), (2, 5), (3, 2)])
+def test_tiny_2d_roundtrip_every_scheme(hw, name, backend):
+    x = jnp.asarray(RNG.integers(-500, 500, hw), jnp.int32)
+    bands = K.dwt_fwd_2d(x, backend=backend, scheme=name)
+    want = L.dwt_fwd_2d(x, scheme=name)
+    for b in ("ll", "lh", "hl", "hh"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(bands, b)), np.asarray(getattr(want, b))
+        )
+    np.testing.assert_array_equal(
+        np.asarray(K.dwt_inv_2d(bands, backend=backend, scheme=name)),
+        np.asarray(x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Codec layers on degenerate tensors (the original crash site).
+# ---------------------------------------------------------------------------
+
+
+def test_compression_handles_scalar_and_tiny_leaves():
+    from repro.core import compression as C
+
+    for shape in [(1,), (2,), (3, 1), (1, 1)]:
+        g = jnp.asarray(RNG.normal(size=shape), jnp.float32)
+        n = int(np.prod(shape))
+        levels = min(2, L.max_levels(n))
+        if levels:
+            g_hat, resid = C.band_quantized_roundtrip(g, levels=levels)
+            np.testing.assert_allclose(
+                np.asarray(g_hat + resid), np.asarray(g), rtol=1e-4, atol=1e-4
+            )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=40),
+    name=st.sampled_from(SCHEMES),
+    mode=st.sampled_from(("paper", "jpeg2000")),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_tiny_shapes_kernel_equals_oracle(n, name, mode, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-(2**14), 2**14, (1, n)), jnp.int32)
+    s, d = K.dwt_fwd_1d(x, mode=mode, backend="xla", scheme=name)
+    ws, wd = L.dwt_fwd_1d(x, mode=mode, scheme=name)
+    assert (s == ws).all() and (d == wd).all()
+    assert (K.dwt_inv_1d(s, d, mode=mode, backend="xla", scheme=name) == x).all()

@@ -55,10 +55,30 @@ def test_dtype_sweep(dtype, lo, hi):
 
 
 @pytest.mark.parametrize("backend", [None, "interpret", "xla"])
-def test_int8_promotes_to_int16(backend):
+def test_narrow_dtypes_promote_to_int32(backend):
+    """int8/int16 compute in int32: the predict sum must never wrap."""
     x = jnp.asarray(RNG.integers(-128, 127, size=(2, 64)), jnp.int8)
     s, d = ops.dwt53_fwd_1d(x, backend=backend)
-    assert s.dtype == jnp.int16 and d.dtype == jnp.int16
+    assert s.dtype == jnp.int32 and d.dtype == jnp.int32
+    # the regression shape: int8 [120..123] used to wrap to d = [-128, -127]
+    x8 = jnp.asarray([[120, 121, 122, 123] * 16], jnp.int8)
+    s8, d8 = ops.dwt53_fwd_1d(x8, backend=backend)
+    assert int(jnp.abs(d8).max()) <= 2  # smooth ramp -> tiny details
+    np.testing.assert_array_equal(
+        np.asarray(ops.dwt53_inv_1d(s8, d8, backend=backend)),
+        np.asarray(x8, dtype=np.int32),
+    )
+    # int16 near the dtype ceiling used to wrap the same way
+    x16 = jnp.asarray([[32700, 32701, 32702, 32703] * 16], jnp.int16)
+    s16, d16 = ops.dwt53_fwd_1d(x16, backend=backend)
+    assert s16.dtype == jnp.int32 and int(jnp.abs(d16).max()) <= 2
+    # narrow UNSIGNED ints promote identically (wrapper == oracle)
+    xu = jnp.asarray(RNG.integers(0, 255, size=(2, 64)), jnp.uint8)
+    su, du = ops.dwt53_fwd_1d(xu, backend=backend)
+    su_r, du_r = ref.dwt53_fwd_1d(xu)
+    assert su.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(su), np.asarray(su_r))
+    np.testing.assert_array_equal(np.asarray(du), np.asarray(du_r))
 
 
 @pytest.mark.parametrize("backend", [None, "interpret", "xla"])

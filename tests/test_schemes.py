@@ -1,0 +1,352 @@
+"""Lifting-scheme registry tests: derived structure, multiplierless-ness,
+per-scheme bit-exact round-trips through every engine layer."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lifting as L
+from repro.core import schemes as S
+from repro.core.opcount import arithmetic_summary, scheme_arithmetic_summary
+from repro.kernels import ops, tiled2d
+
+RNG = np.random.default_rng(101)
+
+SCHEMES = ("cdf53", "haar", "cdf22", "97m")
+MODES = ("paper", "jpeg2000")
+
+
+# ---------------------------------------------------------------------------
+# Registry + derived structure.
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contains_the_filter_bank():
+    assert set(SCHEMES) <= set(S.available_schemes())
+    sch = S.get_scheme("cdf53")
+    assert S.get_scheme(sch) is sch  # instances pass through
+
+
+def test_unknown_scheme_raises_with_listing():
+    with pytest.raises(ValueError, match="registered"):
+        S.get_scheme("db4")
+
+
+@pytest.mark.parametrize(
+    "name,fwd_m,inv_m,halo,symmetric",
+    [
+        ("cdf53", 1, 1, 2, True),  # the seed's hard-coded 2-sample halo
+        ("haar", 0, 0, 0, False),
+        ("cdf22", 1, 1, 2, False),
+        ("97m", 2, 2, 4, True),
+    ],
+)
+def test_margins_and_halo_are_derived(name, fwd_m, inv_m, halo, symmetric):
+    sch = S.get_scheme(name)
+    assert sch.fwd_margin == fwd_m
+    assert sch.inv_margin == inv_m
+    assert sch.halo == halo
+    assert sch.symmetric == symmetric
+
+
+def test_jpeg2000_mode_adds_update_rounding():
+    for name in SCHEMES:
+        paper = S.resolved_steps(name, "paper")
+        j2k = S.resolved_steps(name, "jpeg2000")
+        for p, j in zip(paper, j2k):
+            if p.kind == "update" and p.shift > 0:
+                # ADDS the offset to the declared constant (a custom
+                # scheme's own round_add must survive mode resolution)
+                assert j.round_add == p.round_add + (1 << (p.shift - 1))
+            else:
+                assert j == p
+
+
+# ---------------------------------------------------------------------------
+# Multiplierless-ness (the paper's headline claim, per scheme).
+# ---------------------------------------------------------------------------
+
+
+def test_wmul_is_exact_and_multiplierless():
+    x = jnp.asarray(RNG.integers(-1000, 1000, (64,)), jnp.int32)
+    for w in (1, 2, 3, 5, 7, 9, -3, -7):
+        np.testing.assert_array_equal(
+            np.asarray(S.wmul(x, w)), np.asarray(x) * w
+        )
+        summary = arithmetic_summary(lambda a, w=w: S.wmul(a, w), np.int32(3))
+        assert summary["multipliers"] == 0
+
+
+@pytest.mark.parametrize("name", SCHEMES)
+def test_traced_pair_ops_match_derived_ledger(name):
+    """jaxpr-traced per-pair counts == the scheme's declared ledger."""
+    traced = scheme_arithmetic_summary(name)
+    derived = S.get_scheme(name).pair_op_counts()
+    assert traced["multipliers"] == 0
+    assert traced["adders"] == derived["adders"]
+    assert traced["shifters"] == derived["shifters"]
+
+
+def test_cdf53_ledger_is_paper_table2():
+    assert S.get_scheme("cdf53").pair_op_counts() == {
+        "adders": 4, "shifters": 2, "multipliers": 0
+    }
+
+
+@pytest.mark.parametrize("name", SCHEMES)
+def test_full_transform_has_no_multiplies(name):
+    x = jnp.zeros((2, 64), jnp.int32)
+    summary = arithmetic_summary(
+        lambda a: L.dwt_fwd_1d(a, scheme=name), x
+    )
+    assert summary["multipliers"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Reference round-trips: every scheme, mode, parity.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("name", SCHEMES)
+def test_reference_roundtrip_1d(name, mode):
+    for n in (2, 3, 5, 16, 17, 64, 101):
+        x = jnp.asarray(RNG.integers(-900, 900, (3, n)), jnp.int32)
+        s, d = L.dwt_fwd_1d(x, mode=mode, scheme=name)
+        assert s.shape[-1] == (n + 1) // 2 and d.shape[-1] == n // 2
+        np.testing.assert_array_equal(
+            np.asarray(L.dwt_inv_1d(s, d, mode=mode, scheme=name)), np.asarray(x)
+        )
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("name", SCHEMES)
+def test_reference_roundtrip_2d_multi(name, mode):
+    x = jnp.asarray(RNG.integers(-900, 900, (2, 21, 19)), jnp.int32)
+    pyr = L.dwt_fwd_2d_multi(x, levels=2, mode=mode, scheme=name)
+    np.testing.assert_array_equal(
+        np.asarray(L.dwt_inv_2d_multi(pyr, mode=mode, scheme=name)),
+        np.asarray(x),
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.lists(
+        st.integers(min_value=-(2**14), max_value=2**14 - 1),
+        min_size=2, max_size=120,
+    ),
+    name=st.sampled_from(SCHEMES),
+    mode=st.sampled_from(MODES),
+)
+def test_property_lossless_any_signal_any_scheme(data, name, mode):
+    x = jnp.asarray(np.asarray(data, np.int32)[None])
+    s, d = L.dwt_fwd_1d(x, mode=mode, scheme=name)
+    assert (L.dwt_inv_1d(s, d, mode=mode, scheme=name) == x).all()
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalence: fused 1D, fused 2D, tiled 2D per scheme.
+# (The sharded engine's per-scheme sweep lives in test_sharded2d.py.)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("name", SCHEMES)
+def test_fused_1d_engine_matches_reference(name, backend):
+    for n in (64, 97):
+        x = jnp.asarray(RNG.integers(-900, 900, (3, n)), jnp.int32)
+        s, d = ops.dwt_fwd_1d(x, backend=backend, scheme=name)
+        ws, wd = L.dwt_fwd_1d(x, scheme=name)
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(ws))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(wd))
+        np.testing.assert_array_equal(
+            np.asarray(ops.dwt_inv_1d(s, d, backend=backend, scheme=name)),
+            np.asarray(x),
+        )
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("name", SCHEMES)
+def test_fused_1d_multilevel_matches_reference(name, backend):
+    x = jnp.asarray(RNG.integers(0, 255, (2, 200)), jnp.int32)
+    pk = ops.dwt_fwd(x, levels=3, backend=backend, scheme=name)
+    pr = L.dwt_fwd(x, levels=3, scheme=name)
+    np.testing.assert_array_equal(np.asarray(pk.approx), np.asarray(pr.approx))
+    for a, b in zip(pk.details, pr.details):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(ops.dwt_inv(pk, backend=backend, scheme=name)), np.asarray(x)
+    )
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("name", SCHEMES)
+def test_fused_2d_engine_matches_reference(name, backend):
+    from repro.kernels import fused2d
+
+    for hw in ((16, 16), (13, 17)):
+        x = jnp.asarray(RNG.integers(-900, 900, hw), jnp.int32)
+        got = fused2d.dwt_fwd_2d(x, backend=backend, scheme=name)
+        want = L.dwt_fwd_2d(x, scheme=name)
+        for b in ("ll", "lh", "hl", "hh"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, b)), np.asarray(getattr(want, b))
+            )
+        np.testing.assert_array_equal(
+            np.asarray(fused2d.dwt_inv_2d(got, backend=backend, scheme=name)),
+            np.asarray(x),
+        )
+
+
+@pytest.mark.parametrize("name", ["cdf53", "97m", "haar"])
+def test_tiled_2d_engine_matches_reference(name):
+    """Tiled halo windows per scheme — halo width derived, not hard-coded."""
+    sch = S.get_scheme(name)
+    shapes = [(16, 16), (20, 24)] + ([(15, 17), (23, 9)] if sch.symmetric else [])
+    for hw in shapes:
+        h, w = hw
+        assert sch.can_window(h) and sch.can_window(w)
+        x = jnp.asarray(RNG.integers(-900, 900, (2,) + hw), jnp.int32)
+        ll, lh, hl, hh = tiled2d.fwd2d_tiled(x, "paper", 8, 8, True, scheme=name)
+        want = L.dwt_fwd_2d(x, scheme=name)
+        np.testing.assert_array_equal(np.asarray(ll), np.asarray(want.ll))
+        np.testing.assert_array_equal(np.asarray(hh), np.asarray(want.hh))
+        xr = tiled2d.inv2d_tiled(ll, lh, hl, hh, "paper", 8, 8, True, scheme=name)
+        np.testing.assert_array_equal(np.asarray(xr), np.asarray(x))
+
+
+def test_unwindowable_scheme_still_serves_through_entry_points():
+    """cdf22 cannot take the windowed dataflow; the dispatchers fall back
+    to in-graph band-policy math and stay bit-exact."""
+    from repro import kernels as K
+
+    x = jnp.asarray(RNG.integers(-900, 900, (2, 40)), jnp.int32)
+    for backend in ("xla", "interpret"):
+        pyr = K.dwt_fwd(x, levels=2, backend=backend, scheme="cdf22")
+        np.testing.assert_array_equal(
+            np.asarray(K.dwt_inv(pyr, backend=backend, scheme="cdf22")),
+            np.asarray(x),
+        )
+    with pytest.raises(ValueError, match="asymmetric"):
+        from repro.kernels.sharded import check_shardable
+
+        check_shardable(64, 32, 4, 1, "cdf22")
+
+
+def test_register_custom_scheme_roundtrips():
+    """The registry's extension point: new steps are invertible for free."""
+    custom = S.LiftingScheme(
+        name="_test_custom",
+        steps=(
+            S.LiftStep("predict", ((0, 1), (1, 1)), shift=1, sign=-1),
+            S.LiftStep("update", ((-1, 3), (0, 3)), shift=3, sign=+1),
+            S.LiftStep("predict", ((0, 1), (1, 1)), shift=2, sign=+1),
+        ),
+    )
+    S.register_scheme(custom)
+    try:
+        assert custom.symmetric and custom.fwd_margin == 2
+        x = jnp.asarray(RNG.integers(-900, 900, (2, 41)), jnp.int32)
+        s, d = L.dwt_fwd_1d(x, scheme="_test_custom")
+        np.testing.assert_array_equal(
+            np.asarray(L.dwt_inv_1d(s, d, scheme="_test_custom")), np.asarray(x)
+        )
+    finally:
+        S._REGISTRY.pop("_test_custom", None)
+
+
+def test_scheme_instances_resolve_by_value_not_name():
+    """Pass-through instances work unregistered; a name collision can
+    never serve the registry's steps; re-registering a name serves the
+    NEW steps (step resolution is keyed on the scheme value)."""
+    x = jnp.asarray(RNG.integers(-900, 900, (2, 33)), jnp.int32)
+    # (1) an UNREGISTERED instance runs end-to-end through the engines
+    anon = S.LiftingScheme(
+        name="_never_registered",
+        steps=(S.LiftStep("predict", ((0, 1),), shift=0, sign=-1),),
+    )
+    s, d = ops.dwt_fwd_1d(x, backend="xla", scheme=anon)
+    np.testing.assert_array_equal(
+        np.asarray(ops.dwt_inv_1d(s, d, backend="xla", scheme=anon)),
+        np.asarray(x),
+    )
+    # (2) an instance whose NAME collides with a registered scheme still
+    # executes ITS OWN steps, not the registry's
+    fake = S.get_scheme("haar")._replace(name="cdf53")
+    s_f, d_f = L.dwt_fwd_1d(x, scheme=fake)
+    s_h, d_h = L.dwt_fwd_1d(x, scheme="haar")
+    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_h))
+    np.testing.assert_array_equal(np.asarray(d_f), np.asarray(d_h))
+    # (3) re-registering a name serves the new object's steps immediately
+    v1 = S.LiftingScheme(
+        "_test_rereg", (S.LiftStep("predict", ((0, 1),), shift=0, sign=-1),)
+    )
+    v2 = S.LiftingScheme(
+        "_test_rereg",
+        (
+            S.LiftStep("predict", ((0, 1),), shift=0, sign=-1),
+            S.LiftStep("update", ((0, 1),), shift=1, sign=+1),
+        ),
+    )
+    try:
+        S.register_scheme(v1)
+        _, d1 = L.dwt_fwd_1d(x, scheme="_test_rereg")
+        S.register_scheme(v2)
+        s2, d2 = L.dwt_fwd_1d(x, scheme="_test_rereg")
+        want_s2, want_d2 = L.dwt_fwd_1d(x, scheme="haar")  # v2 IS haar
+        np.testing.assert_array_equal(np.asarray(s2), np.asarray(want_s2))
+        np.testing.assert_array_equal(np.asarray(d2), np.asarray(want_d2))
+    finally:
+        S._REGISTRY.pop("_test_rereg", None)
+
+
+# ---------------------------------------------------------------------------
+# Consumers: scheme selection reaches the codecs.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["haar", "97m"])
+def test_band_codec_accepts_scheme(name):
+    from repro.core import compression as C
+
+    g = jnp.asarray(RNG.normal(size=(8, 256)), jnp.float32)
+    g_hat, resid = C.band_quantized_roundtrip(g, levels=2, scheme=name)
+    rel = float(jnp.linalg.norm(g_hat - g) / jnp.linalg.norm(g))
+    assert rel < 0.05
+    np.testing.assert_allclose(
+        np.asarray(g_hat + resid), np.asarray(g), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ckpt_codec_roundtrips_per_scheme(tmp_path):
+    from repro.ckpt.checkpoint import _decode, _encode
+
+    arr = RNG.normal(size=(24, 36)).astype(np.float32)
+    for name in ("cdf53", "haar", "97m"):
+        for codec in ("wz", "wz2d"):
+            data, meta = _encode(arr, codec, 2, name)
+            assert meta.get("scheme") == name
+            back = _decode(data, arr.shape, arr.dtype, codec, meta)
+            assert np.max(np.abs(back - arr)) <= float(meta["scale"]) * 0.51
+
+
+def test_serve_engine_accepts_scheme():
+    from repro.serve.serve_step import TransformRequest, WaveletServeEngine
+
+    eng = WaveletServeEngine(height=16, width=16, batch_slots=2, levels=2,
+                             scheme="97m")
+    reqs = [
+        TransformRequest(uid=i, image=RNG.integers(0, 255, (16, 16)).astype(np.int32))
+        for i in range(3)
+    ]
+    done = eng.run(reqs)
+    assert len(done) == 3
+    want = L.dwt_fwd_2d_multi(
+        jnp.asarray(reqs[0].image, jnp.int32), levels=2, scheme="97m"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(done[0].pyramid.ll), np.asarray(want.ll)
+    )
+    with pytest.raises(ValueError, match="registered"):
+        WaveletServeEngine(height=16, width=16, scheme="nope")

@@ -88,6 +88,44 @@ def test_sharded_output_stays_sharded():
     assert "OK 4" in out
 
 
+def test_sharded_per_scheme_bit_exact_on_cpu_mesh():
+    """Scheme-derived halo exchange: haar ships no halo rows, 97m ships
+    4 per direction — both bit-exact vs the single-device reference."""
+    out = _run(
+        """
+        import numpy as np, jax.numpy as jnp
+        from repro import kernels as K
+        from repro.core import lifting
+        from repro.kernels.sharded import check_shardable
+        from repro.launch.mesh import make_mesh_compat
+
+        mesh = make_mesh_compat((4,), ("data",))
+        rng = np.random.default_rng(23)
+        checked = 0
+        for scheme in ("haar", "97m"):
+            for (h, w, levels) in ((64, 32, 2), (64, 33, 1), (96, 24, 2)):
+                check_shardable(h, w, 4, levels, scheme)
+                x = jnp.asarray(rng.integers(-900, 900, (h, w)), jnp.int32)
+                want = lifting.dwt_fwd_2d_multi(
+                    x, levels=levels, scheme=scheme
+                )
+                got = K.dwt_fwd_2d_sharded(
+                    x, mesh, levels=levels, scheme=scheme
+                )
+                assert np.array_equal(np.asarray(got.ll), np.asarray(want.ll))
+                for gl, wl in zip(got.details, want.details):
+                    for g, w_ in zip(gl, wl):
+                        assert np.array_equal(np.asarray(g), np.asarray(w_))
+                xr = K.dwt_inv_2d_sharded(got, mesh, scheme=scheme)
+                assert np.array_equal(np.asarray(xr), np.asarray(x))
+                checked += 1
+        print("OK", checked)
+        """,
+        n_devices=4,
+    )
+    assert "OK" in out and int(out.split()[-1]) >= 6
+
+
 def test_check_shardable_rejects_bad_shapes():
     with pytest.raises(ValueError, match="divisible"):
         check_shardable(60, 32, 4, 2)  # 60 % (4*4) != 0
