@@ -1,0 +1,272 @@
+"""CI regression gates for the benchmark outputs — checked in, unit-tested.
+
+``benchmarks/smoke.sh`` used to carry this logic as an inline heredoc,
+which nothing unit-tested; this module is the single home for every
+gate, importable by the tier-1 suite (``tests/test_gate.py`` runs
+passing AND failing fixtures through it) and runnable as the smoke
+step::
+
+    python -m benchmarks.gate --csv <rows.csv> --bench BENCH_kernels.json
+
+Gates (fail = non-zero exit, every failure listed):
+
+  * Table 2 — the paper's op counts hold exactly, and every registered
+    scheme's traced ledger shows ZERO multiplies (the multiplierless
+    claim; schemes are discovered from the emitted rows so a newly
+    registered scheme is gated automatically).
+  * Schema — ``BENCH_kernels.json`` carries every required section and
+    key (including the ``3d`` section and its per-scheme rows), so a
+    broken emission fails fast instead of KeyError-ing mid-gate.
+  * Kernel engine — bit-exactness vs the oracle on every fused path
+    (1D/2D/2D-large/pyramid/per-scheme/3D), the fused compiled paths
+    beating the per-level interpret baseline, the fused pyramid and the
+    fused 3D engine not regressing vs per-level / per-axis dispatch,
+    and budget-sized 2D images / video-scale 3D volumes never silently
+    leaving the Pallas path where Pallas is the platform default.
+
+This module is dependency-free (stdlib only) on purpose: the gates must
+stay runnable — and unit-testable — without importing jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+# every scheme the registry ships; a bench emission missing one of these
+# rows (or a registry regression dropping a scheme) fails the gate
+REQUIRED_SCHEMES = ("cdf53", "haar", "97m", "cdf22")
+
+# required BENCH_kernels.json structure: section -> keys that must exist
+REQUIRED_SECTIONS: Dict[str, tuple] = {
+    "1d_multilevel": ("shape", "levels", "speedup_fused_vs_interpret"),
+    "2d": ("shape", "speedup_fused_vs_interpret"),
+    "2d_large": ("shape", "plan", "bit_exact", "fwd_us", "inv_us"),
+    "2d_pyramid": ("shape", "levels", "bit_exact", "speedup_fused_vs_per_level"),
+    "2d_batched": ("shape", "levels", "images_per_s"),
+    "schemes": (),
+    "3d": (
+        "shape",
+        "levels",
+        "plan",
+        "bit_exact",
+        "per_axis_us",
+        "fused_us",
+        "speedup_fused_vs_per_axis",
+        "schemes",
+    ),
+    "3d_large": ("shape", "plan"),
+}
+
+# Table 2: the paper's (5,3) op counts must hold exactly
+TABLE2_EXACT = (
+    ("table2.ls.adders", 4.0),
+    ("table2.ls.shifters", 2.0),
+    ("table2.ls.multipliers", 0.0),
+    ("table2.scheme.cdf53.adders", 4.0),
+    ("table2.scheme.cdf53.shifters", 2.0),
+)
+
+# speedup floors.  The interpret baselines are 10-100x slower than the
+# compiled paths, so 1.0 is a safe floor there.  The per-level pyramid
+# and per-axis 3D comparisons are compiled-vs-compiled: on CPU both
+# sides are jitted XLA and the true ratio is ~1.0, so those floors sit
+# at 0.5 — the regression they exist to catch (falling off the compiled
+# path onto the interpreter or an eager per-call path) measures 10x+.
+MIN_FUSED_VS_INTERPRET = 1.0
+MIN_PYRAMID_SPEEDUP = 0.5
+MIN_3D_SPEEDUP = 0.5
+
+
+def parse_rows(text: str) -> Dict[str, str]:
+    """``name,value,notes`` CSV rows (benchmarks/run.py output) -> dict."""
+    rows: Dict[str, str] = {}
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) >= 2 and parts[0] != "name":
+            rows[parts[0]] = parts[1]
+    return rows
+
+
+def check_table2(rows: Dict[str, str]) -> List[str]:
+    fails = []
+    for key, want in TABLE2_EXACT:
+        if key not in rows:
+            fails.append(f"{key}: row missing from benchmark output")
+            continue
+        got = float(rows[key])
+        if got != want:
+            fails.append(f"{key}: got {got}, want {want}")
+    scheme_mul_keys = [
+        k
+        for k in rows
+        if k.startswith("table2.scheme.") and k.endswith(".multipliers")
+    ]
+    if not scheme_mul_keys:
+        fails.append("no per-scheme table2 rows emitted")
+    for key in scheme_mul_keys:
+        if float(rows[key]) != 0.0:
+            fails.append(f"{key}: got {rows[key]}, want 0 (multiplierless)")
+    return fails
+
+
+def check_schema(bench: dict) -> List[str]:
+    """Structural validation of the BENCH_kernels.json payload.
+
+    The tier-1 suite runs this against the checked-in file so a broken
+    emission (missing section, dropped key, absent scheme row) fails in
+    unit tests, not only in smoke.
+    """
+    fails = []
+    for key in ("platform", "default_backend", "bit_exact"):
+        if key not in bench:
+            fails.append(f"bench payload missing top-level key {key!r}")
+    for section, keys in REQUIRED_SECTIONS.items():
+        if section not in bench:
+            fails.append(f"bench payload missing section {section!r}")
+            continue
+        for key in keys:
+            if key not in bench[section]:
+                fails.append(f"bench section {section!r} missing key {key!r}")
+    for holder, label, row_keys in (
+        (bench.get("schemes", {}), "schemes",
+         ("bit_exact", "multipliers_per_pair")),
+        (bench.get("3d", {}).get("schemes", {}), "3d.schemes",
+         ("bit_exact",)),
+    ):
+        for need in REQUIRED_SCHEMES:
+            if need not in holder:
+                fails.append(f"bench {label} missing row for {need!r}")
+        for name, row in holder.items():
+            for key in row_keys:
+                if not isinstance(row, dict) or key not in row:
+                    fails.append(f"bench {label}[{name!r}] missing {key!r}")
+    return fails
+
+
+def check_kernels(bench: dict) -> List[str]:
+    """Behavioural gates over the kernel-engine payload (schema-valid)."""
+    fails = []
+    if not bench["bit_exact"]:
+        fails.append("kernel outputs diverged from the kernels/ref oracle")
+
+    # per-scheme engine rows: every registered scheme must round-trip
+    # bit-exactly through the fused 1D + 2D engines, multiplierlessly
+    for name, row in bench["schemes"].items():
+        if not row["bit_exact"]:
+            fails.append(f"scheme {name}: engine round-trip diverged")
+        # key presence is guaranteed by check_schema (gate_failures stops
+        # on any schema failure before reaching the behavioural gates)
+        if row["multipliers_per_pair"] != 0:
+            fails.append(f"scheme {name}: ledger shows multiplies")
+
+    for section in ("1d_multilevel", "2d"):
+        s = bench[section]["speedup_fused_vs_interpret"]
+        if s <= MIN_FUSED_VS_INTERPRET:
+            fails.append(f"{section}: fused compiled path no faster ({s}x)")
+
+    # tiled engine: a budget-sized image must never silently leave the
+    # Pallas path where Pallas IS the platform default (TPU; CPU defaults
+    # to xla and GPU deliberately stays on xla until the Triton lowering
+    # is validated — see kernels/backend.py _PALLAS_DEFAULT)
+    large = bench["2d_large"]
+    if bench["default_backend"] == "pallas":
+        if large["plan"] != "tiled-pallas":
+            fails.append(
+                f"2d_large: {large['shape']} left the Pallas path on an "
+                f"accelerator (plan={large['plan']})"
+            )
+    if not large["bit_exact"]:
+        fails.append("2d_large: tiled transform diverged from the oracle")
+
+    pyr = bench["2d_pyramid"]
+    if not pyr["bit_exact"]:
+        fails.append("2d_pyramid: fused pyramid diverged from the oracle")
+    if pyr["speedup_fused_vs_per_level"] < MIN_PYRAMID_SPEEDUP:
+        fails.append(
+            "2d_pyramid: fused pyramid regressed vs per-level dispatch "
+            f"({pyr['speedup_fused_vs_per_level']}x)"
+        )
+    return fails
+
+
+def check_3d(bench: dict) -> List[str]:
+    """Gates over the fused 3D engine section."""
+    fails = []
+    vol = bench["3d"]
+    if not vol["bit_exact"]:
+        fails.append("3d: fused volume transform diverged from the oracle")
+    for name, row in vol["schemes"].items():
+        if not row["bit_exact"]:
+            fails.append(f"3d scheme {name}: volume round-trip diverged")
+    if vol["speedup_fused_vs_per_axis"] < MIN_3D_SPEEDUP:
+        fails.append(
+            "3d: fused volume engine regressed vs per-axis dispatch "
+            f"({vol['speedup_fused_vs_per_axis']}x)"
+        )
+    # video-scale volumes must stay on Pallas (slab engine) where Pallas
+    # is the platform default — the 3D analogue of the 2d_large gate
+    if bench["default_backend"] == "pallas":
+        plan = bench["3d_large"]["plan"]
+        if plan != "slab-pallas":
+            fails.append(
+                f"3d_large: {bench['3d_large']['shape']} left the Pallas "
+                f"path on an accelerator (plan={plan})"
+            )
+    return fails
+
+
+def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
+    """Every gate failure, most structural first.  ANY schema failure
+    stops before the behavioural gates: those index the payload freely
+    and would otherwise die on a KeyError instead of reporting the
+    failure list this module promises."""
+    schema_fails = check_schema(bench)
+    if schema_fails:
+        return check_table2(rows) + schema_fails
+    return check_table2(rows) + check_kernels(bench) + check_3d(bench)
+
+
+def summary(bench: dict) -> str:
+    large = bench["2d_large"]
+    pyr = bench["2d_pyramid"]
+    vol = bench["3d"]
+    return (
+        "SMOKE OK: fused-vs-interpret speedups "
+        f"1d={bench['1d_multilevel']['speedup_fused_vs_interpret']}x "
+        f"2d={bench['2d']['speedup_fused_vs_interpret']}x; "
+        f"2d_large plan={large['plan']} fwd={large['fwd_us']}us; "
+        f"pyramid fused/per-level={pyr['speedup_fused_vs_per_level']}x; "
+        f"3d fused/per-axis={vol['speedup_fused_vs_per_axis']}x "
+        f"plan={vol['plan']}; "
+        f"batched {bench['2d_batched']['images_per_s']} img/s; "
+        f"schemes bit-exact: {sorted(bench['schemes'])} "
+        f"(backend={bench['default_backend']}, platform={bench['platform']})"
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--csv", required=True, help="benchmarks/run.py CSV output")
+    ap.add_argument(
+        "--bench", default="BENCH_kernels.json",
+        help="machine-readable kernels payload",
+    )
+    args = ap.parse_args(argv)
+    with open(args.csv) as fh:
+        rows = parse_rows(fh.read())
+    with open(args.bench) as fh:
+        bench = json.load(fh)
+    fails = gate_failures(rows, bench)
+    if fails:
+        print("SMOKE FAILED:")
+        for f in fails:
+            print("  -", f)
+        return 1
+    print(summary(bench))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

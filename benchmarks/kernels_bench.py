@@ -19,8 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kernels as K
+from repro.core import lifting as lifting_ref
 from repro.kernels import backend as B
-from repro.kernels import fused2d, ops, ref
+from repro.kernels import fused2d, fused3d, ops, ref
 
 # workload shapes: big enough to be meaningful, small enough that the
 # interpreter baseline keeps CI smoke under a minute
@@ -34,6 +35,14 @@ SHAPE_2D = (256, 256)
 SHAPE_2D_LARGE = (2048, 2048)
 LEVELS_2D = 3
 SHAPE_2D_BATCH = (16, 256, 256)
+
+# 3D engine workloads: a volume big enough that the fused-vs-per-axis
+# comparison is meaningful, a small per-scheme roundtrip shape, and a
+# video-scale shape used only for path planning (plan_3d is trace-free)
+SHAPE_3D = (16, 64, 64)
+LEVELS_3D = 2
+SHAPE_3D_SCHEME = (8, 16, 16)
+SHAPE_3D_LARGE = (64, 512, 512)
 
 
 def _time_us(fn, *args, iters: int = 5) -> float:
@@ -218,6 +227,75 @@ def run_json() -> Tuple[list, dict]:
             "bit_exact": ok,
         }
 
+    # --- fused 3D engine vs per-axis dispatch -----------------------------
+    x3 = jnp.asarray(rng.integers(-4096, 4096, size=SHAPE_3D), jnp.int32)
+
+    def per_axis_3d(a):
+        """The pre-engine N-D recipe: one jitted 1D dispatch per axis
+        with moveaxis relayouts between them, three per level."""
+        approx = a
+        for _ in range(LEVELS_3D):
+            bands = [approx]
+            for axis in (-1, -2, -3):
+                nxt = []
+                for b in bands:
+                    m = jnp.moveaxis(b, axis, -1)
+                    s, d = ops.dwt_fwd_1d(m)
+                    nxt.append(jnp.moveaxis(s, -1, axis))
+                    nxt.append(jnp.moveaxis(d, -1, axis))
+                bands = nxt
+            approx = bands[0]
+        return bands
+
+    fused_3d = lambda a: K.dwt_fwd_nd(a, levels=LEVELS_3D, ndim=3)  # noqa: E731
+    # interleaved A/B pairs, alternating order: same drift-cancelling
+    # protocol as the 2D pyramid comparison above
+    pairs_3d = []
+    for i in range(4):
+        if i % 2 == 0:
+            p = _time_us(per_axis_3d, x3, iters=5)
+            f = _time_us(fused_3d, x3, iters=5)
+        else:
+            f = _time_us(fused_3d, x3, iters=5)
+            p = _time_us(per_axis_3d, x3, iters=5)
+        pairs_3d.append((p, f))
+    t_3d_per_axis = sorted(p for p, _ in pairs_3d)[1]
+    t_3d_fused = sorted(f for _, f in pairs_3d)[1]
+    r3 = sorted(p / f for p, f in pairs_3d)
+    speedup_3d = (r3[1] + r3[2]) / 2
+
+    pyr3 = K.dwt_fwd_nd(x3, levels=LEVELS_3D, ndim=3)
+    want3 = lifting_ref.dwt_fwd_nd(x3, levels=LEVELS_3D, ndim=3)
+    exact_3d = bool(
+        np.array_equal(np.asarray(pyr3.approx), np.asarray(want3.approx))
+    )
+    for lvl_got, lvl_want in zip(pyr3.details, want3.details):
+        for bg, bw in zip(lvl_got, lvl_want):
+            exact_3d = exact_3d and bool(
+                np.array_equal(np.asarray(bg), np.asarray(bw))
+            )
+    exact_3d = exact_3d and bool(
+        np.array_equal(np.asarray(K.dwt_inv_nd(pyr3)), np.asarray(x3))
+    )
+
+    # per-scheme 3D roundtrips (the gate asserts bit-exactness for all)
+    x3s = jnp.asarray(
+        rng.integers(-4096, 4096, size=SHAPE_3D_SCHEME), jnp.int32
+    )
+    schemes_3d = {}
+    for name in K.available_schemes():
+        t_s3 = _time_us(
+            lambda a, nm=name: K.dwt_fwd_nd(a, levels=2, ndim=3, scheme=nm),
+            x3s, iters=10,
+        )
+        p_s3 = K.dwt_fwd_nd(x3s, levels=2, ndim=3, scheme=name)
+        ok3 = bool(
+            np.array_equal(
+                np.asarray(K.dwt_inv_nd(p_s3, scheme=name)), np.asarray(x3s)
+            )
+        )
+        schemes_3d[name] = {"bit_exact": ok3, "fwd_us": round(t_s3, 1)}
+
     payload = {
         "platform": B.platform(),
         "default_backend": B.default_backend(),
@@ -261,6 +339,20 @@ def run_json() -> Tuple[list, dict]:
             "images_per_s": round(imgs_per_s, 1),
         },
         "schemes": schemes_payload,
+        "3d": {
+            "shape": list(SHAPE_3D),
+            "levels": LEVELS_3D,
+            "plan": fused3d.plan_3d(*SHAPE_3D),
+            "bit_exact": exact_3d,
+            "per_axis_us": round(t_3d_per_axis, 1),
+            "fused_us": round(t_3d_fused, 1),
+            "speedup_fused_vs_per_axis": round(speedup_3d, 2),
+            "schemes": schemes_3d,
+        },
+        "3d_large": {
+            "shape": list(SHAPE_3D_LARGE),
+            "plan": fused3d.plan_3d(*SHAPE_3D_LARGE),
+        },
     }
     rows = [
         ("kernels.platform", B.platform(), "probed once at import"),
@@ -318,6 +410,31 @@ def run_json() -> Tuple[list, dict]:
             f"{round(t_batch_loop / t_batch_fused, 2)}x",
         ),
     ]
+    rows.extend(
+        [
+            (
+                "kernels.3d.fused_us",
+                round(t_3d_fused, 1),
+                f"{SHAPE_3D} x{LEVELS_3D} levels fused N-D engine, "
+                f"bit_exact={exact_3d}",
+            ),
+            (
+                "kernels.3d.per_axis_us",
+                round(t_3d_per_axis, 1),
+                "per-axis 1D dispatches + moveaxis relayouts",
+            ),
+            (
+                "kernels.3d.speedup",
+                round(speedup_3d, 2),
+                "fused 3D vs per-axis dispatch (drift-cancelled pairs)",
+            ),
+            (
+                "kernels.3d_large.plan",
+                fused3d.plan_3d(*SHAPE_3D_LARGE),
+                f"{SHAPE_3D_LARGE} execution path (slab past the budget)",
+            ),
+        ]
+    )
     for name, row in schemes_payload.items():
         rows.append(
             (
@@ -326,6 +443,14 @@ def run_json() -> Tuple[list, dict]:
                 f"(8,4096)x3 levels; halo={row['halo']}, "
                 f"{row['adders_per_pair']}add/{row['shifters_per_pair']}shift"
                 f"/pair, bit_exact={row['bit_exact']}",
+            )
+        )
+    for name, row in schemes_3d.items():
+        rows.append(
+            (
+                f"kernels.scheme3d.{name}.fwd_us",
+                row["fwd_us"],
+                f"{SHAPE_3D_SCHEME} x2 levels, bit_exact={row['bit_exact']}",
             )
         )
     return rows, payload

@@ -21,6 +21,13 @@ Codecs:
            tiled halo windows past the VMEM budget), which compacts
            smoothness along BOTH axes into one LL band before zlib;
            vectors/scalars fall back to the 1D wz encoding per leaf
+    wz3d — like wz2d, but volume-shaped leaves (ndim >= 3 with the three
+           trailing dims transformable) run the fused multi-level 3D
+           pyramid (kernels/fused3d.py: whole-volume or depth-slab
+           Pallas per level) so conv stacks and (T, H, W) activation
+           snapshots compact along ALL trailing axes; matrix leaves use
+           the 2D encoding, vectors the 1D one — each leaf records its
+           encoding in the manifest meta, so restore is self-describing
 
 Fault-tolerance contract: a crash at ANY point leaves either the previous
 LATEST intact or a fully-written new step (manifest written before LATEST,
@@ -128,6 +135,43 @@ def _encode_wz2d(
     return zlib.compress(packed.tobytes(), level=1), meta
 
 
+def _wz3d_levels(d: int, h: int, w: int, levels: int) -> int:
+    """Deepest level count <= `levels` the (d, h, w) volume supports.
+
+    Capped at 2 by int16 headroom: the 3D bands grow ~3 bits per level
+    (one per axis), so the quantization limit is ``32767 >> (3*levels +
+    1)`` — 2047 at 1 level, 255 at 2 — and a third level (31 values)
+    is too coarse to be a useful snapshot.
+    """
+    from repro.core import lifting
+
+    return max(1, min(levels, 2, lifting.max_levels_nd((d, h, w))))
+
+
+def _encode_wz3d(
+    arr: np.ndarray, wavelet_levels: int, scheme: str = "cdf53"
+) -> Tuple[bytes, Dict]:
+    """3D Mallat-pyramid codec for volume-shaped leaves.
+
+    The transform is the fused N-D engine (``K.dwt_fwd_nd``: whole-volume
+    or depth-slab Pallas per level, leading dims batched into the grid),
+    so checkpoint saves of convolution stacks stay on the kernel path.
+    """
+    import jax.numpy as jnp
+
+    d, h, w = arr.shape[-3], arr.shape[-2], arr.shape[-1]
+    levels = _wz3d_levels(d, h, w, wavelet_levels)
+    # 3D headroom: ~1 bit per level per AXIS -> 3 bits per level
+    q, scale = _quantize_for_wz(arr, float(32767 >> (3 * levels + 1)))
+    pyr = K.dwt_fwd_nd(
+        jnp.asarray(q.reshape(-1, d, h, w)), levels=levels, scheme=scheme,
+        ndim=3,
+    )
+    packed = np.asarray(K.pack_nd(pyr)).astype(np.int16)
+    meta = {"scale": scale, "levels": levels, "enc": "3d", "scheme": scheme}
+    return zlib.compress(packed.tobytes(), level=1), meta
+
+
 def _encode(
     arr: np.ndarray, codec: str, wavelet_levels: int, scheme: str = "cdf53"
 ) -> Tuple[bytes, Dict]:
@@ -138,7 +182,13 @@ def _encode(
         return zlib.compress(arr.tobytes(), level=1), meta
     if codec == "wz":
         return _encode_wz(arr, wavelet_levels, scheme)
-    if codec == "wz2d":
+    if codec in ("wz2d", "wz3d"):
+        if (
+            codec == "wz3d"
+            and arr.ndim >= 3
+            and all(n >= 4 for n in arr.shape[-3:])
+        ):
+            return _encode_wz3d(arr, wavelet_levels, scheme)
         if arr.ndim >= 2 and arr.shape[-1] >= 4 and arr.shape[-2] >= 4:
             return _encode_wz2d(arr, wavelet_levels, scheme)
         data, meta = _encode_wz(arr, wavelet_levels, scheme)  # vectors: 1D
@@ -171,6 +221,18 @@ def _decode_wz2d(data: bytes, shape, dtype, meta: Dict) -> np.ndarray:
     return (x.astype(np.float32) * meta["scale"]).reshape(shape).astype(dtype)
 
 
+def _decode_wz3d(data: bytes, shape, dtype, meta: Dict) -> np.ndarray:
+    import jax.numpy as jnp
+
+    d, h, w = shape[-3], shape[-2], shape[-1]
+    bsz = int(np.prod(shape[:-3])) if len(shape) > 3 else 1
+    packed = np.frombuffer(zlib.decompress(data), dtype=np.int16).astype(np.int32)
+    flat = jnp.asarray(packed.reshape(bsz, -1))
+    pyr = K.unpack_nd(flat, (d, h, w), meta["levels"])
+    x = np.asarray(K.dwt_inv_nd(pyr, scheme=meta.get("scheme", "cdf53")))
+    return (x.astype(np.float32) * meta["scale"]).reshape(shape).astype(dtype)
+
+
 def _decode(data: bytes, shape, dtype, codec: str, meta: Dict) -> np.ndarray:
     if codec == "raw":
         return np.frombuffer(data, dtype=dtype).reshape(shape).copy()
@@ -178,7 +240,9 @@ def _decode(data: bytes, shape, dtype, codec: str, meta: Dict) -> np.ndarray:
         return np.frombuffer(zlib.decompress(data), dtype=dtype).reshape(shape).copy()
     if codec == "wz":
         return _decode_wz(data, shape, dtype, meta)
-    if codec == "wz2d":
+    if codec in ("wz2d", "wz3d"):
+        if meta.get("enc") == "3d":
+            return _decode_wz3d(data, shape, dtype, meta)
         if meta.get("enc") == "2d":
             return _decode_wz2d(data, shape, dtype, meta)
         return _decode_wz(data, shape, dtype, meta)
@@ -189,7 +253,7 @@ def _decode(data: bytes, shape, dtype, codec: str, meta: Dict) -> np.ndarray:
 class CheckpointManager:
     directory: str | Path
     keep: int = 3
-    codec: str = "z"  # raw | z | wz | wz2d
+    codec: str = "z"  # raw | z | wz | wz2d | wz3d
     wavelet_levels: int = 2
     wavelet_scheme: str = "cdf53"  # lifting scheme for wz/wz2d payloads
     host_id: int = 0

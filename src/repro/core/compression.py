@@ -462,6 +462,122 @@ def band_quantized_roundtrip_2d(
     return g_hat, (g.astype(jnp.float32) - g_hat.astype(jnp.float32))
 
 
+# ---------------------------------------------------------------------------
+# N-D (volumetric) band codec — the fused 3D engine's consumer.
+#
+# Video frame stacks, CT-style volumes, and (T, H, W) activation tensors
+# are smooth along ALL THREE trailing axes; the 3D Mallat pyramid
+# (``K.dwt_fwd_nd``, kernels/fused3d.py — whole-volume or depth-slab
+# Pallas per level) compacts that smoothness into one small LLL corner.
+# Band layout mirrors the 2D codec: every band shipped, approx at int16,
+# details at int8 after per-band multiplierless shifts.
+# ---------------------------------------------------------------------------
+
+
+def forward_pyramid_nd(
+    g: jax.Array,
+    scale: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+    scheme: str = "cdf53",
+    ndim: int = 3,
+) -> lifting.PyramidND:
+    """Quantize + integer N-D DWT over the last ``ndim`` axes."""
+    q = quantize(g, scale)
+    return K.dwt_fwd_nd(
+        q, levels=levels, mode=mode, backend=backend, scheme=scheme, ndim=ndim
+    )
+
+
+def pyramid_nd_shifts(pyr: lifting.PyramidND):
+    """(approx_shift, per-level per-band shifts) — same limits as 1D/2D."""
+    return (
+        _band_shift(pyr.approx, 2**15 - 1),
+        tuple(
+            tuple(_band_shift(b, 2**7 - 1) for b in lvl) for lvl in pyr.details
+        ),
+    )
+
+
+def quantize_pyramid_nd(pyr: lifting.PyramidND, shifts):
+    """approx -> int16, detail bands -> int8, after the given shifts."""
+    a_sh, det_shs = shifts
+    approx_q = jnp.clip(
+        jnp.right_shift(pyr.approx, a_sh), -(2**15 - 1), 2**15 - 1
+    ).astype(jnp.int16)
+    details_q = tuple(
+        tuple(
+            jnp.clip(jnp.right_shift(b, sh), -(2**7 - 1), 2**7 - 1).astype(
+                jnp.int8
+            )
+            for b, sh in zip(lvl, lvl_shs)
+        )
+        for lvl, lvl_shs in zip(pyr.details, det_shs)
+    )
+    return approx_q, details_q
+
+
+def decompress_pyramid_nd(
+    approx_i32: jax.Array,
+    details_i32,
+    shifts,
+    scale: jax.Array,
+    mode: str = "paper",
+    backend: Optional[str] = None,
+    scheme: str = "cdf53",
+) -> jax.Array:
+    """Un-shift, inverse N-D pyramid (one fused dispatch), dequantize."""
+    a_sh, det_shs = shifts
+    pyr = lifting.PyramidND(
+        approx=jnp.left_shift(approx_i32, a_sh),
+        details=tuple(
+            tuple(jnp.left_shift(b, sh) for b, sh in zip(lvl, lvl_shs))
+            for lvl, lvl_shs in zip(details_i32, det_shs)
+        ),
+    )
+    x = K.dwt_inv_nd(pyr, mode=mode, backend=backend, scheme=scheme)
+    return dequantize(x, scale)
+
+
+def band_quantized_roundtrip_nd(
+    g: jax.Array, levels: int, mode: str = "paper",
+    backend: Optional[str] = None, scheme: str = "cdf53", ndim: int = 3,
+) -> Tuple[jax.Array, jax.Array]:
+    """g -> N-D band-quantized channel -> g_hat. Returns (g_hat, residual)."""
+    scale = tensor_scale(g)
+    pyr = forward_pyramid_nd(
+        g, scale, levels, mode, backend=backend, scheme=scheme, ndim=ndim
+    )
+    shifts = pyramid_nd_shifts(pyr)
+    a_q, details_q = quantize_pyramid_nd(pyr, shifts)
+    g_hat = decompress_pyramid_nd(
+        a_q.astype(jnp.int32),
+        tuple(tuple(b.astype(jnp.int32) for b in lvl) for lvl in details_q),
+        shifts,
+        scale,
+        mode,
+        backend=backend,
+        scheme=scheme,
+    ).astype(g.dtype)
+    return g_hat, (g.astype(jnp.float32) - g_hat.astype(jnp.float32))
+
+
+def band_bytes_nd(shape, levels: int) -> int:
+    """Wire bytes of the N-D band-quantized payload for a trailing shape."""
+    a_shape, det_shapes = lifting.band_shapes_nd(tuple(shape), levels)
+    total = 2
+    for s in a_shape:
+        total *= s
+    for lvl in det_shapes:
+        for band in lvl:
+            n = 1
+            for s in band:
+                n *= s
+            total += n  # int8 detail bands
+    return total + 8  # + scale/shift scalars
+
+
 def band_bytes_2d(h: int, w: int, levels: int) -> int:
     """Wire bytes of the 2D band-quantized payload for an (h, w) slice."""
     (h_ll, w_ll), det_shapes = lifting.band_shapes_2d(h, w, levels)

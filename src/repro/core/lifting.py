@@ -40,7 +40,7 @@ All functions are pure jnp and jit-compatible; they are also the oracle
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -436,6 +436,236 @@ def max_levels(n: int) -> int:
         if n < 2:
             break
     return lv
+
+
+# ---------------------------------------------------------------------------
+# N-D transform (separable over the last ``ndim`` axes).  The lifting
+# steps are dimension-agnostic — the same shift-add predict/update pairs
+# compose along any axis — so one level transforms axis -1 first, then
+# -2, ... up to -ndim, exactly generalizing the 2D rows-then-columns
+# composition (ndim=2 reproduces ``dwt_fwd_2d`` bit-exactly).
+#
+# Band bookkeeping uses integer codes: band ``c`` at a level is highpass
+# along axis -(j+1) iff bit j of ``c`` is set.  Code 0 is the all-lowpass
+# approximation the next level recurses on; codes 1 .. 2^ndim - 1 are the
+# level's detail bands, stored in code order.  For ndim=2 that order is
+# (hl, lh, hh) in ``Bands2D`` naming; for ndim=3 it is the eight
+# LLL..HHH corners of the volume octave.
+# ---------------------------------------------------------------------------
+
+
+class PyramidND(NamedTuple):
+    """Multi-level N-D (Mallat) decomposition.
+
+    ``approx`` is the coarsest all-lowpass band; ``details[0]`` is the
+    COARSEST level's tuple of ``2**ndim - 1`` detail bands in band-code
+    order (bit j of the code = highpass along axis -(j+1)).  ``ndim`` is
+    derivable from the structure, so the tuple stays a clean pytree of
+    arrays (no static leaves for ``tree_map`` to trip on).
+    """
+
+    approx: Array
+    details: Tuple[Tuple[Array, ...], ...]  # coarsest first
+
+    @property
+    def levels(self) -> int:
+        return len(self.details)
+
+    @property
+    def ndim(self) -> int:
+        """Number of transformed trailing axes (from the band count)."""
+        if not self.details:
+            raise ValueError(
+                "levels=0 pyramid carries no bands; ndim is undefined"
+            )
+        n_bands = len(self.details[0]) + 1
+        nd = n_bands.bit_length() - 1
+        if 1 << nd != n_bands:
+            raise ValueError(
+                f"malformed PyramidND: {n_bands - 1} detail bands per "
+                "level is not 2**ndim - 1"
+            )
+        return nd
+
+
+def _fwd_nd_level(x: Array, ndim: int, mode: str, scheme) -> List[Array]:
+    """One N-D level: bands in code order (code 0 = approximation)."""
+    bands = [x]
+    for j in range(ndim):  # axis -1 first, matching the 2D composition
+        nxt: List[Array] = [None] * (2 * len(bands))  # type: ignore[list-item]
+        for code, b in enumerate(bands):
+            s, d = S.lift_fwd_axis(b, scheme, axis=-(j + 1), mode=mode)
+            nxt[code] = s
+            nxt[code | (1 << j)] = d
+        bands = nxt
+    return bands
+
+
+def _inv_nd_level(bands: List[Array], ndim: int, mode: str, scheme) -> Array:
+    """Structural inverse of :func:`_fwd_nd_level` (axes in reverse)."""
+    cur = list(bands)
+    for j in reversed(range(ndim)):
+        nxt: List[Array] = []
+        half = 1 << j
+        for code in range(half):
+            nxt.append(
+                S.lift_inv_axis(
+                    cur[code], cur[code | half], scheme,
+                    axis=-(j + 1), mode=mode,
+                )
+            )
+        cur = nxt
+    return cur[0]
+
+
+def check_levels_nd(shape: Tuple[int, ...], levels: int) -> None:
+    """Raise unless the trailing ``shape`` supports ``levels`` N-D levels."""
+    if levels < 0:
+        raise ValueError("levels must be >= 0")
+    dims = list(shape)
+    if not dims:
+        raise ValueError("need at least one transform axis")
+    for _ in range(levels):
+        if any(n < 2 for n in dims):
+            raise ValueError(
+                f"shape {tuple(shape)} too small for {levels} N-D levels"
+            )
+        dims = [n - n // 2 for n in dims]
+
+
+def max_levels_nd(shape: Tuple[int, ...]) -> int:
+    """Deepest N-D decomposition with >= 2 samples on EVERY axis per level.
+
+    0 when any axis is degenerate (< 2): no level is possible, and
+    ``levels=0`` is the identity pyramid, so
+    ``levels=max_levels_nd(shape)`` never raises.
+    """
+    dims = list(shape)
+    lv = 0
+    while dims and all(n >= 2 for n in dims):
+        dims = [n - n // 2 for n in dims]
+        lv += 1
+        if any(n < 2 for n in dims):
+            break
+    return lv
+
+
+def dwt_fwd_nd(
+    x: Array, levels: int = 1, mode: str = "paper", scheme="cdf53",
+    ndim: int = 3,
+) -> PyramidND:
+    """Multi-level N-D forward transform over the last ``ndim`` axes.
+
+    ``levels=0`` is the identity pyramid (no detail bands), so
+    ``levels=max_levels_nd(x.shape[-ndim:])`` loops are safe on
+    degenerate shapes.  ndim=1/2 reproduce the 1D/2D transforms
+    bit-exactly (same axis composition order).
+    """
+    if ndim < 1:
+        raise ValueError(f"ndim must be >= 1, got {ndim}")
+    if x.ndim < ndim:
+        raise ValueError(f"need >= {ndim} axes, got shape {x.shape}")
+    check_levels_nd(x.shape[-ndim:], levels)
+    approx = promote_narrow(x)
+    details: List[Tuple[Array, ...]] = []
+    for _ in range(levels):
+        bands = _fwd_nd_level(approx, ndim, mode, scheme)
+        approx = bands[0]
+        details.append(tuple(bands[1:]))
+    return PyramidND(approx=approx, details=tuple(reversed(details)))
+
+
+def dwt_inv_nd(pyr: PyramidND, mode: str = "paper", scheme="cdf53") -> Array:
+    """Inverse of :func:`dwt_fwd_nd`."""
+    approx = promote_narrow(pyr.approx)
+    if not pyr.details:
+        return approx
+    ndim = pyr.ndim
+    for lvl in pyr.details:  # coarsest first
+        approx = _inv_nd_level(
+            [approx] + [promote_narrow(b) for b in lvl], ndim, mode, scheme
+        )
+    return approx
+
+
+def band_shapes_nd(
+    shape: Tuple[int, ...], levels: int
+) -> Tuple[Tuple[int, ...], Tuple[Tuple[Tuple[int, ...], ...], ...]]:
+    """(approx_shape, per-level detail shapes coarsest-first, code order).
+
+    Pure function of (shape, levels): every scheme keeps the lazy-wavelet
+    split len(s) = ceil(n/2), len(d) = floor(n/2) along each axis.
+    """
+    ndim = len(shape)
+    dims = list(shape)
+    per_level = []
+    for _ in range(levels):
+        evens = [n - n // 2 for n in dims]
+        odds = [n // 2 for n in dims]
+        lvl = []
+        for code in range(1, 1 << ndim):
+            # bit j of code = highpass along axis -(j+1); shape index
+            # ndim-1-j addresses that axis from the left
+            lvl.append(
+                tuple(
+                    odds[i] if (code >> (ndim - 1 - i)) & 1 else evens[i]
+                    for i in range(ndim)
+                )
+            )
+        per_level.append(tuple(lvl))
+        dims = evens
+    return tuple(dims), tuple(reversed(per_level))
+
+
+def pack_nd(pyr: PyramidND, ndim: Optional[int] = None) -> Array:
+    """Flatten [approx, then per-level detail bands coarsest->finest,
+    code order] along the last axis (the N-D analogue of ``pack2d``).
+
+    ``ndim`` is derived from the band structure; a levels=0 identity
+    pyramid carries no bands, so it must be passed explicitly there.
+    """
+    if pyr.details:
+        nd = pyr.ndim
+        if ndim is not None and ndim != nd:
+            raise ValueError(f"ndim={ndim} but pyramid has ndim={nd}")
+    elif ndim is None:
+        raise ValueError("levels=0 pyramid: pass ndim explicitly")
+    else:
+        nd = ndim
+    lead = pyr.approx.shape[:-nd]
+
+    def flat(a: Array) -> Array:
+        n = 1
+        for s in a.shape[-nd:]:
+            n *= s
+        return a.reshape(lead + (n,))
+
+    parts = [flat(pyr.approx)]
+    for lvl in pyr.details:
+        parts.extend(flat(b) for b in lvl)
+    return jnp.concatenate(parts, axis=-1)
+
+
+def unpack_nd(flat: Array, shape: Tuple[int, ...], levels: int) -> PyramidND:
+    """Inverse of :func:`pack_nd` for an original trailing ``shape``."""
+    a_shape, det_shapes = band_shapes_nd(tuple(shape), levels)
+    lead = flat.shape[:-1]
+    off = 0
+
+    def take(shp: Tuple[int, ...]) -> Array:
+        nonlocal off
+        n = 1
+        for s in shp:
+            n *= s
+        part = flat[..., off : off + n]
+        off += n
+        return part.reshape(lead + shp)
+
+    approx = take(a_shape)
+    details = tuple(
+        tuple(take(shp) for shp in lvl) for lvl in det_shapes
+    )
+    return PyramidND(approx=approx, details=details)
 
 
 # ---------------------------------------------------------------------------

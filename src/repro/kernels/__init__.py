@@ -12,6 +12,7 @@ workload at once:
     bands = K.dwt_fwd_2d(img, scheme="haar")    # fused row-column pass
     p2d = K.dwt_fwd_2d_multi(img, levels=3)     # fused Mallat pyramid
     shd = K.dwt_fwd_2d_sharded(img, mesh)       # rows over mesh['data']
+    p3d = K.dwt_fwd_nd(vol, levels=2, ndim=3)   # fused volume pyramid
 
 Every transform takes ``scheme=`` — a name from the lifting-scheme
 registry (``available_schemes()``: cdf53, haar, cdf22, 97m; see
@@ -31,23 +32,29 @@ backends are bit-exact vs ``kernels/ref.py`` (== ``core.lifting``).
 
 Layout convention for this package: dwt53.py (raw Pallas window
 kernels), fused2d.py (fused 2D kernels + multi-level dispatch),
+fused3d.py (N-D API + fused whole-volume / depth-slab 3D kernels),
 tiled2d.py (tiled halo-window kernels), sharded.py (shard_map
 multi-device transform), ops.py (dispatching wrappers), ref.py (jnp
-oracle), backend.py (dispatch policy + budgets/tiles).  See DESIGN.md
-§3-7 and §9.
+oracle), backend.py (dispatch policy + budgets/tiles/slabs).  See
+DESIGN.md §3-7 and §9-10.
 """
 from repro.core.lifting import (  # noqa: F401  structural types + packing
     Bands2D,
     Pyramid2D,
+    PyramidND,
     WaveletPyramid,
     band_shapes_2d,
+    band_shapes_nd,
     band_sizes,
     max_levels,
     max_levels_2d,
+    max_levels_nd,
     pack,
     pack2d,
+    pack_nd,
     unpack,
     unpack2d,
+    unpack_nd,
 )
 from repro.core.schemes import (  # noqa: F401  the scheme registry
     LiftingScheme,
@@ -77,6 +84,11 @@ from repro.kernels.fused2d import (  # noqa: F401
     dwt_inv_2d,
     dwt_inv_2d_multi,
 )
+from repro.kernels.fused3d import (  # noqa: F401
+    dwt_fwd_nd,
+    dwt_inv_nd,
+    plan_3d,
+)
 from repro.kernels.ops import (  # noqa: F401
     dwt53_fwd,
     dwt53_fwd_1d,
@@ -97,15 +109,20 @@ from repro.kernels.sharded import (  # noqa: F401
 __all__ = [
     "Bands2D",
     "Pyramid2D",
+    "PyramidND",
     "WaveletPyramid",
     "band_shapes_2d",
+    "band_shapes_nd",
     "band_sizes",
     "max_levels",
     "max_levels_2d",
+    "max_levels_nd",
     "pack",
     "pack2d",
+    "pack_nd",
     "unpack",
     "unpack2d",
+    "unpack_nd",
     "LiftingScheme",
     "LiftStep",
     "available_schemes",
@@ -130,6 +147,9 @@ __all__ = [
     "dwt_inv_2d_multi",
     "dwt_fwd_2d_sharded",
     "dwt_inv_2d_sharded",
+    "dwt_fwd_nd",
+    "dwt_inv_nd",
+    "plan_3d",
     "dwt53_fwd",
     "dwt53_fwd_1d",
     "dwt53_inv",

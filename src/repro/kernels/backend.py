@@ -260,6 +260,24 @@ def fused2d_budget_elems() -> int:
     )
 
 
+# the fused whole-volume 3D kernel keeps ~10 volume-sized int32 buffers
+# resident per grid cell (input, 2 row streams, 4 plane bands, then the
+# 8 subband octants overlap the freed intermediates)
+FUSED3D_RESIDENT_BUFFERS = 10
+
+
+def fused3d_budget_elems() -> int:
+    """Largest per-volume element count the whole-volume 3D kernel accepts.
+
+    Derived from :func:`vmem_budget_bytes` like the 2D budget, with the
+    deeper resident-buffer count of the three-axis cascade.
+    """
+    return max(
+        vmem_budget_bytes() // (4 * FUSED3D_RESIDENT_BUFFERS * 2),
+        4 * 1024,
+    )
+
+
 # tiled-2D engine defaults: 252 core + 4 halo = 256 — lane-aligned input
 # windows, the dominant DMA of the tiled kernels
 DEFAULT_TILE = 252
@@ -292,17 +310,19 @@ def _tile_env_override() -> Optional[Tuple[int, int]]:
     return th, tw
 
 
-def dispatch_state() -> Tuple[str, str]:
+def dispatch_state() -> Tuple[str, str, str]:
     """The env-derived dispatch inputs, as a hashable token.
 
     Threaded as a static argument through the multi-level jit wrappers so
-    changing ``REPRO_DWT_TILE`` / ``REPRO_DWT_VMEM_MB`` mid-process
-    retraces instead of silently reusing an executable whose whole-image
-    vs tiled choices were baked under the old state.
+    changing ``REPRO_DWT_TILE`` / ``REPRO_DWT_VMEM_MB`` /
+    ``REPRO_DWT_SLAB`` mid-process retraces instead of silently reusing
+    an executable whose whole-image vs tiled/slab choices were baked
+    under the old state.
     """
     return (
         os.environ.get(_TILE_ENV, "").strip(),
         os.environ.get(_VMEM_ENV, "").strip(),
+        os.environ.get(_SLAB_ENV, "").strip(),
     )
 
 
@@ -322,7 +342,7 @@ def pick_tile(h: int, w: int, halo: int = 2) -> Tuple[int, int]:
 
 
 @functools.lru_cache(maxsize=4096)
-def _pick_tile(h: int, w: int, halo: int, _state: Tuple[str, str]) -> Tuple[int, int]:
+def _pick_tile(h: int, w: int, halo: int, _state) -> Tuple[int, int]:
     override = _tile_env_override()
     if override is not None:
         return override
@@ -336,3 +356,72 @@ def _pick_tile(h: int, w: int, halo: int, _state: Tuple[str, str]) -> Tuple[int,
     th = min(th, h + (h % 2))
     tw = min(tw, w + (w % 2))
     return max(th, _MIN_TILE), max(tw, _MIN_TILE)
+
+
+# ---------------------------------------------------------------------------
+# Slab policy for the fused 3D engine (kernels/fused3d.py): volumes past
+# the whole-volume budget are blocked along the DEPTH axis only — a slab
+# of TD depth slices plus the scheme's reflect halo, with H and W kept
+# fully resident per slab (the plane axes run the exact band-policy
+# math, so any registered scheme works along them; only the slab axis
+# needs windowability).
+# ---------------------------------------------------------------------------
+
+_SLAB_ENV = "REPRO_DWT_SLAB"
+
+DEFAULT_SLAB = 8  # depth slices per slab core; shrunk to fit the budget
+_MIN_SLAB = 2  # slabs are even and >= 2 so every window has a full halo
+
+
+def slab_forced() -> bool:
+    """True when ``REPRO_DWT_SLAB`` is set: the slab-tiled 3D engine is
+    forced for every slab-able volume, budget or not (tuning + the test
+    lever that exercises multi-slab grids on small volumes)."""
+    return bool(os.environ.get(_SLAB_ENV, "").strip())
+
+
+def _slab_env_override() -> Optional[int]:
+    env = os.environ.get(_SLAB_ENV, "").strip()
+    if not env:
+        return None
+    try:
+        td = int(env)
+    except ValueError as e:
+        raise ValueError(f"{_SLAB_ENV}={env!r}: expected an integer") from e
+    if td < _MIN_SLAB or td % 2:
+        raise ValueError(
+            f"{_SLAB_ENV}={env!r}: slab depth must be even and >= {_MIN_SLAB}"
+        )
+    return td
+
+
+def pick_slab(d: int, h: int, w: int, halo: int = 2) -> int:
+    """Core slab depth TD for a (d, h, w) volume under the 3D budget.
+
+    Even, >= ``_MIN_SLAB``, sized so the halo'd (TD + 2*halo, H, W) slab
+    windows (the dominant resident buffers of the slab kernel) fit the
+    derived budget.  ``REPRO_DWT_SLAB`` overrides.
+    """
+    return _pick_slab(d, h, w, halo, dispatch_state())
+
+
+@functools.lru_cache(maxsize=4096)
+def _pick_slab(d: int, h: int, w: int, halo: int, _state) -> int:
+    override = _slab_env_override()
+    if override is not None:
+        return override
+    budget = fused3d_budget_elems()
+    td = DEFAULT_SLAB
+    while (td + 2 * halo) * h * w > budget and td > _MIN_SLAB:
+        td = max(td - 2, _MIN_SLAB)
+    # never slab beyond the volume (ceil to even: odd depth pads one slice)
+    td = min(td, d + (d % 2))
+    return max(td, _MIN_SLAB)
+
+
+def slab_fits(h: int, w: int, halo: int = 2) -> bool:
+    """True when even the minimal slab window fits the 3D budget — the
+    feasibility half of the slab-vs-XLA fallback decision."""
+    if _slab_env_override() is not None:
+        return True  # explicit override: the operator owns the budget
+    return (_MIN_SLAB + 2 * halo) * h * w <= fused3d_budget_elems()

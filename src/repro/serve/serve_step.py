@@ -137,17 +137,26 @@ class ServeEngine:
 @dataclass
 class TransformRequest:
     uid: int
-    image: np.ndarray  # (H, W) numeric, the engine's shape bucket
-    pyramid: Optional[Any] = None  # Pyramid2D result (set when served)
+    image: np.ndarray  # (H, W) — or (D, H, W) on a volume engine — bucket
+    pyramid: Optional[Any] = None  # Pyramid2D/PyramidND result (when served)
     done: bool = False
 
 
 @dataclass
 class WaveletServeEngine:
-    """Continuous micro-batched 2D DWT serving over fixed batch slots."""
+    """Continuous micro-batched 2D/3D DWT serving over fixed batch slots.
+
+    ``depth=None`` (default) serves (H, W) image buckets through the
+    fused 2D pyramid; setting ``depth`` makes the bucket a (D, H, W)
+    volume served through the fused N-D engine (``K.dwt_fwd_nd``,
+    kernels/fused3d.py) — video frame stacks and CT-style volumes run
+    whole-volume or depth-slab Pallas kernels, batch mapped to grid
+    cells.  The sharded mesh route stays 2D-only.
+    """
 
     height: int
     width: int
+    depth: Optional[int] = None  # set -> (D, H, W) volume bucket
     batch_slots: int = 8
     levels: int = 2
     mode: str = "paper"
@@ -163,7 +172,17 @@ class WaveletServeEngine:
         if self.batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {self.batch_slots}")
         _schemes.get_scheme(self.scheme)  # fail fast on unknown names
-        _lifting.check_levels_2d(self.height, self.width, self.levels)
+        if self.depth is not None:
+            _lifting.check_levels_nd(
+                (self.depth, self.height, self.width), self.levels
+            )
+            if self.mesh is not None:
+                raise ValueError(
+                    "the sharded mesh route is 2D-only; volume buckets "
+                    "(depth set) serve through the fused N-D engine"
+                )
+        else:
+            _lifting.check_levels_2d(self.height, self.width, self.levels)
         if self.mesh is not None:
             from repro.kernels import sharded as _sharded
 
@@ -173,11 +192,16 @@ class WaveletServeEngine:
             )
         self._pending: List[TransformRequest] = []
 
+    @property
+    def bucket_shape(self) -> Tuple[int, ...]:
+        if self.depth is not None:
+            return (self.depth, self.height, self.width)
+        return (self.height, self.width)
+
     def submit(self, req: TransformRequest) -> None:
-        if req.image.shape != (self.height, self.width):
+        if req.image.shape != self.bucket_shape:
             raise ValueError(
-                f"engine bucket is {(self.height, self.width)}, "
-                f"got {req.image.shape}"
+                f"engine bucket is {self.bucket_shape}, got {req.image.shape}"
             )
         if not np.issubdtype(req.image.dtype, np.integer):
             raise TypeError(
@@ -195,6 +219,11 @@ class WaveletServeEngine:
                 batch, self.mesh, levels=self.levels, mode=self.mode,
                 axis=self.mesh_axis, scheme=self.scheme,
             )
+        if self.depth is not None:
+            return K.dwt_fwd_nd(
+                batch, levels=self.levels, mode=self.mode,
+                backend=self.backend, scheme=self.scheme, ndim=3,
+            )
         return K.dwt_fwd_2d_multi(
             batch, levels=self.levels, mode=self.mode, backend=self.backend,
             scheme=self.scheme,
@@ -207,7 +236,7 @@ class WaveletServeEngine:
         active = self._pending[: self.batch_slots]
         self._pending = self._pending[self.batch_slots :]
         # static batch shape: unfilled slots repeat row 0 (discarded)
-        batch = np.zeros((self.batch_slots, self.height, self.width), np.int32)
+        batch = np.zeros((self.batch_slots,) + self.bucket_shape, np.int32)
         for i, r in enumerate(active):
             batch[i] = r.image
         pyr = self._transform(jnp.asarray(batch))

@@ -58,6 +58,12 @@ class WaveletSyncConfig:
     # into one LL band, and the transform stays sharding-aligned on the
     # leading axes.  Off by default (wire format changes per leaf).
     spatial_2d: bool = False
+    # volumetric codec: (T, H, W)-shaped leaves (ndim >= 3 with all three
+    # trailing dims transformable) run the fused multi-level 3D pyramid
+    # (kernels/fused3d.py) — activation stacks and conv kernels smooth
+    # along depth too compact into one LLL corner.  Checked before
+    # spatial_2d; ineligible leaves fall through to the 2D/1D codecs.
+    spatial_3d: bool = False
 
 
 def init_error_feedback(params: PyTree) -> PyTree:
@@ -91,6 +97,22 @@ def _can_2d(g, levels: int) -> bool:
     return True
 
 
+def _can_nd(g, levels: int, ndim: int = 3) -> bool:
+    """True when a leaf's trailing ``ndim`` axes support a `levels`-deep
+    N-D pyramid (the volumetric codec's eligibility test, decided at
+    trace).  Defers to ``lifting.check_levels_nd`` so eligibility can
+    never drift from what the engine accepts."""
+    from repro.core import lifting
+
+    if g.ndim < ndim:
+        return False
+    try:
+        lifting.check_levels_nd(g.shape[-ndim:], levels)
+    except ValueError:
+        return False
+    return True
+
+
 def _tree_pmax(shifts, axis_name: str):
     return jax.tree_util.tree_map(
         lambda s: jax.lax.pmax(s, axis_name), shifts
@@ -118,6 +140,37 @@ def _sync_leaf_2d(g, g32, scale, cfg: WaveletSyncConfig, axis_name: str, n_pods:
     )
     own = C.decompress_pyramid_2d(
         ll_q.astype(jnp.int32),
+        tuple(tuple(b.astype(jnp.int32) for b in lvl) for lvl in details_q),
+        shifts,
+        scale,
+        cfg.mode,
+        backend=cfg.backend,
+        scheme=cfg.scheme,
+    )
+    return g_sync.astype(g.dtype), g32 - own
+
+
+def _sync_leaf_nd(g, g32, scale, cfg: WaveletSyncConfig, axis_name: str, n_pods: int):
+    """Band sync for one volume-shaped leaf through the 3D pyramid codec."""
+    pyr = C.forward_pyramid_nd(
+        g32, scale, cfg.levels, cfg.mode, backend=cfg.backend,
+        scheme=cfg.scheme, ndim=3,
+    )
+    shifts = _tree_pmax(C.pyramid_nd_shifts(pyr), axis_name)
+    a_q, details_q = C.quantize_pyramid_nd(pyr, shifts)
+    sum_a = _ring_sum(a_q, axis_name, n_pods)
+    sum_det = tuple(
+        tuple(_ring_sum(b, axis_name, n_pods) for b in lvl) for lvl in details_q
+    )
+    g_sync = (
+        C.decompress_pyramid_nd(
+            sum_a, sum_det, shifts, scale, cfg.mode, backend=cfg.backend,
+            scheme=cfg.scheme,
+        )
+        / n_pods
+    )
+    own = C.decompress_pyramid_nd(
+        a_q.astype(jnp.int32),
         tuple(tuple(b.astype(jnp.int32) for b in lvl) for lvl in details_q),
         shifts,
         scale,
@@ -174,7 +227,11 @@ def pod_sync_tree(
         # band sharded exactly like the gradient, so the ring exchange
         # ships only the local shard (a flatten-based codec all-gathers:
         # §Perf).  spatial_2d routes matrix-shaped leaves through the
-        # fused 2D pyramid (kernels/fused2d.py tiled engine underneath).
+        # fused 2D pyramid (kernels/fused2d.py tiled engine underneath);
+        # spatial_3d routes volume-shaped leaves through the fused 3D
+        # pyramid (kernels/fused3d.py whole-volume/slab engine).
+        if cfg.spatial_3d and _can_nd(g32, cfg.levels):
+            return _sync_leaf_nd(g, g32, scale, cfg, axis_name, n_pods)
         if cfg.spatial_2d and _can_2d(g32, cfg.levels):
             return _sync_leaf_2d(g, g32, scale, cfg, axis_name, n_pods)
         pyr = C.forward_bands_nd(
@@ -229,6 +286,9 @@ def pod_collective_bytes(params: PyTree, cfg: WaveletSyncConfig) -> Tuple[int, i
             m = 1 << cfg.levels
             n_pad = (p.size + m - 1) // m * m
             comp += (n_pad >> cfg.levels) * 4 + 4
+        elif cfg.spatial_3d and _can_nd(p, cfg.levels):
+            lead = p.size // (p.shape[-3] * p.shape[-2] * p.shape[-1])
+            comp += lead * C.band_bytes_nd(p.shape[-3:], cfg.levels)
         elif cfg.spatial_2d and _can_2d(p, cfg.levels):
             lead = p.size // (p.shape[-2] * p.shape[-1])
             comp += lead * C.band_bytes_2d(p.shape[-2], p.shape[-1], cfg.levels)

@@ -36,3 +36,15 @@ def pytest_configure(config):
         "filterwarnings",
         "ignore::repro.kernels.backend.BackendDegradeWarning",
     )
+    # CI lanes (.github/workflows/ci.yml): the PR lane runs -m "not slow"
+    # for fast feedback; the main-branch lane runs the full suite.
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running sweep (2048x2048 images, CPU-mesh subprocess "
+        "sweeps); excluded from the CI pull-request lane via -m 'not slow'",
+    )
+    config.addinivalue_line(
+        "markers",
+        "sharded: spawns subprocesses with a forced multi-device CPU mesh "
+        "(XLA_FLAGS=--xla_force_host_platform_device_count)",
+    )

@@ -1,0 +1,54 @@
+"""Tier-1 schema validation of the checked-in BENCH_kernels.json.
+
+The kernels bench (benchmarks/kernels_bench.py) emits a machine-readable
+payload the CI gate (benchmarks/gate.py) consumes; this test runs the
+gate's structural validator against the checked-in artifact so a broken
+emission — dropped section, renamed key, missing per-scheme or 3d row —
+fails fast in unit tests instead of only in the smoke job.
+"""
+import json
+import sys
+from pathlib import Path
+
+from repro.core.schemes import available_schemes
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+from benchmarks import gate  # noqa: E402
+
+
+def _bench() -> dict:
+    return json.loads((ROOT / "BENCH_kernels.json").read_text())
+
+
+def test_checked_in_payload_is_schema_complete():
+    assert gate.check_schema(_bench()) == []
+
+
+def test_payload_covers_every_registered_scheme():
+    """The emission loops available_schemes(); the checked-in artifact
+    must carry a 1D/2D row AND a 3d row for each registered scheme."""
+    bench = _bench()
+    for name in available_schemes():
+        assert name in bench["schemes"], name
+        assert name in bench["3d"]["schemes"], name
+        assert "bit_exact" in bench["schemes"][name]
+        assert "bit_exact" in bench["3d"]["schemes"][name]
+
+
+def test_gate_required_schemes_match_registry():
+    """gate.py is stdlib-only (no jax import), so its scheme list is a
+    literal — keep it in lockstep with the live registry."""
+    assert set(gate.REQUIRED_SCHEMES) == set(available_schemes())
+
+
+def test_3d_section_shape_and_types():
+    vol = _bench()["3d"]
+    assert len(vol["shape"]) == 3
+    assert isinstance(vol["levels"], int)
+    assert isinstance(vol["bit_exact"], bool)
+    assert vol["plan"] in (
+        "whole-pallas", "slab-pallas", "whole-interpret", "slab-interpret",
+        "xla",
+    )
+    assert vol["fused_us"] > 0 and vol["per_axis_us"] > 0

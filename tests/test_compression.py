@@ -143,3 +143,43 @@ def test_pack2d_unpack2d_roundtrip():
     np.testing.assert_array_equal(
         np.asarray(lifting.dwt53_inv_2d_multi(pyr2)), np.asarray(x)
     )
+
+
+def test_band_quantized_roundtrip_nd_accuracy():
+    """The 3D band codec reconstructs smooth volumes within quantization
+    error, for both the default and an alternate scheme."""
+    rng = np.random.default_rng(9)
+    t = np.linspace(0, 1, 6)[:, None, None]
+    yy = np.linspace(0, 1, 16)[None, :, None]
+    xx = np.linspace(0, 1, 24)[None, None, :]
+    g = jnp.asarray(
+        (np.sin(4 * t + 2 * yy) * np.cos(3 * xx)
+         + 0.01 * rng.normal(size=(6, 16, 24))).astype(np.float32)
+    )
+    for scheme in ("cdf53", "97m"):
+        g_hat, resid = C.band_quantized_roundtrip_nd(g, levels=2, scheme=scheme)
+        rel = float(jnp.linalg.norm(resid) / jnp.linalg.norm(g))
+        assert rel < 0.05, (scheme, rel)
+
+
+def test_band_bytes_nd_accounting():
+    shape = (6, 16, 24)
+    n = 6 * 16 * 24
+    got = C.band_bytes_nd(shape, 2)
+    assert got < n * 4  # beats fp32
+    # exact accounting against the band geometry
+    from repro.core import lifting
+
+    a_shape, det_shapes = lifting.band_shapes_nd(shape, 2)
+    want = 2 * int(np.prod(a_shape)) + sum(
+        int(np.prod(b)) for lvl in det_shapes for b in lvl
+    ) + 8
+    assert got == want
+
+
+def test_nd_codec_batched_lead_dims():
+    rng = np.random.default_rng(10)
+    g = jnp.asarray(rng.normal(size=(2, 4, 8, 8)).astype(np.float32))
+    g_hat, resid = C.band_quantized_roundtrip_nd(g, levels=1)
+    assert g_hat.shape == g.shape
+    assert float(jnp.linalg.norm(resid) / jnp.linalg.norm(g)) < 0.1

@@ -122,3 +122,34 @@ def test_wavelet_serve_engine_rejects_wrong_bucket():
     eng = WaveletServeEngine(height=16, width=16, batch_slots=2, levels=1)
     with pytest.raises(ValueError, match="bucket"):
         eng.submit(TransformRequest(uid=1, image=np.zeros((8, 8), np.int32)))
+
+
+def test_wavelet_serve_volume_route():
+    """A depth-configured engine serves (D, H, W) volume buckets through
+    the fused N-D engine and returns per-request PyramidND slices."""
+    from repro import kernels as K
+    from repro.core import lifting
+    from repro.serve.serve_step import TransformRequest, WaveletServeEngine
+
+    rng = np.random.default_rng(12)
+    eng = WaveletServeEngine(
+        height=16, width=16, depth=4, batch_slots=2, levels=1,
+        backend="interpret",
+    )
+    reqs = [
+        TransformRequest(uid=i, image=rng.integers(0, 255, (4, 16, 16)).astype(np.int32))
+        for i in range(3)
+    ]
+    done = eng.run(reqs)
+    assert len(done) == 3 and all(r.done for r in done)
+    for r in done:
+        want = lifting.dwt_fwd_nd(jnp.asarray(r.image), levels=1, ndim=3)
+        np.testing.assert_array_equal(
+            np.asarray(r.pyramid.approx), np.asarray(want.approx)
+        )
+    # bucket validation: 2D images are rejected on a volume engine
+    with pytest.raises(ValueError, match="bucket"):
+        eng.submit(TransformRequest(uid=9, image=np.zeros((16, 16), np.int32)))
+    # the sharded mesh route stays 2D-only
+    with pytest.raises(ValueError, match="2D-only"):
+        WaveletServeEngine(height=16, width=16, depth=4, mesh=object(), levels=1)

@@ -33,6 +33,8 @@ def _run(body: str) -> str:
     "0.4.x experimental fallback hits an XLA partitioner check "
     "(IsManualSubgroup) on the full train step",
 )
+@pytest.mark.slow
+@pytest.mark.sharded
 def test_wavelet_multipod_step_matches_baseline():
     out = _run(
         """
@@ -72,6 +74,8 @@ def test_wavelet_multipod_step_matches_baseline():
     assert "OK" in out
 
 
+@pytest.mark.slow
+@pytest.mark.sharded
 def test_pjit_train_step_sharded_mesh():
     """The plain train step on a (data=2, model=2) mesh with real arrays."""
     out = _run(
@@ -112,6 +116,8 @@ def test_pjit_train_step_sharded_mesh():
     assert "OK" in out
 
 
+@pytest.mark.slow
+@pytest.mark.sharded
 def test_dryrun_cell_on_debug_mesh():
     """One dry-run cell end-to-end in a subprocess (its own 512-dev world)."""
     proc = subprocess.run(
@@ -124,6 +130,8 @@ def test_dryrun_cell_on_debug_mesh():
     assert "OK musicgen-medium" in proc.stdout
 
 
+@pytest.mark.slow
+@pytest.mark.sharded
 def test_microbatch_accumulation_equivalence():
     out = _run(
         """

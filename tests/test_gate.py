@@ -1,0 +1,200 @@
+"""Unit tests for the checked-in CI gate logic (benchmarks/gate.py).
+
+The gate used to live as an untestable heredoc inside smoke.sh; these
+fixtures run a known-good payload through every gate (must pass clean)
+and then break it one field at a time (each break must produce exactly
+the expected failure), so a gate regression is caught in tier-1 instead
+of silently green-lighting broken benchmarks.
+"""
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks import gate  # noqa: E402
+
+
+def _good_rows() -> dict:
+    rows = {
+        "table2.ls.adders": "4.0",
+        "table2.ls.shifters": "2.0",
+        "table2.ls.multipliers": "0.0",
+        "table2.scheme.cdf53.adders": "4.0",
+        "table2.scheme.cdf53.shifters": "2.0",
+    }
+    for name in gate.REQUIRED_SCHEMES:
+        rows[f"table2.scheme.{name}.multipliers"] = "0.0"
+    return rows
+
+
+def _good_bench() -> dict:
+    scheme_row = {
+        "bit_exact": True,
+        "multipliers_per_pair": 0,
+        "adders_per_pair": 4,
+        "shifters_per_pair": 2,
+    }
+    return {
+        "platform": "cpu",
+        "default_backend": "xla",
+        "bit_exact": True,
+        "1d_multilevel": {
+            "shape": [8, 16384], "levels": 3,
+            "speedup_fused_vs_interpret": 4.0,
+        },
+        "2d": {"shape": [256, 256], "speedup_fused_vs_interpret": 5.0},
+        "2d_large": {
+            "shape": [2048, 2048], "plan": "xla", "bit_exact": True,
+            "fwd_us": 1.0, "inv_us": 1.0,
+        },
+        "2d_pyramid": {
+            "shape": [2048, 2048], "levels": 3, "bit_exact": True,
+            "speedup_fused_vs_per_level": 1.0,
+        },
+        "2d_batched": {"shape": [16, 256, 256], "levels": 2, "images_per_s": 100.0},
+        "schemes": {n: dict(scheme_row) for n in gate.REQUIRED_SCHEMES},
+        "3d": {
+            "shape": [16, 64, 64], "levels": 2, "plan": "xla",
+            "bit_exact": True, "per_axis_us": 8.0, "fused_us": 1.0,
+            "speedup_fused_vs_per_axis": 8.0,
+            "schemes": {n: {"bit_exact": True, "fwd_us": 1.0}
+                        for n in gate.REQUIRED_SCHEMES},
+        },
+        "3d_large": {"shape": [64, 512, 512], "plan": "xla"},
+    }
+
+
+def test_parse_rows_skips_header_and_malformed():
+    rows = gate.parse_rows(
+        "name,value,notes\nfoo.bar,3.0,a note, with commas\njunk\n"
+    )
+    assert rows == {"foo.bar": "3.0"}
+
+
+def test_good_fixture_passes_every_gate():
+    assert gate.gate_failures(_good_rows(), _good_bench()) == []
+
+
+def test_summary_mentions_3d():
+    s = gate.summary(_good_bench())
+    assert "3d fused/per-axis" in s and s.startswith("SMOKE OK")
+
+
+def test_table2_regression_fails():
+    rows = _good_rows()
+    rows["table2.ls.multipliers"] = "1.0"
+    fails = gate.gate_failures(rows, _good_bench())
+    assert any("table2.ls.multipliers" in f for f in fails)
+
+
+def test_scheme_multiplies_fail():
+    rows = _good_rows()
+    rows["table2.scheme.97m.multipliers"] = "2.0"
+    fails = gate.check_table2(rows)
+    assert any("97m" in f and "multiplierless" in f for f in fails)
+
+
+def test_missing_section_fails_schema_before_behaviour():
+    bench = _good_bench()
+    del bench["3d"]
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("missing section '3d'" in f for f in fails)
+
+
+def test_row_level_schema_failure_stops_before_behavioural_gates():
+    """ANY schema failure must short-circuit gate_failures: the
+    behavioural gates index the payload freely and would KeyError on a
+    half-broken row instead of reporting the promised failure list."""
+    bench = _good_bench()
+    del bench["schemes"]["cdf53"]["bit_exact"]
+    fails = gate.gate_failures(_good_rows(), bench)  # must not raise
+    assert any("schemes['cdf53'] missing 'bit_exact'" in f for f in fails)
+
+
+def test_missing_multipliers_field_fails_schema():
+    """The bench-side multiplierless check reads multipliers_per_pair;
+    an emission that drops the field must fail the schema gate (not
+    silently pass the behavioural one)."""
+    bench = _good_bench()
+    del bench["schemes"]["97m"]["multipliers_per_pair"]
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any(
+        "schemes['97m'] missing 'multipliers_per_pair'" in f for f in fails
+    )
+
+
+def test_missing_3d_scheme_row_fails():
+    bench = _good_bench()
+    del bench["3d"]["schemes"]["haar"]
+    fails = gate.check_schema(bench)
+    assert any("3d.schemes" in f and "haar" in f for f in fails)
+
+
+def test_3d_bit_exact_break_fails():
+    bench = _good_bench()
+    bench["3d"]["bit_exact"] = False
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("3d: fused volume transform diverged" in f for f in fails)
+
+
+def test_3d_scheme_roundtrip_break_fails():
+    bench = _good_bench()
+    bench["3d"]["schemes"]["cdf22"]["bit_exact"] = False
+    fails = gate.check_3d(bench)
+    assert fails == ["3d scheme cdf22: volume round-trip diverged"]
+
+
+def test_3d_speedup_regression_fails():
+    bench = _good_bench()
+    bench["3d"]["speedup_fused_vs_per_axis"] = 0.3
+    fails = gate.check_3d(bench)
+    assert any("regressed vs per-axis" in f for f in fails)
+
+
+def test_accelerator_plan_gates():
+    """On a pallas-default platform, large 2D/3D shapes must stay on the
+    tiled/slab Pallas paths."""
+    bench = _good_bench()
+    bench["default_backend"] = "pallas"
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("2d_large" in f and "left the Pallas path" in f for f in fails)
+    assert any("3d_large" in f and "left the Pallas path" in f for f in fails)
+    bench["2d_large"]["plan"] = "tiled-pallas"
+    bench["3d_large"]["plan"] = "slab-pallas"
+    assert gate.gate_failures(_good_rows(), bench) == []
+
+
+def test_interpret_speedup_floor():
+    bench = _good_bench()
+    bench["2d"]["speedup_fused_vs_interpret"] = 0.9
+    fails = gate.check_kernels(bench)
+    assert any("2d: fused compiled path no faster" in f for f in fails)
+
+
+def test_main_exit_codes(tmp_path):
+    csv = tmp_path / "rows.csv"
+    csv.write_text(
+        "name,value,notes\n"
+        + "\n".join(f"{k},{v},x" for k, v in _good_rows().items())
+        + "\n"
+    )
+    bench_path = tmp_path / "bench.json"
+    bench_path.write_text(json.dumps(_good_bench()))
+    assert gate.main(["--csv", str(csv), "--bench", str(bench_path)]) == 0
+    broken = _good_bench()
+    broken["bit_exact"] = False
+    bench_path.write_text(json.dumps(broken))
+    assert gate.main(["--csv", str(csv), "--bench", str(bench_path)]) == 1
+
+
+def test_fixture_stays_schema_complete():
+    """The passing fixture must keep covering every required section/key
+    (otherwise the failing-fixture tests could rot into vacuity)."""
+    bench = _good_bench()
+    assert gate.check_schema(bench) == []
+    mutated = copy.deepcopy(bench)
+    mutated["3d"].pop("speedup_fused_vs_per_axis")
+    assert gate.check_schema(mutated) != []

@@ -30,6 +30,8 @@ def _run(body: str, n_devices: int = 8) -> str:
     return proc.stdout
 
 
+@pytest.mark.slow
+@pytest.mark.sharded
 def test_sharded_fwd_inv_bit_exact_on_cpu_mesh():
     """4-way row sharding, both modes, multi-level, odd width, batch."""
     out = _run(
@@ -69,6 +71,8 @@ def test_sharded_fwd_inv_bit_exact_on_cpu_mesh():
     assert "OK" in out and int(out.split()[-1]) >= 20
 
 
+@pytest.mark.slow
+@pytest.mark.sharded
 def test_sharded_output_stays_sharded():
     """Bands come back row-sharded (no silent all-gather of the result)."""
     out = _run(
@@ -88,6 +92,8 @@ def test_sharded_output_stays_sharded():
     assert "OK 4" in out
 
 
+@pytest.mark.slow
+@pytest.mark.sharded
 def test_sharded_per_scheme_bit_exact_on_cpu_mesh():
     """Scheme-derived halo exchange: haar ships no halo rows, 97m ships
     4 per direction — both bit-exact vs the single-device reference."""
@@ -138,6 +144,8 @@ def test_check_shardable_rejects_bad_shapes():
     check_shardable(64, 32, 4, 2)  # and a valid one passes
 
 
+@pytest.mark.slow
+@pytest.mark.sharded
 def test_spatial_2d_pod_sync_converges_to_mean():
     """The spatial_2d gradient codec inside shard_map: per-band ring sums
     + pmax'd shifts reconstruct ~the cross-pod mean for matrix leaves."""
@@ -161,6 +169,50 @@ def test_spatial_2d_pod_sync_converges_to_mean():
                "v": jnp.zeros((8000,), jnp.float32)}
         cfg = WaveletSyncConfig(levels=2, codec="bands", n_pods=2,
                                 min_size=256, spatial_2d=True)
+        f = shard_map(lambda g, e: pod_sync_tree(g, e, cfg, axis_name="pod"),
+                      mesh=mesh, in_specs=(P("pod"), P()),
+                      out_specs=(P(), P()), check_rep=False)
+        synced, new_err = jax.jit(f)(grads, err)
+        for k, g in grads.items():
+            want = np.mean(np.asarray(g), axis=0)
+            got = np.asarray(synced[k])
+            rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+            assert rel < 0.05, (k, rel)
+            assert np.isfinite(np.asarray(new_err[k])).all(), k
+        print("OK")
+        """,
+        n_devices=2,
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.sharded
+def test_spatial_3d_pod_sync_converges_to_mean():
+    """The spatial_3d gradient codec inside shard_map: volume-shaped
+    leaves route through the fused 3D pyramid (kernels/fused3d.py),
+    per-band ring sums + pmax'd shifts reconstruct ~the cross-pod mean,
+    and matrix/vector leaves still fall through to the 2D/1D codecs."""
+    out = _run(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.train.grad_compress import WaveletSyncConfig, pod_sync_tree
+        from repro.launch.mesh import make_mesh_compat
+        try:
+            from jax.experimental.shard_map import shard_map
+        except ImportError:
+            shard_map = jax.shard_map
+        mesh = make_mesh_compat((2,), ("pod",))
+        rng = np.random.default_rng(7)
+        grads = {"act": jnp.asarray(rng.normal(size=(2, 6, 16, 24)), jnp.float32),
+                 "w": jnp.asarray(rng.normal(size=(2, 64, 96)), jnp.float32),
+                 "v": jnp.asarray(rng.normal(size=(2, 8000)), jnp.float32)}
+        err = {"act": jnp.zeros((6, 16, 24), jnp.float32),
+               "w": jnp.zeros((64, 96), jnp.float32),
+               "v": jnp.zeros((8000,), jnp.float32)}
+        cfg = WaveletSyncConfig(levels=2, codec="bands", n_pods=2,
+                                min_size=256, spatial_3d=True, spatial_2d=True)
         f = shard_map(lambda g, e: pod_sync_tree(g, e, cfg, axis_name="pod"),
                       mesh=mesh, in_specs=(P("pod"), P()),
                       out_specs=(P(), P()), check_rep=False)

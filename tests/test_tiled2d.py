@@ -103,6 +103,7 @@ def test_batched_grid_mapping():
     np.testing.assert_array_equal(np.asarray(xr), np.asarray(x))
 
 
+@pytest.mark.slow
 def test_2048_runs_tiled_engine_end_to_end():
     """The acceptance shape: 2048x2048 exceeds every whole-image VMEM
     budget, stays on the Pallas engine (tiled), and is bit-exact."""
