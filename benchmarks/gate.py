@@ -23,6 +23,10 @@ Gates (fail = non-zero exit, every failure listed):
     fused 3D engine not regressing vs per-level / per-axis dispatch,
     and budget-sized 2D images / video-scale 3D volumes never silently
     leaving the Pallas path where Pallas is the platform default.
+  * Entropy codec — every registered scheme's 1D/2D/3D pyramids
+    round-trip bit-exactly through the WZRC Rice container, and the
+    ``wz-rice`` checkpoint codec beats plain zlib bytes on both the
+    smooth checkpoint-like tensor and the fp32-noise one.
 
 This module is dependency-free (stdlib only) on purpose: the gates must
 stay runnable — and unit-testable — without importing jax.
@@ -57,6 +61,14 @@ REQUIRED_SECTIONS: Dict[str, tuple] = {
         "schemes",
     ),
     "3d_large": ("shape", "plan"),
+    "codec": (
+        "block",
+        "lossless",
+        "encode_mbps",
+        "decode_mbps",
+        "smooth",
+        "noisy",
+    ),
 }
 
 # Table 2: the paper's (5,3) op counts must hold exactly
@@ -129,11 +141,18 @@ def check_schema(bench: dict) -> List[str]:
         for key in keys:
             if key not in bench[section]:
                 fails.append(f"bench section {section!r} missing key {key!r}")
+    for section in ("smooth", "noisy"):
+        row = bench.get("codec", {}).get(section, {})
+        for key in ("raw_bytes", "wz_rice_bytes", "zlib_bytes",
+                    "ratio_vs_zlib"):
+            if not isinstance(row, dict) or key not in row:
+                fails.append(f"bench codec.{section} missing key {key!r}")
     for holder, label, row_keys in (
         (bench.get("schemes", {}), "schemes",
          ("bit_exact", "multipliers_per_pair")),
         (bench.get("3d", {}).get("schemes", {}), "3d.schemes",
          ("bit_exact",)),
+        (bench.get("codec", {}).get("lossless", {}), "codec.lossless", ()),
     ):
         for need in REQUIRED_SCHEMES:
             if need not in holder:
@@ -217,6 +236,33 @@ def check_3d(bench: dict) -> List[str]:
     return fails
 
 
+def check_codec(bench: dict) -> List[str]:
+    """Gates over the entropy-codec section.
+
+    Losslessness is the codec's contract: every registered scheme must
+    round-trip its 1D/2D/3D pyramids bit-exactly through the WZRC
+    container.  The ratio gate pins the acceptance claim — wz-rice
+    checkpoint leaves beat plain-zlib bytes on smooth checkpoint-like
+    tensors (and on incompressible fp32 noise, where zlib gets nothing
+    while quantize+Rice halves the payload before entropy coding)."""
+    fails = []
+    codec = bench["codec"]
+    for name, ok in codec["lossless"].items():
+        if not ok:
+            fails.append(f"codec scheme {name}: container roundtrip diverged")
+    for section in ("smooth", "noisy"):
+        row = codec[section]
+        if row["wz_rice_bytes"] > row["zlib_bytes"]:
+            fails.append(
+                f"codec {section}: wz-rice ({row['wz_rice_bytes']}B) lost "
+                f"to plain zlib ({row['zlib_bytes']}B)"
+            )
+    for key in ("encode_mbps", "decode_mbps"):
+        if codec[key] <= 0:
+            fails.append(f"codec {key}: non-positive throughput ({codec[key]})")
+    return fails
+
+
 def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
     """Every gate failure, most structural first.  ANY schema failure
     stops before the behavioural gates: those index the payload freely
@@ -225,7 +271,12 @@ def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
     schema_fails = check_schema(bench)
     if schema_fails:
         return check_table2(rows) + schema_fails
-    return check_table2(rows) + check_kernels(bench) + check_3d(bench)
+    return (
+        check_table2(rows)
+        + check_kernels(bench)
+        + check_3d(bench)
+        + check_codec(bench)
+    )
 
 
 def summary(bench: dict) -> str:
@@ -241,7 +292,10 @@ def summary(bench: dict) -> str:
         f"3d fused/per-axis={vol['speedup_fused_vs_per_axis']}x "
         f"plan={vol['plan']}; "
         f"batched {bench['2d_batched']['images_per_s']} img/s; "
-        f"schemes bit-exact: {sorted(bench['schemes'])} "
+        f"schemes bit-exact: {sorted(bench['schemes'])}; "
+        f"codec lossless {sorted(bench['codec']['lossless'])} "
+        f"rice-vs-zlib {bench['codec']['smooth']['ratio_vs_zlib']}x smooth "
+        f"/ {bench['codec']['noisy']['ratio_vs_zlib']}x noisy "
         f"(backend={bench['default_backend']}, platform={bench['platform']})"
     )
 

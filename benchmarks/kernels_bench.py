@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kernels as K
+from repro.codec import container as codec_container
 from repro.core import lifting as lifting_ref
 from repro.kernels import backend as B
 from repro.kernels import fused2d, fused3d, ops, ref
@@ -43,6 +44,12 @@ SHAPE_3D = (16, 64, 64)
 LEVELS_3D = 2
 SHAPE_3D_SCHEME = (8, 16, 16)
 SHAPE_3D_LARGE = (64, 512, 512)
+
+# codec workloads: a checkpoint-like smooth matrix (low-frequency surface
+# + realistic parameter noise) and a pure-noise one — the gate asserts
+# wz-rice beats plain zlib (the ckpt "z" codec) on both
+SHAPE_CODEC = (256, 192)
+LEVELS_CODEC = 2
 
 
 def _time_us(fn, *args, iters: int = 5) -> float:
@@ -101,6 +108,79 @@ def _bit_exact_check(x1d: jax.Array, x2d: jax.Array) -> bool:
         np.array_equal(np.asarray(K.dwt53_inv_2d(bands)), np.asarray(x2d))
     )
     return ok
+
+
+def _codec_section(rng) -> dict:
+    """Entropy-codec section: losslessness, throughput, ratio vs zlib."""
+    from repro.ckpt import checkpoint as ckpt_mod
+
+    # per-scheme lossless roundtrips through the container (1D/2D/3D)
+    lossless = {}
+    for name in K.available_schemes():
+        x1 = jnp.asarray(rng.integers(-4096, 4096, (2, 200)), jnp.int32)
+        x2 = jnp.asarray(rng.integers(-4096, 4096, (17, 23)), jnp.int32)
+        x3 = jnp.asarray(rng.integers(-4096, 4096, (6, 9, 10)), jnp.int32)
+        ok = codec_container.roundtrip_exact(
+            K.dwt_fwd(x1, levels=3, scheme=name), scheme=name
+        )
+        ok = ok and codec_container.roundtrip_exact(
+            K.dwt_fwd_2d_multi(x2, levels=2, scheme=name), scheme=name
+        )
+        ok = ok and codec_container.roundtrip_exact(
+            K.dwt_fwd_nd(x3, levels=2, ndim=3, scheme=name), scheme=name
+        )
+        lossless[name] = bool(ok)
+
+    # throughput on a checkpoint-like int pyramid (warm second run timed)
+    yy, xx = np.meshgrid(
+        np.linspace(0, 4, SHAPE_CODEC[0]),
+        np.linspace(0, 4, SHAPE_CODEC[1]),
+        indexing="ij",
+    )
+    smooth = (
+        np.sin(yy) * np.cos(xx) + 0.02 * rng.normal(size=yy.shape)
+    ).astype(np.float32)
+    noisy = rng.normal(size=SHAPE_CODEC).astype(np.float32)
+    q = jnp.asarray(
+        np.round(smooth / np.abs(smooth).max() * 32767), jnp.int32
+    )
+    pyr = K.dwt_fwd_2d_multi(q, levels=LEVELS_CODEC)
+    raw_mb = q.size * 4 / 1e6
+
+    def _best_of(fn, n=3):
+        # host-side best-of-n (the codec returns bytes, so the
+        # jitted-array _time_us helper doesn't apply); warm call first
+        fn()
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    blob = codec_container.encode_pyramid(pyr)
+    t_enc = _best_of(lambda: codec_container.encode_pyramid(pyr))
+    t_dec = _best_of(lambda: codec_container.decode_pyramid(blob))
+
+    # wz-rice vs the plain-zlib ckpt codec on the SAME leaves
+    def sizes(arr):
+        rice_b, _ = ckpt_mod._encode(arr, "wz-rice", LEVELS_CODEC)
+        z_b, _ = ckpt_mod._encode(arr, "z", LEVELS_CODEC)
+        return {
+            "raw_bytes": int(arr.nbytes),
+            "wz_rice_bytes": len(rice_b),
+            "zlib_bytes": len(z_b),
+            "ratio_vs_zlib": round(len(z_b) / max(len(rice_b), 1), 2),
+        }
+
+    return {
+        "block": int(codec_container.rice.BLOCK_VALUES),
+        "lossless": lossless,
+        "encode_mbps": round(raw_mb / t_enc, 1),
+        "decode_mbps": round(raw_mb / t_dec, 1),
+        "smooth": sizes(smooth),
+        "noisy": sizes(noisy),
+    }
 
 
 def run_json() -> Tuple[list, dict]:
@@ -296,6 +376,8 @@ def run_json() -> Tuple[list, dict]:
         )
         schemes_3d[name] = {"bit_exact": ok3, "fwd_us": round(t_s3, 1)}
 
+    codec = _codec_section(rng)
+
     payload = {
         "platform": B.platform(),
         "default_backend": B.default_backend(),
@@ -353,6 +435,7 @@ def run_json() -> Tuple[list, dict]:
             "shape": list(SHAPE_3D_LARGE),
             "plan": fused3d.plan_3d(*SHAPE_3D_LARGE),
         },
+        "codec": codec,
     }
     rows = [
         ("kernels.platform", B.platform(), "probed once at import"),
@@ -451,6 +534,42 @@ def run_json() -> Tuple[list, dict]:
                 f"kernels.scheme3d.{name}.fwd_us",
                 row["fwd_us"],
                 f"{SHAPE_3D_SCHEME} x2 levels, bit_exact={row['bit_exact']}",
+            )
+        )
+    rows.extend(
+        [
+            (
+                "kernels.codec.encode_mbps",
+                codec["encode_mbps"],
+                f"{SHAPE_CODEC} x{LEVELS_CODEC}-level pyramid -> WZRC "
+                "container (raw int32 MB/s)",
+            ),
+            (
+                "kernels.codec.decode_mbps",
+                codec["decode_mbps"],
+                "WZRC container -> pyramid",
+            ),
+            (
+                "kernels.codec.smooth.ratio_vs_zlib",
+                codec["smooth"]["ratio_vs_zlib"],
+                f"wz-rice {codec['smooth']['wz_rice_bytes']}B vs plain zlib "
+                f"{codec['smooth']['zlib_bytes']}B on a smooth "
+                "checkpoint-like tensor",
+            ),
+            (
+                "kernels.codec.noisy.ratio_vs_zlib",
+                codec["noisy"]["ratio_vs_zlib"],
+                f"wz-rice {codec['noisy']['wz_rice_bytes']}B vs plain zlib "
+                f"{codec['noisy']['zlib_bytes']}B on gaussian noise",
+            ),
+        ]
+    )
+    for name, ok in codec["lossless"].items():
+        rows.append(
+            (
+                f"kernels.codec.lossless.{name}",
+                int(ok),
+                "container roundtrip bit-exact across 1D/2D/3D pyramids",
             )
         )
     return rows, payload

@@ -28,6 +28,16 @@ Codecs:
            snapshots compact along ALL trailing axes; matrix leaves use
            the 2D encoding, vectors the 1D one — each leaf records its
            encoding in the manifest meta, so restore is self-describing
+    wz-rice — shape-routed like wz3d, but the entropy coder is the
+           adaptive Golomb-Rice container (repro.codec) instead of
+           zlib'd int16 band packs: bands stay int32 (no per-level
+           headroom shift — quantization is always to the FULL int16
+           range, so fidelity no longer degrades with depth) and the
+           payload is the self-describing WZRC bitstream.  zlib codecs
+           stay available as fallback; every wavelet leaf additionally
+           records ``enc_version`` in the manifest meta, checked at
+           decode, so a future format revision fails loudly instead of
+           mis-decoding
 
 Fault-tolerance contract: a crash at ANY point leaves either the previous
 LATEST intact or a fully-written new step (manifest written before LATEST,
@@ -53,6 +63,13 @@ from repro.core import compression as C
 
 PyTree = Any
 
+# wavelet-leaf encoding version, recorded per leaf in the manifest meta.
+# Bump when the wavelet payload layout changes (band order, quantization
+# chain, container format); decode rejects versions it doesn't know.
+ENC_VERSION = 1
+_KNOWN_ENC_VERSIONS = (1,)
+_WAVELET_CODECS = ("wz", "wz2d", "wz3d", "wz-rice")
+
 
 def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -73,6 +90,25 @@ def _quantize_for_wz(arr: np.ndarray, lim: float) -> Tuple[np.ndarray, float]:
     return q.astype(np.int32), scale
 
 
+def _wavelet_route(arr: np.ndarray, want_3d: bool) -> str:
+    """Which pyramid a leaf's shape supports: "3d" | "2d" | "1d".
+
+    THE single shape-routing rule for every shape-routed wavelet codec
+    (wz2d, wz3d, wz-rice) — one home, so the codecs can't drift apart.
+    """
+    if want_3d and arr.ndim >= 3 and all(n >= 4 for n in arr.shape[-3:]):
+        return "3d"
+    if arr.ndim >= 2 and arr.shape[-1] >= 4 and arr.shape[-2] >= 4:
+        return "2d"
+    return "1d"
+
+
+def _pad_to_levels(flat: np.ndarray, levels: int) -> np.ndarray:
+    """Zero-pad a flat signal to a multiple of 2**levels (1D encoders)."""
+    pad = (-len(flat)) % (1 << levels)
+    return np.pad(flat, (0, pad)) if pad else flat
+
+
 def _encode_wz(
     arr: np.ndarray, wavelet_levels: int, scheme: str = "cdf53"
 ) -> Tuple[bytes, Dict]:
@@ -81,11 +117,7 @@ def _encode_wz(
     # transform headroom: the lifting bands grow ~1 bit/level, so quantize
     # to int16 >> levels so the packed bands still fit int16 exactly
     q, scale = _quantize_for_wz(arr, float(32767 >> (wavelet_levels + 1)))
-    flat = q.reshape(-1)
-    m = 1 << wavelet_levels
-    pad = (-len(flat)) % m
-    if pad:
-        flat = np.pad(flat, (0, pad))
+    flat = _pad_to_levels(q.reshape(-1), wavelet_levels)
     pyr = K.dwt_fwd(jnp.asarray(flat[None]), levels=wavelet_levels, scheme=scheme)
     packed = np.asarray(K.pack(pyr))[0].astype(np.int16)
     meta = {
@@ -172,6 +204,60 @@ def _encode_wz3d(
     return zlib.compress(packed.tobytes(), level=1), meta
 
 
+def _encode_wzrice(
+    arr: np.ndarray, wavelet_levels: int, scheme: str = "cdf53"
+) -> Tuple[bytes, Dict]:
+    """Rice-container codec: quantize, DWT, WZRC bitstream (no zlib).
+
+    Shape-routed like wz3d (volume -> 3D pyramid, matrix -> 2D, vector ->
+    1D), but the bands stay int32 and the entropy coder is the adaptive
+    per-block Rice coder, so quantization is always to the FULL int16
+    range — no ``32767 >> levels`` headroom shift, meaning restore error
+    does not grow with decomposition depth the way the zlib wz family's
+    does.
+    """
+    import jax.numpy as jnp
+
+    from repro.codec import container
+    from repro.core import lifting
+
+    q, scale = _quantize_for_wz(arr, 32767.0)
+    enc = _wavelet_route(arr, want_3d=True)
+    if enc == "3d":
+        d, h, w = arr.shape[-3:]
+        levels = max(1, min(wavelet_levels, lifting.max_levels_nd((d, h, w))))
+        pyr = K.dwt_fwd_nd(
+            jnp.asarray(q.reshape(-1, d, h, w)), levels=levels, scheme=scheme,
+            ndim=3,
+        )
+        ndim = 3
+    elif enc == "2d":
+        h, w = arr.shape[-2:]
+        levels = max(1, min(wavelet_levels, lifting.max_levels_2d(h, w)))
+        pyr = K.dwt_fwd_2d_multi(
+            jnp.asarray(q.reshape(-1, h, w)), levels=levels, scheme=scheme
+        )
+        ndim = None
+    else:
+        levels = max(1, min(wavelet_levels, lifting.max_levels(max(q.size, 2))))
+        flat = _pad_to_levels(q.reshape(-1), levels)
+        pyr = K.dwt_fwd(jnp.asarray(flat[None]), levels=levels, scheme=scheme)
+        ndim = None
+    data = container.encode_pyramid(pyr, scheme=scheme, ndim=ndim)
+    meta = {"scale": scale, "levels": levels, "enc": enc, "scheme": scheme}
+    return data, meta
+
+
+def _decode_wzrice(data: bytes, shape, dtype, meta: Dict) -> np.ndarray:
+    from repro.codec import container
+
+    dec = container.decode_pyramid(data)
+    flat = np.asarray(container.inverse_transform(dec)).reshape(-1)
+    count = int(np.prod(shape)) if shape else 1
+    vals = flat[:count].astype(np.float32) * meta["scale"]
+    return vals.reshape(shape).astype(dtype)
+
+
 def _encode(
     arr: np.ndarray, codec: str, wavelet_levels: int, scheme: str = "cdf53"
 ) -> Tuple[bytes, Dict]:
@@ -181,20 +267,22 @@ def _encode(
     if codec == "z":
         return zlib.compress(arr.tobytes(), level=1), meta
     if codec == "wz":
-        return _encode_wz(arr, wavelet_levels, scheme)
-    if codec in ("wz2d", "wz3d"):
-        if (
-            codec == "wz3d"
-            and arr.ndim >= 3
-            and all(n >= 4 for n in arr.shape[-3:])
-        ):
-            return _encode_wz3d(arr, wavelet_levels, scheme)
-        if arr.ndim >= 2 and arr.shape[-1] >= 4 and arr.shape[-2] >= 4:
-            return _encode_wz2d(arr, wavelet_levels, scheme)
-        data, meta = _encode_wz(arr, wavelet_levels, scheme)  # vectors: 1D
-        meta["enc"] = "1d"
-        return data, meta
-    raise ValueError(codec)
+        data, meta = _encode_wz(arr, wavelet_levels, scheme)
+    elif codec == "wz-rice":
+        data, meta = _encode_wzrice(arr, wavelet_levels, scheme)
+    elif codec in ("wz2d", "wz3d"):
+        route = _wavelet_route(arr, want_3d=(codec == "wz3d"))
+        if route == "3d":
+            data, meta = _encode_wz3d(arr, wavelet_levels, scheme)
+        elif route == "2d":
+            data, meta = _encode_wz2d(arr, wavelet_levels, scheme)
+        else:
+            data, meta = _encode_wz(arr, wavelet_levels, scheme)  # vectors: 1D
+            meta["enc"] = "1d"
+    else:
+        raise ValueError(codec)
+    meta["enc_version"] = ENC_VERSION
+    return data, meta
 
 
 def _decode_wz(data: bytes, shape, dtype, meta: Dict) -> np.ndarray:
@@ -238,8 +326,21 @@ def _decode(data: bytes, shape, dtype, codec: str, meta: Dict) -> np.ndarray:
         return np.frombuffer(data, dtype=dtype).reshape(shape).copy()
     if codec == "z":
         return np.frombuffer(zlib.decompress(data), dtype=dtype).reshape(shape).copy()
+    if codec in _WAVELET_CODECS:
+        # manifests written before enc_version existed carry version-1
+        # payloads; anything newer than this build knows must fail loudly
+        # instead of mis-decoding a changed band layout
+        version = meta.get("enc_version", 1)
+        if version not in _KNOWN_ENC_VERSIONS:
+            raise ValueError(
+                f"checkpoint leaf uses {codec!r} enc_version {version}; this "
+                f"build supports versions {_KNOWN_ENC_VERSIONS} — restore "
+                "with the build that wrote the checkpoint"
+            )
     if codec == "wz":
         return _decode_wz(data, shape, dtype, meta)
+    if codec == "wz-rice":
+        return _decode_wzrice(data, shape, dtype, meta)
     if codec in ("wz2d", "wz3d"):
         if meta.get("enc") == "3d":
             return _decode_wz3d(data, shape, dtype, meta)
@@ -253,7 +354,7 @@ def _decode(data: bytes, shape, dtype, codec: str, meta: Dict) -> np.ndarray:
 class CheckpointManager:
     directory: str | Path
     keep: int = 3
-    codec: str = "z"  # raw | z | wz | wz2d | wz3d
+    codec: str = "z"  # raw | z | wz | wz2d | wz3d | wz-rice
     wavelet_levels: int = 2
     wavelet_scheme: str = "cdf53"  # lifting scheme for wz/wz2d payloads
     host_id: int = 0

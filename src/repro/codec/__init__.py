@@ -1,0 +1,65 @@
+"""Lossless entropy-coded bitstream codec over the integer wavelet bands.
+
+The back half of the paper's lossless filter bank: the multiplierless
+integer DWT (``repro.kernels``) concentrates energy; this package turns
+the resulting pyramids into compact, self-describing bytes and back,
+bit-exactly.
+
+    rice.py       adaptive Golomb-Rice coder — zigzag mapping, per-block
+                  shift-add optimal ``k`` selection on device, vectorized
+                  prefix-sum/scatter bit-packing with a Pallas pack
+                  kernel under the ``kernels/backend.py`` dispatch policy
+    container.py  one pyramid -> one self-describing blob (magic/version,
+                  kind/scheme/mode/levels/shape/dtype, per-band k tables
+                  and byte offsets, crc32) — round-trips any
+                  WaveletPyramid / Pyramid2D / PyramidND from bytes alone
+    stream.py     framed sequences of containers for chunked / streaming
+                  encode-decode (volumes per depth-slab on the serve path)
+
+Consumers: ``ckpt/checkpoint.py`` (the ``wz-rice`` leaf codec),
+``core/compression.py`` (``encoded_bytes_*`` / ``encoded_ratio_*``
+measured wire sizes), ``train/grad_compress.py``
+(``pod_encoded_bytes``), ``serve/serve_step.py`` (encoded responses).
+See DESIGN.md §11.
+"""
+from repro.codec.container import (  # noqa: F401
+    DecodedPyramid,
+    decode_pyramid,
+    encode_pyramid,
+    inverse_transform,
+    peek,
+    roundtrip_exact,
+)
+from repro.codec.rice import (  # noqa: F401
+    BLOCK_VALUES,
+    decode_band,
+    encode_band,
+    unzigzag,
+    zigzag,
+)
+from repro.codec.stream import (  # noqa: F401
+    StreamEncoder,
+    decode_stream,
+    decode_volume,
+    encode_volume,
+    iter_frames,
+)
+
+__all__ = [
+    "DecodedPyramid",
+    "decode_pyramid",
+    "encode_pyramid",
+    "inverse_transform",
+    "peek",
+    "roundtrip_exact",
+    "BLOCK_VALUES",
+    "decode_band",
+    "encode_band",
+    "unzigzag",
+    "zigzag",
+    "StreamEncoder",
+    "decode_stream",
+    "decode_volume",
+    "encode_volume",
+    "iter_frames",
+]

@@ -1,0 +1,465 @@
+"""Self-describing bitstream container for integer wavelet pyramids.
+
+One blob = one pyramid.  The header carries everything needed to decode
+from bytes alone — magic/version, pyramid kind (1D ``WaveletPyramid``,
+2D ``Pyramid2D``, N-D ``PyramidND``), lifting scheme and rounding mode,
+levels, band dtype, leading (batch) dims and the original trailing
+shape — followed by one Rice blob per band in pack order (approx first,
+then per-level detail bands coarsest->finest).  Band geometry is a pure
+function of (shape, levels), so band sizes are never serialized; per-band
+blob byte lengths ARE, so a reader can seek straight to any band.
+
+Layout (little-endian)::
+
+    magic   4s   b"WZRC"
+    version u8   FORMAT_VERSION
+    kind    u8   1 = WaveletPyramid, 2 = Pyramid2D, 3 = PyramidND
+    flags   u8   bit0: crc32 trailer present
+    mode    u8   0 = paper, 1 = jpeg2000
+    dtype   u8   1 = int8, 2 = int16, 3 = int32
+    levels  u8
+    ndim    u8   trailing transform axes (1 for kind 1, 2 for kind 2)
+    nlead   u8
+    block   u16  rice.BLOCK_VALUES  } coder geometry, so a future build
+    qmax    u8   rice.Q_MAX         } with different constants rejects
+    kmax    u8   rice.K_MAX         } cleanly instead of mis-decoding
+    lead    nlead x u32
+    shape   ndim x u32
+    blob_len  nbands x u32
+    blobs   concatenated band blobs: [k u8 x nblocks][len u16 x nblocks]
+            [byte-aligned Rice bitstream]
+    crc32   u32  zlib.crc32 of everything above (when flags bit0)
+
+Every band blob is independently decodable (per-block k and byte
+lengths travel with it), which is what the streaming layer and the
+serve path lean on.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codec import rice
+from repro.core import lifting
+
+MAGIC = b"WZRC"
+FORMAT_VERSION = 1
+
+KIND_1D = 1
+KIND_2D = 2
+KIND_ND = 3
+
+_MODES = {"paper": 0, "jpeg2000": 1}
+_MODE_NAMES = {v: k for k, v in _MODES.items()}
+_DTYPES = {np.dtype(np.int8): 1, np.dtype(np.int16): 2, np.dtype(np.int32): 3}
+_DTYPE_NAMES = {v: k for k, v in _DTYPES.items()}
+
+_HEAD = struct.Struct("<4sBBBBBBBBHBB")
+
+
+class DecodedPyramid(NamedTuple):
+    """A decoded container: the pyramid plus its self-description."""
+
+    pyramid: Any  # WaveletPyramid | Pyramid2D | PyramidND
+    kind: int
+    scheme: str
+    mode: str
+    levels: int
+    lead: Tuple[int, ...]
+    shape: Tuple[int, ...]  # original trailing (pre-transform) shape
+    dtype: np.dtype
+
+
+# ---------------------------------------------------------------------------
+# Pyramid introspection: kind, band list in pack order, original shape.
+# ---------------------------------------------------------------------------
+
+
+def _pyramid_kind(pyr: Any) -> int:
+    if isinstance(pyr, lifting.WaveletPyramid):
+        return KIND_1D
+    if isinstance(pyr, lifting.Pyramid2D):
+        return KIND_2D
+    if isinstance(pyr, lifting.PyramidND):
+        return KIND_ND
+    raise TypeError(
+        f"expected WaveletPyramid / Pyramid2D / PyramidND, got {type(pyr)!r}"
+    )
+
+
+def _flatten_bands(pyr: Any, kind: int) -> List[np.ndarray]:
+    """Bands in pack order (approx, then levels coarsest->finest)."""
+    if kind == KIND_1D:
+        return [np.asarray(pyr.approx)] + [np.asarray(d) for d in pyr.details]
+    if kind == KIND_2D:
+        out = [np.asarray(pyr.ll)]
+        for lh, hl, hh in pyr.details:
+            out.extend([np.asarray(lh), np.asarray(hl), np.asarray(hh)])
+        return out
+    out = [np.asarray(pyr.approx)]
+    for lvl in pyr.details:
+        out.extend(np.asarray(b) for b in lvl)
+    return out
+
+
+def _infer_geometry(
+    pyr: Any, kind: int, ndim_hint: Optional[int]
+) -> Tuple[int, Tuple[int, ...], Tuple[int, ...]]:
+    """(ndim, lead_dims, original trailing shape) from the band shapes."""
+    if kind == KIND_1D:
+        n = pyr.approx.shape[-1] + sum(d.shape[-1] for d in pyr.details)
+        return 1, tuple(pyr.approx.shape[:-1]), (n,)
+    if kind == KIND_2D:
+        h, w = pyr.ll.shape[-2], pyr.ll.shape[-1]
+        for lh, hl, _hh in pyr.details:  # coarsest first
+            h, w = h + lh.shape[-2], w + hl.shape[-1]
+        return 2, tuple(pyr.ll.shape[:-2]), (h, w)
+    if pyr.details:
+        nd = pyr.ndim
+        if ndim_hint is not None and ndim_hint != nd:
+            raise ValueError(f"ndim={ndim_hint} but pyramid has ndim={nd}")
+    elif ndim_hint is None:
+        raise ValueError("levels=0 PyramidND: pass ndim explicitly")
+    else:
+        nd = ndim_hint
+    dims = list(pyr.approx.shape[-nd:])
+    for lvl in pyr.details:  # coarsest first; single-bit codes carry odds
+        for j in range(nd):
+            band = lvl[(1 << j) - 1]  # code (1 << j) at index code-1
+            axis = nd - 1 - j
+            dims[axis] += band.shape[-nd:][axis]
+    return nd, tuple(pyr.approx.shape[:-nd]), tuple(dims)
+
+
+def _expected_band_shapes(
+    kind: int, shape: Tuple[int, ...], levels: int
+) -> List[Tuple[int, ...]]:
+    """Per-band trailing shapes in pack order — the decode geometry."""
+    if kind == KIND_1D:
+        a_len, d_lens = lifting.band_sizes(shape[0], levels)
+        return [(a_len,)] + [(dl,) for dl in d_lens]
+    if kind == KIND_2D:
+        ll, det = lifting.band_shapes_2d(shape[0], shape[1], levels)
+        out = [ll]
+        for lvl in det:
+            out.extend(lvl)
+        return out
+    approx, det = lifting.band_shapes_nd(tuple(shape), levels)
+    out = [approx]
+    for lvl in det:
+        out.extend(lvl)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Encode.
+# ---------------------------------------------------------------------------
+
+
+def encode_pyramid(
+    pyr: Any,
+    scheme: str = "cdf53",
+    mode: str = "paper",
+    *,
+    ndim: Optional[int] = None,
+    backend: Optional[str] = None,
+    checksum: bool = True,
+) -> bytes:
+    """Serialize an integer wavelet pyramid to a self-describing blob.
+
+    Every band is Rice-coded independently (per-block adaptive ``k``);
+    the result round-trips bit-exactly through :func:`decode_pyramid`
+    from the bytes alone.  ``scheme``/``mode`` are recorded so a reader
+    can run the inverse transform without out-of-band metadata; they do
+    not affect the coded bytes of the bands themselves.
+    """
+    kind = _pyramid_kind(pyr)
+    if mode not in _MODES:
+        raise ValueError(f"mode must be one of {sorted(_MODES)}, got {mode!r}")
+    nd, lead, shape = _infer_geometry(pyr, kind, ndim)
+    levels = len(pyr.details)
+    bands = _flatten_bands(pyr, kind)
+
+    dt = np.dtype(bands[0].dtype)
+    if dt not in _DTYPES:
+        raise TypeError(
+            f"band dtype must be one of {sorted(str(d) for d in _DTYPES)}, "
+            f"got {dt}"
+        )
+    expected = _expected_band_shapes(kind, shape, levels)
+    if len(bands) != len(expected):
+        raise ValueError(
+            f"malformed pyramid: {len(bands)} bands, geometry expects "
+            f"{len(expected)}"
+        )
+    for band, want in zip(bands, expected):
+        if np.dtype(band.dtype) != dt:
+            raise TypeError(
+                f"mixed band dtypes ({band.dtype} vs {dt}); cast first"
+            )
+        if tuple(band.shape) != lead + want:
+            raise ValueError(
+                f"malformed pyramid: band shape {tuple(band.shape)}, "
+                f"geometry expects {lead + want}"
+            )
+
+    scheme_b = scheme.encode("utf-8")
+    if len(scheme_b) > 255:
+        raise ValueError("scheme name too long")
+    flags = 1 if checksum else 0
+    parts = [
+        _HEAD.pack(
+            MAGIC,
+            FORMAT_VERSION,
+            kind,
+            flags,
+            _MODES[mode],
+            _DTYPES[dt],
+            levels,
+            nd,
+            len(lead),
+            rice.BLOCK_VALUES,
+            rice.Q_MAX,
+            rice.K_MAX,
+        ),
+        bytes([len(scheme_b)]),
+        scheme_b,
+        struct.pack(f"<{len(lead)}I", *lead) if lead else b"",
+        struct.pack(f"<{nd}I", *shape),
+    ]
+    blobs = []
+    for band in bands:
+        payload, ks, lens = rice.encode_band(band, backend=backend)
+        blobs.append(ks.tobytes() + lens.astype("<u2").tobytes() + payload)
+    parts.append(struct.pack(f"<{len(blobs)}I", *(len(b) for b in blobs)))
+    parts.extend(blobs)
+    out = b"".join(parts)
+    if checksum:
+        out += struct.pack("<I", zlib.crc32(out) & 0xFFFFFFFF)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode.
+# ---------------------------------------------------------------------------
+
+
+class _Header(NamedTuple):
+    kind: int
+    flags: int
+    mode: str
+    dtype: np.dtype
+    levels: int
+    ndim: int
+    scheme: str
+    lead: Tuple[int, ...]
+    shape: Tuple[int, ...]
+    blob_lens: Tuple[int, ...]
+    body_off: int  # offset of the first band blob
+
+
+def _parse_header(data: bytes) -> _Header:
+    if len(data) < _HEAD.size or data[:4] != MAGIC:
+        raise ValueError("not a WZRC container (bad magic)")
+    try:
+        return _parse_header_body(data)
+    except (struct.error, IndexError) as e:
+        # the variable-length tail ran past the buffer: corrupt counts or
+        # a truncated blob — surface the module's documented error type
+        raise ValueError(f"truncated or corrupt WZRC header ({e})") from e
+
+
+def _parse_header_body(data: bytes) -> _Header:
+    (
+        _,
+        version,
+        kind,
+        flags,
+        mode_c,
+        dtype_c,
+        levels,
+        nd,
+        nlead,
+        block,
+        qmax,
+        kmax,
+    ) = _HEAD.unpack_from(data, 0)
+    if version != FORMAT_VERSION:
+        raise ValueError(
+            f"WZRC container version {version} not supported by this build "
+            f"(supports {FORMAT_VERSION})"
+        )
+    if (block, qmax, kmax) != (rice.BLOCK_VALUES, rice.Q_MAX, rice.K_MAX):
+        raise ValueError(
+            f"container coded with rice geometry (block={block}, "
+            f"qmax={qmax}, kmax={kmax}); this build uses "
+            f"({rice.BLOCK_VALUES}, {rice.Q_MAX}, {rice.K_MAX})"
+        )
+    if kind not in (KIND_1D, KIND_2D, KIND_ND):
+        raise ValueError(f"unknown pyramid kind {kind}")
+    if mode_c not in _MODE_NAMES or dtype_c not in _DTYPE_NAMES:
+        raise ValueError("corrupt container header (mode/dtype code)")
+    off = _HEAD.size
+    slen = data[off]
+    off += 1
+    scheme = data[off : off + slen].decode("utf-8")
+    off += slen
+    lead = struct.unpack_from(f"<{nlead}I", data, off)
+    off += 4 * nlead
+    shape = struct.unpack_from(f"<{nd}I", data, off)
+    off += 4 * nd
+    if kind == KIND_1D:
+        nbands = 1 + levels
+    elif kind == KIND_2D:
+        nbands = 1 + 3 * levels
+    else:
+        nbands = 1 + ((1 << nd) - 1) * levels
+    blob_lens = struct.unpack_from(f"<{nbands}I", data, off)
+    off += 4 * nbands
+    return _Header(
+        kind=kind,
+        flags=flags,
+        mode=_MODE_NAMES[mode_c],
+        dtype=_DTYPE_NAMES[dtype_c],
+        levels=levels,
+        ndim=nd,
+        scheme=scheme,
+        lead=tuple(lead),
+        shape=tuple(shape),
+        blob_lens=tuple(blob_lens),
+        body_off=off,
+    )
+
+
+def peek(data: bytes) -> dict:
+    """Header metadata without decoding any band (cheap introspection)."""
+    h = _parse_header(data)
+    return {
+        "kind": h.kind,
+        "scheme": h.scheme,
+        "mode": h.mode,
+        "levels": h.levels,
+        "ndim": h.ndim,
+        "lead": h.lead,
+        "shape": h.shape,
+        "dtype": str(h.dtype),
+        "band_bytes": h.blob_lens,
+    }
+
+
+def _decode_band_blob(
+    blob: bytes, count: int
+) -> np.ndarray:
+    nb = rice.n_blocks(count)
+    need = nb + 2 * nb
+    if len(blob) < need:
+        raise ValueError(
+            f"band blob truncated: {len(blob)} bytes, tables need {need}"
+        )
+    ks = np.frombuffer(blob, np.uint8, nb)
+    lens = np.frombuffer(blob, "<u2", nb, offset=nb)
+    return rice.decode_band(blob[nb + 2 * nb :], ks, lens, count)
+
+
+def decode_pyramid(data: bytes) -> DecodedPyramid:
+    """Reconstruct the pyramid (and its self-description) from bytes."""
+    data = bytes(data)
+    h = _parse_header(data)
+    end = len(data)
+    if h.flags & 1:
+        end -= 4
+        (want,) = struct.unpack_from("<I", data, end)
+        got = zlib.crc32(data[:end]) & 0xFFFFFFFF
+        if got != want:
+            raise ValueError(
+                f"WZRC checksum mismatch (crc32 {got:#010x} != {want:#010x})"
+            )
+    if h.body_off + sum(h.blob_lens) != end:
+        raise ValueError(
+            f"container body is {end - h.body_off} bytes, band table sums "
+            f"to {sum(h.blob_lens)} (truncated or corrupt)"
+        )
+
+    band_shapes = _expected_band_shapes(h.kind, h.shape, h.levels)
+    lead_n = 1
+    for s in h.lead:
+        lead_n *= s
+    bands = []
+    off = h.body_off
+    for blen, shp in zip(h.blob_lens, band_shapes):
+        count = lead_n
+        for s in shp:
+            count *= s
+        flat = _decode_band_blob(data[off : off + blen], count)
+        off += blen
+        bands.append(
+            jnp.asarray(flat.astype(h.dtype).reshape(h.lead + shp))
+        )
+
+    if h.kind == KIND_1D:
+        pyr: Any = lifting.WaveletPyramid(
+            approx=bands[0], details=tuple(bands[1:])
+        )
+    elif h.kind == KIND_2D:
+        details = tuple(
+            (bands[1 + 3 * i], bands[2 + 3 * i], bands[3 + 3 * i])
+            for i in range(h.levels)
+        )
+        pyr = lifting.Pyramid2D(ll=bands[0], details=details)
+    else:
+        per = (1 << h.ndim) - 1
+        details = tuple(
+            tuple(bands[1 + per * i : 1 + per * (i + 1)])
+            for i in range(h.levels)
+        )
+        pyr = lifting.PyramidND(approx=bands[0], details=details)
+    return DecodedPyramid(
+        pyramid=pyr,
+        kind=h.kind,
+        scheme=h.scheme,
+        mode=h.mode,
+        levels=h.levels,
+        lead=h.lead,
+        shape=h.shape,
+        dtype=h.dtype,
+    )
+
+
+def inverse_transform(dec: DecodedPyramid, backend: Optional[str] = None):
+    """Run the recorded inverse transform on a decoded pyramid.
+
+    Convenience for sample-level consumers (ckpt, stream, serve): the
+    container is self-describing, so the right engine (1D / 2D / N-D)
+    and the recorded scheme/mode need no out-of-band metadata.
+    """
+    from repro import kernels as K
+
+    if dec.kind == KIND_1D:
+        return K.dwt_inv(
+            dec.pyramid, mode=dec.mode, backend=backend, scheme=dec.scheme
+        )
+    if dec.kind == KIND_2D:
+        return K.dwt_inv_2d_multi(
+            dec.pyramid, mode=dec.mode, backend=backend, scheme=dec.scheme
+        )
+    if dec.levels == 0:
+        return dec.pyramid.approx  # identity pyramid carries no band order
+    return K.dwt_inv_nd(
+        dec.pyramid, mode=dec.mode, backend=backend, scheme=dec.scheme
+    )
+
+
+def roundtrip_exact(pyr: Any, **kw) -> bool:
+    """True when encode->decode reproduces every band bit-exactly."""
+    dec = decode_pyramid(encode_pyramid(pyr, **kw))
+    got = jax.tree_util.tree_leaves(dec.pyramid)
+    want = jax.tree_util.tree_leaves(pyr)
+    return len(got) == len(want) and all(
+        a.shape == np.asarray(b).shape and bool(np.array_equal(a, b))
+        for a, b in zip(map(np.asarray, got), map(np.asarray, want))
+    )

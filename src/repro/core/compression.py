@@ -134,7 +134,16 @@ def lossy_roundtrip(
 
 
 def compression_ratio(shape, levels: int) -> float:
-    """Bytes(original fp32) / bytes(int32 low band)."""
+    """ANALYTIC bytes(original fp32) / bytes(low band), assuming the low
+    band ships as RAW int32 — 4 bytes per coefficient, no entropy coding.
+
+    This is a pure function of the geometry: it describes the fixed-width
+    lowband wire format, not what an entropy coder would achieve on real
+    data.  For measured bytes through the Rice codec use
+    :func:`encoded_ratio` (and the ``encoded_bytes_*`` family) — the two
+    are deliberately named apart so a raw-payload estimate can't be
+    quoted as a coded one.
+    """
     n = 1
     for s in shape:
         n *= s
@@ -564,7 +573,10 @@ def band_quantized_roundtrip_nd(
 
 
 def band_bytes_nd(shape, levels: int) -> int:
-    """Wire bytes of the N-D band-quantized payload for a trailing shape."""
+    """ANALYTIC wire bytes of the N-D band-quantized payload for a
+    trailing shape, assuming RAW fixed-width bands (int16 approx, int8
+    details — no entropy coding).  Geometry only; for measured
+    entropy-coded bytes on real data use :func:`encoded_bytes_nd`."""
     a_shape, det_shapes = lifting.band_shapes_nd(tuple(shape), levels)
     total = 2
     for s in a_shape:
@@ -579,7 +591,10 @@ def band_bytes_nd(shape, levels: int) -> int:
 
 
 def band_bytes_2d(h: int, w: int, levels: int) -> int:
-    """Wire bytes of the 2D band-quantized payload for an (h, w) slice."""
+    """ANALYTIC wire bytes of the 2D band-quantized payload for an
+    (h, w) slice, assuming RAW fixed-width bands (int16 approx, int8
+    details — no entropy coding).  See :func:`encoded_bytes_2d` for
+    measured entropy-coded bytes."""
     (h_ll, w_ll), det_shapes = lifting.band_shapes_2d(h, w, levels)
     total = h_ll * w_ll * 2
     for lvl in det_shapes:
@@ -588,9 +603,133 @@ def band_bytes_2d(h: int, w: int, levels: int) -> int:
 
 
 def band_bytes(n: int, levels: int) -> int:
-    """Wire bytes of the band-quantized payload for n fp32 values."""
+    """ANALYTIC wire bytes of the band-quantized payload for n fp32
+    values, assuming RAW fixed-width bands (int16 approx, int8 details —
+    no entropy coding).  See :func:`encoded_bytes` for measured
+    entropy-coded bytes."""
     line = max(min(n, BLOCK), 1 << levels)
     n_pad = (n + line - 1) // line * line
     a_len, d_lens = lifting.band_sizes(line, levels)
     rows = n_pad // line
     return rows * (a_len * 2 + sum(d_lens) * 1) + 8  # + scale/shift scalars
+
+
+# ---------------------------------------------------------------------------
+# Measured entropy-coded sizes (repro.codec) — the real back half.
+#
+# The ``band_bytes_*`` / ``compression_ratio`` functions above are
+# ANALYTIC: pure geometry, raw fixed-width payloads.  The functions below
+# run the actual chain — quantize, integer DWT, adaptive Rice container
+# (``repro.codec``) — on the tensor and report the bytes that would hit
+# the wire, so the two families can never be conflated.
+# ---------------------------------------------------------------------------
+
+
+def encoded_bytes(
+    g: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    scheme: str = "cdf53",
+    backend: Optional[str] = None,
+) -> int:
+    """Measured codec bytes of the 1D line-blocked pyramid of ``g``."""
+    from repro.codec import container
+
+    lines, _ = _flatten_pad(g, levels)
+    q = quantize(lines, tensor_scale(g))
+    pyr = K.dwt_fwd(q, levels=levels, mode=mode, backend=backend, scheme=scheme)
+    return len(container.encode_pyramid(pyr, scheme=scheme, mode=mode))
+
+
+def encoded_bytes_last_axis(
+    g: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    scheme: str = "cdf53",
+    backend: Optional[str] = None,
+) -> int:
+    """Measured codec bytes of the LAST-AXIS pyramid of ``g``.
+
+    The sharding-aligned transform the pod gradient sync's 1D fallback
+    actually runs (:func:`forward_bands_nd` — no line re-blocking), so
+    ``pod_encoded_bytes`` reports bytes for the exact pyramid the wire
+    would carry.  :func:`encoded_bytes` measures the line-blocked layout
+    of the flatten-based codec instead."""
+    from repro.codec import container
+
+    pyr = forward_bands_nd(
+        g, tensor_scale(g), levels, mode, backend=backend, scheme=scheme
+    )
+    return len(container.encode_pyramid(pyr, scheme=scheme, mode=mode))
+
+
+def encoded_bytes_2d(
+    g: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    scheme: str = "cdf53",
+    backend: Optional[str] = None,
+) -> int:
+    """Measured codec bytes of the 2D Mallat pyramid of ``g``."""
+    from repro.codec import container
+
+    pyr = forward_pyramid_2d(
+        g, tensor_scale(g), levels, mode, backend=backend, scheme=scheme
+    )
+    return len(container.encode_pyramid(pyr, scheme=scheme, mode=mode))
+
+
+def encoded_bytes_nd(
+    g: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    scheme: str = "cdf53",
+    backend: Optional[str] = None,
+    ndim: int = 3,
+) -> int:
+    """Measured codec bytes of the N-D pyramid of ``g``."""
+    from repro.codec import container
+
+    pyr = forward_pyramid_nd(
+        g, tensor_scale(g), levels, mode, backend=backend, scheme=scheme,
+        ndim=ndim,
+    )
+    return len(
+        container.encode_pyramid(pyr, scheme=scheme, mode=mode, ndim=ndim)
+    )
+
+
+def _raw_fp32_bytes(g: jax.Array) -> int:
+    n = 1
+    for s in g.shape:
+        n *= s
+    return max(n, 1) * 4
+
+
+def encoded_ratio(
+    g: jax.Array, levels: int, mode: str = "paper", scheme: str = "cdf53"
+) -> float:
+    """MEASURED bytes(original fp32) / bytes(Rice-coded 1D pyramid).
+
+    The codec-backed counterpart of :func:`compression_ratio`."""
+    return _raw_fp32_bytes(g) / encoded_bytes(g, levels, mode, scheme)
+
+
+def encoded_ratio_2d(
+    g: jax.Array, levels: int, mode: str = "paper", scheme: str = "cdf53"
+) -> float:
+    """MEASURED fp32-vs-coded ratio through the 2D pyramid codec."""
+    return _raw_fp32_bytes(g) / encoded_bytes_2d(g, levels, mode, scheme)
+
+
+def encoded_ratio_nd(
+    g: jax.Array,
+    levels: int,
+    mode: str = "paper",
+    scheme: str = "cdf53",
+    ndim: int = 3,
+) -> float:
+    """MEASURED fp32-vs-coded ratio through the N-D pyramid codec."""
+    return _raw_fp32_bytes(g) / encoded_bytes_nd(
+        g, levels, mode, scheme, ndim=ndim
+    )

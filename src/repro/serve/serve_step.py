@@ -139,6 +139,7 @@ class TransformRequest:
     uid: int
     image: np.ndarray  # (H, W) — or (D, H, W) on a volume engine — bucket
     pyramid: Optional[Any] = None  # Pyramid2D/PyramidND result (when served)
+    encoded: Optional[bytes] = None  # WZRC container (encoded-response route)
     done: bool = False
 
 
@@ -152,6 +153,14 @@ class WaveletServeEngine:
     kernels/fused3d.py) — video frame stacks and CT-style volumes run
     whole-volume or depth-slab Pallas kernels, batch mapped to grid
     cells.  The sharded mesh route stays 2D-only.
+
+    ``encode_response=True`` turns the engine into an end-to-end
+    lossless codec service: each completed request additionally carries
+    its pyramid as a self-describing WZRC bitstream (``repro.codec``),
+    so the response that leaves the host is the entropy-coded bytes —
+    clients reconstruct the pyramid (or the original samples, the
+    integer transform being lossless) with ``codec.decode_pyramid`` /
+    ``codec.inverse_transform`` and no out-of-band metadata.
     """
 
     height: int
@@ -162,6 +171,7 @@ class WaveletServeEngine:
     mode: str = "paper"
     scheme: str = "cdf53"  # lifting scheme from the registry
     backend: Optional[str] = None
+    encode_response: bool = False  # attach WZRC bytes to served requests
     mesh: Optional[Any] = None  # jax.sharding.Mesh -> sharded transform
     mesh_axis: str = "data"
 
@@ -242,6 +252,16 @@ class WaveletServeEngine:
         pyr = self._transform(jnp.asarray(batch))
         for i, r in enumerate(active):
             r.pyramid = jax.tree_util.tree_map(lambda b, i=i: b[i], pyr)
+            if self.encode_response:
+                from repro.codec import container
+
+                r.encoded = container.encode_pyramid(
+                    r.pyramid,
+                    scheme=self.scheme,
+                    mode=self.mode,
+                    ndim=3 if self.depth is not None else None,
+                    backend=self.backend,
+                )
             r.done = True
         return active
 

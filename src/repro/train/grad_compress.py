@@ -192,7 +192,8 @@ def pod_sync_tree(
     n_pods = cfg.n_pods
 
     def sync_leaf(g, e):
-        if g.size < cfg.min_size or cfg.codec == "none":
+        route = leaf_route(g, cfg)  # the shared routing rule (below)
+        if route == "raw":
             return (
                 jax.lax.pmean(g.astype(jnp.float32), axis_name).astype(g.dtype),
                 jnp.zeros(g.shape, jnp.float32),
@@ -200,7 +201,7 @@ def pod_sync_tree(
         g32 = g.astype(jnp.float32) + e
         # shared quantization scale + band shifts (scalar collectives)
         scale = jax.lax.pmax(C.tensor_scale(g32), axis_name)
-        if cfg.codec == "lowband":
+        if route == "lowband":
             approx, details, n = C.forward_bands(
                 g32, scale, cfg.levels, cfg.mode, backend=cfg.backend,
                 scheme=cfg.scheme,
@@ -226,13 +227,13 @@ def pod_sync_tree(
         # transforming along the tensor's own trailing axes keeps every
         # band sharded exactly like the gradient, so the ring exchange
         # ships only the local shard (a flatten-based codec all-gathers:
-        # §Perf).  spatial_2d routes matrix-shaped leaves through the
-        # fused 2D pyramid (kernels/fused2d.py tiled engine underneath);
-        # spatial_3d routes volume-shaped leaves through the fused 3D
-        # pyramid (kernels/fused3d.py whole-volume/slab engine).
-        if cfg.spatial_3d and _can_nd(g32, cfg.levels):
+        # §Perf).  "3d" routes volume-shaped leaves through the fused 3D
+        # pyramid (kernels/fused3d.py whole-volume/slab engine), "2d"
+        # matrix-shaped ones through the fused 2D pyramid
+        # (kernels/fused2d.py tiled engine underneath).
+        if route == "3d":
             return _sync_leaf_nd(g, g32, scale, cfg, axis_name, n_pods)
-        if cfg.spatial_2d and _can_2d(g32, cfg.levels):
+        if route == "2d":
             return _sync_leaf_2d(g, g32, scale, cfg, axis_name, n_pods)
         pyr = C.forward_bands_nd(
             g32, scale, cfg.levels, cfg.mode, backend=cfg.backend,
@@ -274,24 +275,100 @@ def pod_sync_tree(
     return synced, new_err
 
 
+def leaf_route(p, cfg: WaveletSyncConfig) -> str:
+    """Which codec path one leaf takes through the pod sync.
+
+    "raw" | "lowband" | "3d" | "2d" | "1d" — THE single routing rule,
+    shared by :func:`pod_sync_tree`'s eligibility tests and both byte
+    accountings (:func:`pod_collective_bytes` analytic,
+    :func:`pod_encoded_bytes` measured), so the accountings can never
+    report a route the sync doesn't take.
+    """
+    if p.size < cfg.min_size or cfg.codec == "none":
+        return "raw"
+    if cfg.codec == "lowband":
+        return "lowband"
+    if cfg.spatial_3d and _can_nd(p, cfg.levels):
+        return "3d"
+    if cfg.spatial_2d and _can_2d(p, cfg.levels):
+        return "2d"
+    return "1d"
+
+
+def _lowband_bytes(n: int, levels: int) -> int:
+    m = 1 << levels
+    n_pad = (n + m - 1) // m * m
+    return (n_pad >> levels) * 4 + 4
+
+
 def pod_collective_bytes(params: PyTree, cfg: WaveletSyncConfig) -> Tuple[int, int]:
-    """(uncompressed fp32, compressed) wire bytes per inter-pod sync."""
+    """(uncompressed fp32, compressed) wire bytes per inter-pod sync.
+
+    ANALYTIC: assumes the raw fixed-width band payload the ring exchange
+    actually ships today (int16 approx + int8 details, no entropy
+    coding) — a pure function of the leaf geometry.  For MEASURED bytes
+    under the Rice entropy coder on the real gradient values, use
+    :func:`pod_encoded_bytes`."""
     raw = 0
     comp = 0
     for p in jax.tree_util.tree_leaves(params):
         raw += p.size * 4
-        if p.size < cfg.min_size or cfg.codec == "none":
+        route = leaf_route(p, cfg)
+        if route == "raw":
             comp += p.size * 4
-        elif cfg.codec == "lowband":
-            m = 1 << cfg.levels
-            n_pad = (p.size + m - 1) // m * m
-            comp += (n_pad >> cfg.levels) * 4 + 4
-        elif cfg.spatial_3d and _can_nd(p, cfg.levels):
+        elif route == "lowband":
+            comp += _lowband_bytes(p.size, cfg.levels)
+        elif route == "3d":
             lead = p.size // (p.shape[-3] * p.shape[-2] * p.shape[-1])
             comp += lead * C.band_bytes_nd(p.shape[-3:], cfg.levels)
-        elif cfg.spatial_2d and _can_2d(p, cfg.levels):
+        elif route == "2d":
             lead = p.size // (p.shape[-2] * p.shape[-1])
             comp += lead * C.band_bytes_2d(p.shape[-2], p.shape[-1], cfg.levels)
         else:
             comp += C.band_bytes(p.size, cfg.levels)
     return raw, comp
+
+
+def pod_encoded_bytes(
+    grads: PyTree, cfg: WaveletSyncConfig
+) -> Tuple[int, int]:
+    """(uncompressed fp32, entropy-coded) wire bytes, MEASURED per leaf.
+
+    Runs every eligible leaf through the real codec chain — quantize,
+    integer DWT on the same spatial route the sync itself would take
+    (3D / 2D / last-axis 1D), adaptive Rice container (``repro.codec``)
+    — and counts the bytes produced, so reports reflect the actual
+    gradient statistics instead of the fixed-width band geometry that
+    :func:`pod_collective_bytes` describes.  Leaves below ``min_size``
+    (or with the codec off) count at raw fp32, exactly as they sync;
+    the ``lowband`` ablation codec keeps its analytic estimate (it
+    ships a raw int32 band).
+    """
+    raw = 0
+    enc = 0
+    for p in jax.tree_util.tree_leaves(grads):
+        g = jnp.asarray(p)
+        raw += g.size * 4
+        route = leaf_route(g, cfg)
+        if route == "raw":
+            enc += g.size * 4
+        elif route == "lowband":
+            enc += _lowband_bytes(g.size, cfg.levels)
+        elif route == "3d":
+            enc += C.encoded_bytes_nd(
+                g, cfg.levels, cfg.mode, scheme=cfg.scheme,
+                backend=cfg.backend,
+            )
+        elif route == "2d":
+            enc += C.encoded_bytes_2d(
+                g, cfg.levels, cfg.mode, scheme=cfg.scheme,
+                backend=cfg.backend,
+            )
+        else:
+            # same last-axis pyramid the sync's 1D fallback ships (NOT
+            # the line-blocked flatten codec's layout)
+            enc += C.encoded_bytes_last_axis(
+                g, cfg.levels, cfg.mode, scheme=cfg.scheme,
+                backend=cfg.backend,
+            )
+    return raw, enc

@@ -27,11 +27,13 @@ def test_checked_in_payload_is_schema_complete():
 
 def test_payload_covers_every_registered_scheme():
     """The emission loops available_schemes(); the checked-in artifact
-    must carry a 1D/2D row AND a 3d row for each registered scheme."""
+    must carry a 1D/2D row, a 3d row AND a codec-lossless row for each
+    registered scheme."""
     bench = _bench()
     for name in available_schemes():
         assert name in bench["schemes"], name
         assert name in bench["3d"]["schemes"], name
+        assert name in bench["codec"]["lossless"], name
         assert "bit_exact" in bench["schemes"][name]
         assert "bit_exact" in bench["3d"]["schemes"][name]
 
@@ -52,3 +54,19 @@ def test_3d_section_shape_and_types():
         "xla",
     )
     assert vol["fused_us"] > 0 and vol["per_axis_us"] > 0
+
+
+def test_codec_section_shape_and_types():
+    """The checked-in codec section must carry lossless flags, positive
+    throughputs, and byte counts where wz-rice actually beats zlib — the
+    acceptance numbers the smoke gate re-derives live."""
+    from repro.codec import rice
+
+    codec = _bench()["codec"]
+    assert codec["block"] == rice.BLOCK_VALUES
+    assert all(codec["lossless"][n] is True for n in available_schemes())
+    assert codec["encode_mbps"] > 0 and codec["decode_mbps"] > 0
+    for section in ("smooth", "noisy"):
+        row = codec[section]
+        assert row["wz_rice_bytes"] <= row["zlib_bytes"], section
+        assert row["ratio_vs_zlib"] >= 1.0, section

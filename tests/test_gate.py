@@ -64,6 +64,20 @@ def _good_bench() -> dict:
                         for n in gate.REQUIRED_SCHEMES},
         },
         "3d_large": {"shape": [64, 512, 512], "plan": "xla"},
+        "codec": {
+            "block": 256,
+            "lossless": {n: True for n in gate.REQUIRED_SCHEMES},
+            "encode_mbps": 10.0,
+            "decode_mbps": 10.0,
+            "smooth": {
+                "raw_bytes": 196608, "wz_rice_bytes": 20000,
+                "zlib_bytes": 60000, "ratio_vs_zlib": 3.0,
+            },
+            "noisy": {
+                "raw_bytes": 196608, "wz_rice_bytes": 90000,
+                "zlib_bytes": 180000, "ratio_vs_zlib": 2.0,
+            },
+        },
     }
 
 
@@ -172,6 +186,40 @@ def test_interpret_speedup_floor():
     bench["2d"]["speedup_fused_vs_interpret"] = 0.9
     fails = gate.check_kernels(bench)
     assert any("2d: fused compiled path no faster" in f for f in fails)
+
+
+def test_codec_lossless_break_fails():
+    bench = _good_bench()
+    bench["codec"]["lossless"]["97m"] = False
+    fails = gate.check_codec(bench)
+    assert fails == ["codec scheme 97m: container roundtrip diverged"]
+
+
+def test_codec_ratio_regression_fails():
+    """wz-rice losing to plain zlib on the smooth checkpoint-like tensor
+    is the acceptance regression the codec gate exists to catch."""
+    bench = _good_bench()
+    bench["codec"]["smooth"]["wz_rice_bytes"] = 70000
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("codec smooth" in f and "lost to plain zlib" in f for f in fails)
+
+
+def test_codec_missing_scheme_row_fails_schema():
+    bench = _good_bench()
+    del bench["codec"]["lossless"]["cdf22"]
+    fails = gate.check_schema(bench)
+    assert any("codec.lossless" in f and "cdf22" in f for f in fails)
+
+
+def test_codec_missing_ratio_key_fails_schema():
+    bench = _good_bench()
+    del bench["codec"]["noisy"]["zlib_bytes"]
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("codec.noisy missing key 'zlib_bytes'" in f for f in fails)
+
+
+def test_summary_mentions_codec():
+    assert "codec lossless" in gate.summary(_good_bench())
 
 
 def test_main_exit_codes(tmp_path):
