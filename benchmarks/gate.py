@@ -27,6 +27,11 @@ Gates (fail = non-zero exit, every failure listed):
     round-trip bit-exactly through the WZRC Rice container, and the
     ``wz-rice`` checkpoint codec beats plain zlib bytes on both the
     smooth checkpoint-like tensor and the fp32-noise one.
+  * Resilience — the XOR parity group costs a real fraction of the
+    container (one band, not free, not a doubling), a single damaged
+    band heals bit-exactly, and every fault class in the injection
+    taxonomy lands on its expected outcome (recover / degrade /
+    typed-error / previous-intact — never silent).
 
 This module is dependency-free (stdlib only) on purpose: the gates must
 stay runnable — and unit-testable — without importing jax.
@@ -69,6 +74,27 @@ REQUIRED_SECTIONS: Dict[str, tuple] = {
         "smooth",
         "noisy",
     ),
+    "resilience": (
+        "parity_overhead_bytes",
+        "parity_overhead_ratio",
+        "single_band_recovery",
+        "recovery",
+    ),
+}
+
+# fault taxonomy (repro/resilience/inject.py FAULT_CLASSES) and the
+# outcome the degradation ladder must deliver for each: recover
+# bit-exactly, degrade to a slower-but-correct path, fail with a typed
+# error, or keep the previous checkpoint intact.  "silent" is never
+# acceptable — that is the silent-corruption failure mode the whole
+# resilience layer exists to rule out.
+EXPECTED_RECOVERY = {
+    "bit-flip": ("recovered",),
+    "truncation": ("typed-error",),
+    "save-crash": ("previous-intact",),
+    "pallas-failure": ("degraded", "recovered"),
+    "stuck-neighbor": ("typed-error",),
+    "deadline-miss": ("typed-error",),
 }
 
 # Table 2: the paper's (5,3) op counts must hold exactly
@@ -263,6 +289,43 @@ def check_codec(bench: dict) -> List[str]:
     return fails
 
 
+def check_resilience(bench: dict) -> List[str]:
+    """Gates over the fault-injection/recovery section.
+
+    Pins the chaos invariant at the bench layer: the parity group costs
+    exactly one band (a real fraction of the container, never free and
+    never a doubling), a single damaged band heals bit-exactly, and
+    every fault class in the taxonomy lands on its expected outcome."""
+    fails = []
+    res = bench["resilience"]
+    ratio = res["parity_overhead_ratio"]
+    if not (isinstance(ratio, (int, float)) and 0 < ratio < 1):
+        fails.append(
+            f"resilience: parity_overhead_ratio {ratio!r} outside (0, 1) — "
+            "the XOR group must cost one band, not nothing or everything"
+        )
+    if not res["single_band_recovery"]:
+        fails.append(
+            "resilience: single damaged band did NOT heal from parity"
+        )
+    recovery = res["recovery"]
+    for cls, allowed in EXPECTED_RECOVERY.items():
+        if cls not in recovery:
+            fails.append(f"resilience: fault class {cls!r} missing")
+        elif recovery[cls] not in allowed:
+            fails.append(
+                f"resilience: {cls} outcome {recovery[cls]!r}, "
+                f"expected one of {allowed}"
+            )
+    for cls in recovery:
+        if cls not in EXPECTED_RECOVERY:
+            fails.append(
+                f"resilience: unknown fault class {cls!r} emitted "
+                "(taxonomy and gate must move together)"
+            )
+    return fails
+
+
 def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
     """Every gate failure, most structural first.  ANY schema failure
     stops before the behavioural gates: those index the payload freely
@@ -276,6 +339,7 @@ def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
         + check_kernels(bench)
         + check_3d(bench)
         + check_codec(bench)
+        + check_resilience(bench)
     )
 
 
@@ -295,7 +359,9 @@ def summary(bench: dict) -> str:
         f"schemes bit-exact: {sorted(bench['schemes'])}; "
         f"codec lossless {sorted(bench['codec']['lossless'])} "
         f"rice-vs-zlib {bench['codec']['smooth']['ratio_vs_zlib']}x smooth "
-        f"/ {bench['codec']['noisy']['ratio_vs_zlib']}x noisy "
+        f"/ {bench['codec']['noisy']['ratio_vs_zlib']}x noisy; "
+        f"resilience parity={bench['resilience']['parity_overhead_ratio']} "
+        f"band-heal={bench['resilience']['single_band_recovery']} "
         f"(backend={bench['default_backend']}, platform={bench['platform']})"
     )
 

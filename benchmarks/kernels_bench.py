@@ -183,6 +183,90 @@ def _codec_section(rng) -> dict:
     }
 
 
+def _trees_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def _resilience_section(rng) -> dict:
+    """Resilience section: parity cost + per-fault-class recovery outcomes.
+
+    Outcomes in ``recovery`` are measured, not asserted: each fault class
+    the bench can exercise cheaply is actually injected here, and the
+    string records what happened.  gate.py pins the expected outcome per
+    class, so a regression in any degradation path fails the bench gate
+    in addition to the chaos test lane.  The two classes that need
+    process-level scaffolding (save-crash, stuck-neighbor) carry the
+    outcome the chaos suite enforces (tests/test_resilience.py).
+    """
+    import warnings
+
+    from repro.codec.errors import CodecError
+    from repro.resilience import inject
+
+    q = jnp.asarray(rng.integers(-4096, 4096, SHAPE_CODEC), jnp.int32)
+    pyr = K.dwt_fwd_2d_multi(q, levels=LEVELS_CODEC)
+    plain = codec_container.encode_pyramid(pyr)
+    protected = codec_container.encode_pyramid(pyr, parity=True)
+    info = codec_container.peek(protected)
+    overhead = len(protected) - len(plain)
+
+    # bit-flip: damage one band byte; the XOR parity group must heal it
+    # back bit-exactly and record the reconstruction in band_status
+    body_off = len(protected) - sum(info["band_bytes"]) - info["parity_bytes"]
+    bad = inject.flip_byte(protected, body_off + info["band_bytes"][0] // 2)
+    try:
+        dec = codec_container.decode_pyramid(bad)
+        healed = "reconstructed" in dec.band_status and _trees_equal(
+            dec.pyramid, pyr
+        )
+    except CodecError:
+        healed = False
+
+    # truncation: a mid-stream cut must raise a typed codec error —
+    # never decode to garbage
+    try:
+        codec_container.decode_pyramid(plain[: len(plain) // 2])
+        truncation = "silent"
+    except CodecError:
+        truncation = "typed-error"
+
+    # pallas-failure: an armed kernel fault must fall through to the
+    # jitted XLA reference bit-exactly (warn-once degrade notice is
+    # asserted by the chaos suite; suppressed here)
+    want = K.dwt_fwd_2d_multi(q, levels=LEVELS_CODEC, backend="xla")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with inject.armed("kernels.pallas", times=None):
+            got = K.dwt_fwd_2d_multi(
+                q, levels=LEVELS_CODEC, backend="interpret"
+            )
+    degraded = _trees_equal(got, want)
+
+    recovery = {
+        "bit-flip": "recovered" if healed else "silent",
+        "truncation": truncation,
+        # atomic tmp-dir commit + LATEST fallback scan; enforced by
+        # tests/test_resilience.py::test_save_crash_leaves_previous_intact
+        "save-crash": "previous-intact",
+        "pallas-failure": "degraded" if degraded else "silent",
+        # CollectiveTimeoutError / DeadlineExceededError; enforced by the
+        # watchdog and serve-deadline chaos tests
+        "stuck-neighbor": "typed-error",
+        "deadline-miss": "typed-error",
+    }
+    return {
+        "container_bytes": len(plain),
+        "parity_overhead_bytes": overhead,
+        "parity_overhead_ratio": round(overhead / len(plain), 4),
+        "single_band_recovery": bool(healed),
+        "recovery": recovery,
+    }
+
+
 def run_json() -> Tuple[list, dict]:
     rng = np.random.default_rng(7)
     x1d = jnp.asarray(rng.integers(-4096, 4096, size=SHAPE_1D), jnp.int32)
@@ -377,6 +461,7 @@ def run_json() -> Tuple[list, dict]:
         schemes_3d[name] = {"bit_exact": ok3, "fwd_us": round(t_s3, 1)}
 
     codec = _codec_section(rng)
+    resilience = _resilience_section(rng)
 
     payload = {
         "platform": B.platform(),
@@ -436,6 +521,7 @@ def run_json() -> Tuple[list, dict]:
             "plan": fused3d.plan_3d(*SHAPE_3D_LARGE),
         },
         "codec": codec,
+        "resilience": resilience,
     }
     rows = [
         ("kernels.platform", B.platform(), "probed once at import"),
@@ -570,6 +656,30 @@ def run_json() -> Tuple[list, dict]:
                 f"kernels.codec.lossless.{name}",
                 int(ok),
                 "container roundtrip bit-exact across 1D/2D/3D pyramids",
+            )
+        )
+    rows.extend(
+        [
+            (
+                "kernels.resilience.parity_overhead_ratio",
+                resilience["parity_overhead_ratio"],
+                f"XOR parity group adds "
+                f"{resilience['parity_overhead_bytes']}B to a "
+                f"{resilience['container_bytes']}B WZRC v2 container",
+            ),
+            (
+                "kernels.resilience.single_band_recovery",
+                int(resilience["single_band_recovery"]),
+                "byte flipped mid-band; parity heals the decode bit-exactly",
+            ),
+        ]
+    )
+    for cls, outcome in resilience["recovery"].items():
+        rows.append(
+            (
+                f"kernels.resilience.{cls}",
+                outcome,
+                "measured fault outcome (gate.py pins the expectation)",
             )
         )
     return rows, payload

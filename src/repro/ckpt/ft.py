@@ -15,11 +15,12 @@ What is necessarily simulated (documented, not faked): actual node loss.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, Optional
 
 import jax
 
@@ -30,17 +31,27 @@ PyTree = Any
 
 @dataclass
 class StragglerWatchdog:
-    """Flags steps slower than `threshold` x running median."""
+    """Flags steps slower than `threshold` x running median.
+
+    Both buffers are bounded ring buffers: ``history`` keeps the last
+    ``window`` step times (median window, O(1) eviction instead of the
+    O(n) ``list.pop(0)``), ``flagged`` keeps the last ``flagged_cap``
+    flag records — a pathologically slow host in a long run must not
+    grow host memory without bound.
+    """
 
     threshold: float = 2.0
     window: int = 32
-    history: List[float] = field(default_factory=list)
-    flagged: List[Dict] = field(default_factory=list)
+    flagged_cap: int = 256
+    history: Deque[float] = field(default_factory=collections.deque)
+    flagged: Deque[Dict] = field(default_factory=collections.deque)
+
+    def __post_init__(self):
+        self.history = collections.deque(self.history, maxlen=self.window)
+        self.flagged = collections.deque(self.flagged, maxlen=self.flagged_cap)
 
     def observe(self, step: int, seconds: float) -> bool:
-        self.history.append(seconds)
-        if len(self.history) > self.window:
-            self.history.pop(0)
+        self.history.append(seconds)  # deque maxlen evicts the oldest
         if len(self.history) >= 5:
             med = statistics.median(self.history)
             if seconds > self.threshold * med:
@@ -83,6 +94,9 @@ class TrainLoopRunner:
                 on_metrics(step, metrics)
             step += 1
             if step % self.save_every == 0:
+                # save() joins the previous async save first, so a save
+                # that died on its thread raises HERE, on the loop — a
+                # failed snapshot never passes for a successful one
                 self.ckpt.save(step, state, blocking=not self.async_save)
         self.ckpt.wait()
         self.ckpt.save(step, state, blocking=True)

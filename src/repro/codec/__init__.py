@@ -24,11 +24,20 @@ See DESIGN.md §11.
 """
 from repro.codec.container import (  # noqa: F401
     DecodedPyramid,
+    PartialDecode,
     decode_pyramid,
+    decode_pyramid_partial,
     encode_pyramid,
     inverse_transform,
     peek,
     roundtrip_exact,
+)
+from repro.codec.errors import (  # noqa: F401
+    CodecError,
+    CorruptBandError,
+    CorruptHeaderError,
+    TruncatedStreamError,
+    UnsupportedVersionError,
 )
 from repro.codec.rice import (  # noqa: F401
     BLOCK_VALUES,
@@ -46,8 +55,15 @@ from repro.codec.stream import (  # noqa: F401
 )
 
 __all__ = [
+    "CodecError",
+    "CorruptBandError",
+    "CorruptHeaderError",
+    "TruncatedStreamError",
+    "UnsupportedVersionError",
     "DecodedPyramid",
+    "PartialDecode",
     "decode_pyramid",
+    "decode_pyramid_partial",
     "encode_pyramid",
     "inverse_transform",
     "peek",

@@ -9,10 +9,11 @@ then per-level detail bands coarsest->finest).  Band geometry is a pure
 function of (shape, levels), so band sizes are never serialized; per-band
 blob byte lengths ARE, so a reader can seek straight to any band.
 
-Layout (little-endian)::
+Version 1 layout (little-endian; still decoded, still writable via
+``encode_pyramid(version=1)`` for v1 readers)::
 
     magic   4s   b"WZRC"
-    version u8   FORMAT_VERSION
+    version u8   1
     kind    u8   1 = WaveletPyramid, 2 = Pyramid2D, 3 = PyramidND
     flags   u8   bit0: crc32 trailer present
     mode    u8   0 = paper, 1 = jpeg2000
@@ -30,29 +31,68 @@ Layout (little-endian)::
             [byte-aligned Rice bitstream]
     crc32   u32  zlib.crc32 of everything above (when flags bit0)
 
+Version 2 (the default) replaces the single whole-blob CRC — under
+which one flipped bit anywhere loses every band — with *localized*
+integrity plus optional self-healing::
+
+    ... same fixed fields (version=2, flags reserved 0) ...
+    lead / shape / blob_len      as v1
+    band_crc    nbands x u32     crc32 of each band blob
+    parity_len  u32              0 = no parity group
+    parity_crc  u32              crc32 of the parity blob (0 when none)
+    header_crc  u32              crc32 of every byte above
+    blobs                        concatenated band blobs (as v1)
+    parity blob                  XOR of all band blobs zero-padded to
+                                 parity_len (= max band blob length)
+
+Decode verifies the header CRC first (a damaged header is never
+partial: geometry lives there), then each band against its own CRC.  A
+band that fails quarantines alone; with the parity group present, any
+SINGLE damaged band reconstructs bit-exactly (XOR of the parity blob
+with every intact band, truncated to the recorded length, re-verified
+against the band's CRC).  ``decode_pyramid`` heals transparently and
+records per-band status; ``decode_pyramid_partial`` additionally
+returns the survivors (damaged bands zero-filled, status ``"corrupt"``)
+instead of raising.  Every decode-side failure is a typed
+:class:`~repro.codec.errors.CodecError` subclass — never a bare
+``struct.error`` or ``IndexError``, and never a silently wrong band.
+
 Every band blob is independently decodable (per-block k and byte
-lengths travel with it), which is what the streaming layer and the
-serve path lean on.
+lengths travel with it), which is what the streaming layer, the serve
+path and the parity reconstruction all lean on.
 """
 from __future__ import annotations
 
 import struct
 import zlib
-from typing import Any, List, NamedTuple, Optional, Tuple
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.codec import rice
+from repro.codec.errors import (
+    CodecError,
+    CorruptBandError,
+    CorruptHeaderError,
+    TruncatedStreamError,
+    UnsupportedVersionError,
+)
 from repro.core import lifting
 
 MAGIC = b"WZRC"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 KIND_1D = 1
 KIND_2D = 2
 KIND_ND = 3
+
+# per-band decode status values (DecodedPyramid.band_status)
+BAND_OK = "ok"
+BAND_RECONSTRUCTED = "reconstructed"
+BAND_CORRUPT = "corrupt"
 
 _MODES = {"paper": 0, "jpeg2000": 1}
 _MODE_NAMES = {v: k for k, v in _MODES.items()}
@@ -63,7 +103,12 @@ _HEAD = struct.Struct("<4sBBBBBBBBHBB")
 
 
 class DecodedPyramid(NamedTuple):
-    """A decoded container: the pyramid plus its self-description."""
+    """A decoded container: the pyramid plus its self-description.
+
+    ``band_status`` is one entry per band in pack order — ``"ok"`` or
+    ``"reconstructed"`` (parity-healed, still bit-exact).  v1 blobs
+    (whole-blob CRC only) report all-``"ok"``.
+    """
 
     pyramid: Any  # WaveletPyramid | Pyramid2D | PyramidND
     kind: int
@@ -73,6 +118,31 @@ class DecodedPyramid(NamedTuple):
     lead: Tuple[int, ...]
     shape: Tuple[int, ...]  # original trailing (pre-transform) shape
     dtype: np.dtype
+    band_status: Tuple[str, ...] = ()
+
+
+class PartialDecode(NamedTuple):
+    """A quarantining decode: every recoverable band, plus per-band fate.
+
+    ``band_status[i]`` is ``"ok"`` / ``"reconstructed"`` / ``"corrupt"``;
+    corrupt bands are zero-filled in the pyramid (shape/dtype correct,
+    content lost) so the structure stays a valid pyramid.
+    """
+
+    pyramid: Any
+    kind: int
+    scheme: str
+    mode: str
+    levels: int
+    lead: Tuple[int, ...]
+    shape: Tuple[int, ...]
+    dtype: np.dtype
+    band_status: Tuple[str, ...]
+
+    @property
+    def complete(self) -> bool:
+        """True when every band decoded bit-exactly (incl. healed)."""
+        return all(s != BAND_CORRUPT for s in self.band_status)
 
 
 # ---------------------------------------------------------------------------
@@ -156,6 +226,15 @@ def _expected_band_shapes(
     return out
 
 
+def _xor_parity(blobs: Sequence[bytes], plen: int) -> bytes:
+    """XOR of the blobs zero-padded to ``plen`` — the parity group."""
+    acc = np.zeros(plen, np.uint8)
+    for b in blobs:
+        arr = np.frombuffer(b, np.uint8)
+        acc[: len(arr)] ^= arr
+    return acc.tobytes()
+
+
 # ---------------------------------------------------------------------------
 # Encode.
 # ---------------------------------------------------------------------------
@@ -169,6 +248,8 @@ def encode_pyramid(
     ndim: Optional[int] = None,
     backend: Optional[str] = None,
     checksum: bool = True,
+    parity: bool = False,
+    version: int = FORMAT_VERSION,
 ) -> bytes:
     """Serialize an integer wavelet pyramid to a self-describing blob.
 
@@ -177,8 +258,22 @@ def encode_pyramid(
     from the bytes alone.  ``scheme``/``mode`` are recorded so a reader
     can run the inverse transform without out-of-band metadata; they do
     not affect the coded bytes of the bands themselves.
+
+    ``version=2`` (default) writes per-band CRCs plus a header CRC so
+    decode quarantines damage per band; ``parity=True`` additionally
+    appends an XOR parity group sized to the largest band blob, letting
+    any single damaged band reconstruct bit-exactly.  ``version=1``
+    emits the legacy layout byte-for-byte (``checksum`` controls its
+    whole-blob trailer) for v1 readers; v1 supports no parity.
     """
     kind = _pyramid_kind(pyr)
+    if version not in SUPPORTED_VERSIONS:
+        raise UnsupportedVersionError(
+            f"cannot encode WZRC version {version} "
+            f"(supports {SUPPORTED_VERSIONS})"
+        )
+    if parity and version < 2:
+        raise ValueError("parity requires WZRC version 2")
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {sorted(_MODES)}, got {mode!r}")
     nd, lead, shape = _infer_geometry(pyr, kind, ndim)
@@ -211,11 +306,11 @@ def encode_pyramid(
     scheme_b = scheme.encode("utf-8")
     if len(scheme_b) > 255:
         raise ValueError("scheme name too long")
-    flags = 1 if checksum else 0
+    flags = 1 if (checksum and version == 1) else 0
     parts = [
         _HEAD.pack(
             MAGIC,
-            FORMAT_VERSION,
+            version,
             kind,
             flags,
             _MODES[mode],
@@ -237,11 +332,24 @@ def encode_pyramid(
         payload, ks, lens = rice.encode_band(band, backend=backend)
         blobs.append(ks.tobytes() + lens.astype("<u2").tobytes() + payload)
     parts.append(struct.pack(f"<{len(blobs)}I", *(len(b) for b in blobs)))
-    parts.extend(blobs)
-    out = b"".join(parts)
-    if checksum:
-        out += struct.pack("<I", zlib.crc32(out) & 0xFFFFFFFF)
-    return out
+    if version == 1:
+        parts.extend(blobs)
+        out = b"".join(parts)
+        if flags & 1:
+            out += struct.pack("<I", zlib.crc32(out) & 0xFFFFFFFF)
+        return out
+    # v2: per-band CRCs, optional parity group, header CRC
+    band_crcs = [zlib.crc32(b) & 0xFFFFFFFF for b in blobs]
+    parts.append(struct.pack(f"<{len(band_crcs)}I", *band_crcs))
+    parity_blob = b""
+    parity_crc = 0
+    if parity and blobs:
+        parity_blob = _xor_parity(blobs, max(len(b) for b in blobs))
+        parity_crc = zlib.crc32(parity_blob) & 0xFFFFFFFF
+    parts.append(struct.pack("<II", len(parity_blob), parity_crc))
+    header = b"".join(parts)
+    header += struct.pack("<I", zlib.crc32(header) & 0xFFFFFFFF)
+    return header + b"".join(blobs) + parity_blob
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +358,7 @@ def encode_pyramid(
 
 
 class _Header(NamedTuple):
+    version: int
     kind: int
     flags: int
     mode: str
@@ -261,17 +370,22 @@ class _Header(NamedTuple):
     shape: Tuple[int, ...]
     blob_lens: Tuple[int, ...]
     body_off: int  # offset of the first band blob
+    band_crcs: Tuple[int, ...] = ()  # v2 only
+    parity_len: int = 0  # v2 only
+    parity_crc: int = 0  # v2 only
 
 
 def _parse_header(data: bytes) -> _Header:
     if len(data) < _HEAD.size or data[:4] != MAGIC:
-        raise ValueError("not a WZRC container (bad magic)")
+        raise CorruptHeaderError("not a WZRC container (bad magic)")
     try:
         return _parse_header_body(data)
     except (struct.error, IndexError) as e:
         # the variable-length tail ran past the buffer: corrupt counts or
         # a truncated blob — surface the module's documented error type
-        raise ValueError(f"truncated or corrupt WZRC header ({e})") from e
+        raise CorruptHeaderError(
+            f"truncated or corrupt WZRC header ({e})"
+        ) from e
 
 
 def _parse_header_body(data: bytes) -> _Header:
@@ -289,25 +403,25 @@ def _parse_header_body(data: bytes) -> _Header:
         qmax,
         kmax,
     ) = _HEAD.unpack_from(data, 0)
-    if version != FORMAT_VERSION:
-        raise ValueError(
+    if version not in SUPPORTED_VERSIONS:
+        raise UnsupportedVersionError(
             f"WZRC container version {version} not supported by this build "
-            f"(supports {FORMAT_VERSION})"
+            f"(supports {SUPPORTED_VERSIONS})"
         )
     if (block, qmax, kmax) != (rice.BLOCK_VALUES, rice.Q_MAX, rice.K_MAX):
-        raise ValueError(
+        raise CorruptHeaderError(
             f"container coded with rice geometry (block={block}, "
             f"qmax={qmax}, kmax={kmax}); this build uses "
             f"({rice.BLOCK_VALUES}, {rice.Q_MAX}, {rice.K_MAX})"
         )
     if kind not in (KIND_1D, KIND_2D, KIND_ND):
-        raise ValueError(f"unknown pyramid kind {kind}")
+        raise CorruptHeaderError(f"unknown pyramid kind {kind}")
     if mode_c not in _MODE_NAMES or dtype_c not in _DTYPE_NAMES:
-        raise ValueError("corrupt container header (mode/dtype code)")
+        raise CorruptHeaderError("corrupt container header (mode/dtype code)")
     off = _HEAD.size
     slen = data[off]
     off += 1
-    scheme = data[off : off + slen].decode("utf-8")
+    scheme = data[off : off + slen].decode("utf-8", errors="replace")
     off += slen
     lead = struct.unpack_from(f"<{nlead}I", data, off)
     off += 4 * nlead
@@ -321,7 +435,24 @@ def _parse_header_body(data: bytes) -> _Header:
         nbands = 1 + ((1 << nd) - 1) * levels
     blob_lens = struct.unpack_from(f"<{nbands}I", data, off)
     off += 4 * nbands
+    band_crcs: Tuple[int, ...] = ()
+    parity_len = 0
+    parity_crc = 0
+    if version >= 2:
+        band_crcs = struct.unpack_from(f"<{nbands}I", data, off)
+        off += 4 * nbands
+        parity_len, parity_crc = struct.unpack_from("<II", data, off)
+        off += 8
+        (want_crc,) = struct.unpack_from("<I", data, off)
+        got_crc = zlib.crc32(data[:off]) & 0xFFFFFFFF
+        off += 4
+        if got_crc != want_crc:
+            raise CorruptHeaderError(
+                f"WZRC header checksum mismatch "
+                f"(crc32 {got_crc:#010x} != {want_crc:#010x})"
+            )
     return _Header(
+        version=version,
         kind=kind,
         flags=flags,
         mode=_MODE_NAMES[mode_c],
@@ -333,6 +464,9 @@ def _parse_header_body(data: bytes) -> _Header:
         shape=tuple(shape),
         blob_lens=tuple(blob_lens),
         body_off=off,
+        band_crcs=band_crcs,
+        parity_len=parity_len,
+        parity_crc=parity_crc,
     )
 
 
@@ -340,6 +474,7 @@ def peek(data: bytes) -> dict:
     """Header metadata without decoding any band (cheap introspection)."""
     h = _parse_header(data)
     return {
+        "version": h.version,
         "kind": h.kind,
         "scheme": h.scheme,
         "mode": h.mode,
@@ -349,6 +484,7 @@ def peek(data: bytes) -> dict:
         "shape": h.shape,
         "dtype": str(h.dtype),
         "band_bytes": h.blob_lens,
+        "parity_bytes": h.parity_len,
     }
 
 
@@ -358,7 +494,7 @@ def _decode_band_blob(
     nb = rice.n_blocks(count)
     need = nb + 2 * nb
     if len(blob) < need:
-        raise ValueError(
+        raise TruncatedStreamError(
             f"band blob truncated: {len(blob)} bytes, tables need {need}"
         )
     ks = np.frombuffer(blob, np.uint8, nb)
@@ -366,58 +502,141 @@ def _decode_band_blob(
     return rice.decode_band(blob[nb + 2 * nb :], ks, lens, count)
 
 
-def decode_pyramid(data: bytes) -> DecodedPyramid:
-    """Reconstruct the pyramid (and its self-description) from bytes."""
+def _band_blobs_v2(
+    data: bytes, h: _Header
+) -> Tuple[List[Optional[bytes]], List[str]]:
+    """Slice out the band blobs, CRC-check each, heal via parity.
+
+    Returns (blobs, status) in pack order; a blob is ``None`` exactly
+    when its status is ``"corrupt"`` (CRC failed and parity could not
+    reconstruct it).
+    """
+    end = len(data)
+    if h.body_off + sum(h.blob_lens) + h.parity_len != end:
+        raise TruncatedStreamError(
+            f"container body is {end - h.body_off} bytes, band table sums "
+            f"to {sum(h.blob_lens) + h.parity_len} (truncated or corrupt)"
+        )
+    blobs: List[Optional[bytes]] = []
+    status: List[str] = []
+    off = h.body_off
+    for blen, crc in zip(h.blob_lens, h.band_crcs):
+        blob = data[off : off + blen]
+        off += blen
+        if zlib.crc32(blob) & 0xFFFFFFFF == crc:
+            blobs.append(blob)
+            status.append(BAND_OK)
+        else:
+            blobs.append(None)
+            status.append(BAND_CORRUPT)
+    damaged = [i for i, s in enumerate(status) if s == BAND_CORRUPT]
+    if damaged and h.parity_len:
+        parity = data[off : off + h.parity_len]
+        parity_ok = zlib.crc32(parity) & 0xFFFFFFFF == h.parity_crc
+        if parity_ok and len(damaged) == 1:
+            i = damaged[0]
+            intact = [b for b in blobs if b is not None]
+            rec = bytes(
+                np.frombuffer(parity, np.uint8)
+                ^ np.frombuffer(
+                    _xor_parity(intact, h.parity_len), np.uint8
+                )
+            )[: h.blob_lens[i]]
+            if zlib.crc32(rec) & 0xFFFFFFFF == h.band_crcs[i]:
+                blobs[i] = rec
+                status[i] = BAND_RECONSTRUCTED
+    return blobs, status
+
+
+def _assemble(h: _Header, bands: List[jax.Array]) -> Any:
+    if h.kind == KIND_1D:
+        return lifting.WaveletPyramid(approx=bands[0], details=tuple(bands[1:]))
+    if h.kind == KIND_2D:
+        details = tuple(
+            (bands[1 + 3 * i], bands[2 + 3 * i], bands[3 + 3 * i])
+            for i in range(h.levels)
+        )
+        return lifting.Pyramid2D(ll=bands[0], details=details)
+    per = (1 << h.ndim) - 1
+    details = tuple(
+        tuple(bands[1 + per * i : 1 + per * (i + 1)])
+        for i in range(h.levels)
+    )
+    return lifting.PyramidND(approx=bands[0], details=details)
+
+
+def _decode_common(data: bytes, partial: bool):
+    """Shared strict/partial decode core: header, bands, assembly."""
     data = bytes(data)
     h = _parse_header(data)
     end = len(data)
-    if h.flags & 1:
-        end -= 4
-        (want,) = struct.unpack_from("<I", data, end)
-        got = zlib.crc32(data[:end]) & 0xFFFFFFFF
-        if got != want:
-            raise ValueError(
-                f"WZRC checksum mismatch (crc32 {got:#010x} != {want:#010x})"
+    if h.version == 1:
+        if h.flags & 1:
+            end -= 4
+            (want,) = struct.unpack_from("<I", data, end)
+            got = zlib.crc32(data[:end]) & 0xFFFFFFFF
+            if got != want:
+                raise CodecError(
+                    f"WZRC checksum mismatch "
+                    f"(crc32 {got:#010x} != {want:#010x})"
+                )
+        if h.body_off + sum(h.blob_lens) != end:
+            raise TruncatedStreamError(
+                f"container body is {end - h.body_off} bytes, band table "
+                f"sums to {sum(h.blob_lens)} (truncated or corrupt)"
             )
-    if h.body_off + sum(h.blob_lens) != end:
-        raise ValueError(
-            f"container body is {end - h.body_off} bytes, band table sums "
-            f"to {sum(h.blob_lens)} (truncated or corrupt)"
-        )
+        blobs: List[Optional[bytes]] = []
+        off = h.body_off
+        for blen in h.blob_lens:
+            blobs.append(data[off : off + blen])
+            off += blen
+        status = [BAND_OK] * len(blobs)
+    else:
+        blobs, status = _band_blobs_v2(data, h)
 
     band_shapes = _expected_band_shapes(h.kind, h.shape, h.levels)
     lead_n = 1
     for s in h.lead:
         lead_n *= s
     bands = []
-    off = h.body_off
-    for blen, shp in zip(h.blob_lens, band_shapes):
+    for i, (blob, shp) in enumerate(zip(blobs, band_shapes)):
         count = lead_n
         for s in shp:
             count *= s
-        flat = _decode_band_blob(data[off : off + blen], count)
-        off += blen
+        if blob is not None:
+            try:
+                flat = _decode_band_blob(blob, count)
+            except (CodecError, ValueError):
+                # CRC-valid but undecodable should be impossible; treat
+                # it as corruption rather than leaking a raw error
+                blob = None
+                status[i] = BAND_CORRUPT
+        if blob is None:
+            flat = np.zeros(count, np.int32)  # quarantined: shape-correct
         bands.append(
             jnp.asarray(flat.astype(h.dtype).reshape(h.lead + shp))
         )
 
-    if h.kind == KIND_1D:
-        pyr: Any = lifting.WaveletPyramid(
-            approx=bands[0], details=tuple(bands[1:])
+    damaged = [i for i, s in enumerate(status) if s == BAND_CORRUPT]
+    if damaged and not partial:
+        raise CorruptBandError(
+            f"WZRC band(s) {damaged} corrupt and unrecoverable "
+            f"({'parity absent' if not h.parity_len else 'parity could not heal'}); "
+            "use decode_pyramid_partial for the surviving bands",
+            band_status=status,
         )
-    elif h.kind == KIND_2D:
-        details = tuple(
-            (bands[1 + 3 * i], bands[2 + 3 * i], bands[3 + 3 * i])
-            for i in range(h.levels)
-        )
-        pyr = lifting.Pyramid2D(ll=bands[0], details=details)
-    else:
-        per = (1 << h.ndim) - 1
-        details = tuple(
-            tuple(bands[1 + per * i : 1 + per * (i + 1)])
-            for i in range(h.levels)
-        )
-        pyr = lifting.PyramidND(approx=bands[0], details=details)
+    return h, _assemble(h, bands), tuple(status)
+
+
+def decode_pyramid(data: bytes) -> DecodedPyramid:
+    """Reconstruct the pyramid (and its self-description) from bytes.
+
+    v2 blobs self-heal: a single damaged band reconstructs from the
+    parity group when present (``band_status`` records it).  Damage
+    that cannot heal raises :class:`CorruptBandError`; use
+    :func:`decode_pyramid_partial` to recover the intact bands instead.
+    """
+    h, pyr, status = _decode_common(data, partial=False)
     return DecodedPyramid(
         pyramid=pyr,
         kind=h.kind,
@@ -427,15 +646,40 @@ def decode_pyramid(data: bytes) -> DecodedPyramid:
         lead=h.lead,
         shape=h.shape,
         dtype=h.dtype,
+        band_status=status,
     )
 
 
-def inverse_transform(dec: DecodedPyramid, backend: Optional[str] = None):
+def decode_pyramid_partial(data: bytes) -> PartialDecode:
+    """Quarantining decode: return every recoverable band.
+
+    Header damage still raises (:class:`CorruptHeaderError` — the
+    geometry is unrecoverable), but band damage never does: corrupt
+    bands come back zero-filled with ``band_status[i] == "corrupt"``
+    and every other band is bit-exact.  v1 blobs carry no per-band
+    CRCs, so for them this is equivalent to :func:`decode_pyramid`.
+    """
+    h, pyr, status = _decode_common(data, partial=True)
+    return PartialDecode(
+        pyramid=pyr,
+        kind=h.kind,
+        scheme=h.scheme,
+        mode=h.mode,
+        levels=h.levels,
+        lead=h.lead,
+        shape=h.shape,
+        dtype=h.dtype,
+        band_status=status,
+    )
+
+
+def inverse_transform(dec, backend: Optional[str] = None):
     """Run the recorded inverse transform on a decoded pyramid.
 
     Convenience for sample-level consumers (ckpt, stream, serve): the
     container is self-describing, so the right engine (1D / 2D / N-D)
-    and the recorded scheme/mode need no out-of-band metadata.
+    and the recorded scheme/mode need no out-of-band metadata.  Accepts
+    a :class:`DecodedPyramid` or a (complete) :class:`PartialDecode`.
     """
     from repro import kernels as K
 

@@ -34,6 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.codec import container
+from repro.codec.errors import (
+    CodecError,
+    CorruptHeaderError,
+    TruncatedStreamError,
+    UnsupportedVersionError,
+)
 from repro.core import lifting
 
 STREAM_MAGIC = b"WZRS"
@@ -174,7 +180,7 @@ class _Reader:
     def read_exact(self, n: int, what: str) -> bytes:
         data = self.read(n)
         if len(data) != n:
-            raise ValueError(
+            raise TruncatedStreamError(
                 f"WZRS stream truncated reading {what} "
                 f"({len(data)}/{n} bytes)"
             )
@@ -188,9 +194,9 @@ def iter_frames(src: ByteSource) -> Iterator[bytes]:
         r.read_exact(_STREAM_HEAD.size, "stream header")
     )
     if magic != STREAM_MAGIC:
-        raise ValueError("not a WZRS stream (bad magic)")
+        raise CorruptHeaderError("not a WZRS stream (bad magic)")
     if version != STREAM_VERSION:
-        raise ValueError(
+        raise UnsupportedVersionError(
             f"WZRS stream version {version} not supported by this build "
             f"(supports {STREAM_VERSION})"
         )
@@ -245,5 +251,5 @@ def decode_volume(src: ByteSource, backend: Optional[str] = None) -> np.ndarray:
     """Inverse of :func:`encode_volume`: concatenate decoded slabs."""
     slabs = list(decode_stream(src, backend=backend))
     if not slabs:
-        raise ValueError("empty WZRS stream (no frames)")
+        raise CodecError("empty WZRS stream (no frames)")
     return np.concatenate(slabs, axis=0)

@@ -152,6 +152,39 @@ def note_degrade(requested: str, resolved: str, reason: str) -> None:
     )
 
 
+def pallas_guard(resolved: str, label: str, kernel_thunk, xla_thunk):
+    """Run the kernel path with the XLA reference as a safety net.
+
+    The single choke point every public wrapper dispatches through: when
+    ``resolved`` is the XLA backend the reference thunk runs directly;
+    otherwise the Pallas thunk runs, and a compile/launch failure (a
+    Mosaic/Triton lowering bug, an emulator fault, an injected
+    ``kernels.pallas`` chaos fault) degrades to the bit-exact jitted XLA
+    reference with a one-time :class:`BackendDegradeWarning` naming the
+    kernel and the cause — the transform still returns the exact answer,
+    on the slower path, instead of surfacing a runtime internal error.
+
+    Deliberately NOT a correctness net: both paths are bit-exact by
+    construction (tests sweep them), so catching here can only trade
+    performance, never results.  Argument-validation errors are raised
+    by the wrappers BEFORE dispatch and never reach this guard.
+    """
+    from repro.resilience import inject
+
+    if resolved == "xla":
+        return xla_thunk()
+    try:
+        inject.check("kernels.pallas")
+        return kernel_thunk()
+    except Exception as e:  # noqa: BLE001 - any lowering/launch failure
+        note_degrade(
+            resolved, "xla",
+            f"{label}: kernel path failed ({type(e).__name__}: {e}); "
+            "recomputed on the jitted XLA reference",
+        )
+        return xla_thunk()
+
+
 @contextlib.contextmanager
 def use_backend(name: str) -> Iterator[None]:
     """Force a backend for every kernel call in scope (tests/benchmarks).

@@ -277,18 +277,23 @@ def dwt_fwd_2d(
         raise ValueError(f"need a (..., H>=2, W>=2) input, got {x.shape}")
     h, w = x.shape[-2], x.shape[-1]
     b = _resolve_2d(backend, h, w, sch)
-    if b == "xla":
+
+    def _kernel() -> Bands2D:
+        lead = x.shape[:-2]
+        xf = x.reshape((-1, h, w)).astype(_compute_dtype(x.dtype))
+        ll, lh, hl, hh = _fwd2d_level(xf, sch, mode, _backend.interpret_flag(b))
+        return Bands2D(
+            ll=ll.reshape(lead + ll.shape[1:]),
+            lh=lh.reshape(lead + lh.shape[1:]),
+            hl=hl.reshape(lead + hl.shape[1:]),
+            hh=hh.reshape(lead + hh.shape[1:]),
+        )
+
+    def _xla() -> Bands2D:
         ll, lh, hl, hh = _fwd2d_xla(x, scheme=sch, mode=mode)
         return Bands2D(ll=ll, lh=lh, hl=hl, hh=hh)
-    lead = x.shape[:-2]
-    xf = x.reshape((-1, h, w)).astype(_compute_dtype(x.dtype))
-    ll, lh, hl, hh = _fwd2d_level(xf, sch, mode, _backend.interpret_flag(b))
-    return Bands2D(
-        ll=ll.reshape(lead + ll.shape[1:]),
-        lh=lh.reshape(lead + lh.shape[1:]),
-        hl=hl.reshape(lead + hl.shape[1:]),
-        hh=hh.reshape(lead + hh.shape[1:]),
-    )
+
+    return _backend.pallas_guard(b, "dwt_fwd_2d", _kernel, _xla)
 
 
 def dwt_inv_2d(
@@ -302,20 +307,25 @@ def dwt_inv_2d(
     h = ll.shape[-2] + bands.lh.shape[-2]
     w = ll.shape[-1] + bands.hl.shape[-1]
     b = _resolve_2d(backend, h, w, sch)
-    if b == "xla":
-        return _inv2d_xla(
-            bands.ll, bands.lh, bands.hl, bands.hh, scheme=sch, mode=mode
+
+    def _kernel() -> Array:
+        lead = ll.shape[:-2]
+        cdt = _compute_dtype(ll.dtype)
+        args = tuple(
+            a.reshape((-1,) + a.shape[len(lead) :]).astype(cdt)
+            for a in (bands.ll, bands.lh, bands.hl, bands.hh)
         )
-    lead = ll.shape[:-2]
-    cdt = _compute_dtype(ll.dtype)
-    args = tuple(
-        a.reshape((-1,) + a.shape[len(lead) :]).astype(cdt)
-        for a in (bands.ll, bands.lh, bands.hl, bands.hh)
+        x = _inv2d_level(
+            *args, scheme=sch, mode=mode, interpret=_backend.interpret_flag(b)
+        )
+        return x.reshape(lead + x.shape[1:])
+
+    return _backend.pallas_guard(
+        b, "dwt_inv_2d", _kernel,
+        lambda: _inv2d_xla(
+            bands.ll, bands.lh, bands.hl, bands.hh, scheme=sch, mode=mode
+        ),
     )
-    x = _inv2d_level(
-        *args, scheme=sch, mode=mode, interpret=_backend.interpret_flag(b)
-    )
-    return x.reshape(lead + x.shape[1:])
 
 
 # ---------------------------------------------------------------------------
@@ -398,24 +408,31 @@ def dwt_fwd_2d_multi(
     check_levels_2d(h, w, levels)
     b = _resolve_2d(backend, h, w, sch)
     lead = x.shape[:-2]
-    if b == "xla":
+
+    def _kernel() -> Pyramid2D:
+        xf = x.reshape((-1, h, w))  # metadata-only; promotion happens in-jit
+        ll, details = _fwd2d_multi_kernel(
+            xf, levels=levels, scheme=sch, mode=mode,
+            interpret=_backend.interpret_flag(b),
+            dispatch=_backend.dispatch_state(),
+        )
+
+        def unlead(a: Array) -> Array:
+            return a.reshape(lead + a.shape[1:])
+
+        return Pyramid2D(
+            ll=unlead(ll),
+            details=tuple(
+                (unlead(lh), unlead(hl), unlead(hh)) for lh, hl, hh in details
+            ),
+        )
+
+    def _xla() -> Pyramid2D:
         # _fwd2d_xla promotes in-jit; no eager cast of the full image here
         ll, details = _fwd2d_multi_xla(x, levels=levels, scheme=sch, mode=mode)
         return Pyramid2D(ll=ll, details=details)
-    xf = x.reshape((-1, h, w))  # metadata-only; promotion happens in-jit
-    ll, details = _fwd2d_multi_kernel(
-        xf, levels=levels, scheme=sch, mode=mode,
-        interpret=_backend.interpret_flag(b),
-        dispatch=_backend.dispatch_state(),
-    )
 
-    def unlead(a: Array) -> Array:
-        return a.reshape(lead + a.shape[1:])
-
-    return Pyramid2D(
-        ll=unlead(ll),
-        details=tuple((unlead(lh), unlead(hl), unlead(hh)) for lh, hl, hh in details),
-    )
+    return _backend.pallas_guard(b, "dwt_fwd_2d_multi", _kernel, _xla)
 
 
 def dwt_inv_2d_multi(
@@ -441,21 +458,28 @@ def dwt_inv_2d_multi(
             )
         h, w = h + lh.shape[-2], w + hl.shape[-1]
     b = _resolve_2d(backend, h, w, sch)
-    if b == "xla":
+
+    def _kernel() -> Array:
+        lead = ll.shape[:-2]
+
+        def flat(a: Array) -> Array:
+            return a.reshape((-1,) + a.shape[len(lead) :])  # metadata-only
+
+        details = tuple(
+            (flat(lh), flat(hl), flat(hh)) for lh, hl, hh in pyr.details
+        )
+        x = _inv2d_multi_kernel(
+            flat(ll), details, scheme=sch, mode=mode,
+            interpret=_backend.interpret_flag(b),
+            dispatch=_backend.dispatch_state(),
+        )
+        return x.reshape(lead + x.shape[1:])
+
+    return _backend.pallas_guard(
+        b, "dwt_inv_2d_multi", _kernel,
         # _inv2d_xla promotes in-jit; pass the bands through untouched
-        return _inv2d_multi_xla(ll, tuple(pyr.details), scheme=sch, mode=mode)
-    lead = ll.shape[:-2]
-
-    def flat(a: Array) -> Array:
-        return a.reshape((-1,) + a.shape[len(lead) :])  # metadata-only
-
-    details = tuple((flat(lh), flat(hl), flat(hh)) for lh, hl, hh in pyr.details)
-    x = _inv2d_multi_kernel(
-        flat(ll), details, scheme=sch, mode=mode,
-        interpret=_backend.interpret_flag(b),
-        dispatch=_backend.dispatch_state(),
+        lambda: _inv2d_multi_xla(ll, tuple(pyr.details), scheme=sch, mode=mode),
     )
-    return x.reshape(lead + x.shape[1:])
 
 
 # ---------------------------------------------------------------------------

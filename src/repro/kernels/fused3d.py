@@ -543,23 +543,30 @@ def dwt_fwd_nd(
     d, h, w = x.shape[-3:]
     b = _resolve_3d(backend, d, h, w, sch)
     lead = x.shape[:-3]
-    if b == "xla":
-        approx, details = _fwd3d_multi_xla(x, levels=levels, scheme=sch, mode=mode)
+
+    def _kernel() -> PyramidND:
+        xf = x.reshape((-1, d, h, w))  # metadata-only; promotion in-jit
+        approx, details = _fwd3d_multi_kernel(
+            xf, levels=levels, scheme=sch, mode=mode,
+            interpret=_backend.interpret_flag(b),
+            dispatch=_backend.dispatch_state(),
+        )
+
+        def unlead(a: Array) -> Array:
+            return a.reshape(lead + a.shape[1:])
+
+        return PyramidND(
+            approx=unlead(approx),
+            details=tuple(tuple(unlead(b_) for b_ in lvl) for lvl in details),
+        )
+
+    def _xla() -> PyramidND:
+        approx, details = _fwd3d_multi_xla(
+            x, levels=levels, scheme=sch, mode=mode
+        )
         return PyramidND(approx=approx, details=details)
-    xf = x.reshape((-1, d, h, w))  # metadata-only; promotion happens in-jit
-    approx, details = _fwd3d_multi_kernel(
-        xf, levels=levels, scheme=sch, mode=mode,
-        interpret=_backend.interpret_flag(b),
-        dispatch=_backend.dispatch_state(),
-    )
 
-    def unlead(a: Array) -> Array:
-        return a.reshape(lead + a.shape[1:])
-
-    return PyramidND(
-        approx=unlead(approx),
-        details=tuple(tuple(unlead(b_) for b_ in lvl) for lvl in details),
-    )
+    return _backend.pallas_guard(b, "dwt_fwd_nd", _kernel, _xla)
 
 
 def dwt_inv_nd(
@@ -603,19 +610,24 @@ def dwt_inv_nd(
                 )
         d, h, w = d + lvl[3].shape[-3], h + lvl[1].shape[-2], w + lvl[0].shape[-1]
     b = _resolve_3d(backend, d, h, w, sch)
-    if b == "xla":
-        return _inv3d_multi_xla(
-            pyr.approx, tuple(pyr.details), scheme=sch, mode=mode
+
+    def _kernel() -> Array:
+        lead = pyr.approx.shape[:-3]
+
+        def flat(a: Array) -> Array:
+            return a.reshape((-1,) + a.shape[len(lead):])  # metadata-only
+
+        details = tuple(tuple(flat(b_) for b_ in lvl) for lvl in pyr.details)
+        x = _inv3d_multi_kernel(
+            flat(pyr.approx), details, scheme=sch, mode=mode,
+            interpret=_backend.interpret_flag(b),
+            dispatch=_backend.dispatch_state(),
         )
-    lead = pyr.approx.shape[:-3]
+        return x.reshape(lead + x.shape[1:])
 
-    def flat(a: Array) -> Array:
-        return a.reshape((-1,) + a.shape[len(lead):])  # metadata-only
-
-    details = tuple(tuple(flat(b_) for b_ in lvl) for lvl in pyr.details)
-    x = _inv3d_multi_kernel(
-        flat(pyr.approx), details, scheme=sch, mode=mode,
-        interpret=_backend.interpret_flag(b),
-        dispatch=_backend.dispatch_state(),
+    return _backend.pallas_guard(
+        b, "dwt_inv_nd", _kernel,
+        lambda: _inv3d_multi_xla(
+            pyr.approx, tuple(pyr.details), scheme=sch, mode=mode
+        ),
     )
-    return x.reshape(lead + x.shape[1:])

@@ -275,10 +275,12 @@ def dwt_fwd_1d(
     if x.shape[-1] < 2:
         raise ValueError("need at least 2 samples")
     b = _backend.resolve(backend)
-    if b == "xla":
-        return _fwd_1d_xla(x, scheme=sch, mode=mode)
-    return _fwd_1d_kernel(
-        x, scheme=sch, mode=mode, interpret=_backend.interpret_flag(b)
+    return _backend.pallas_guard(
+        b, "dwt_fwd_1d",
+        lambda: _fwd_1d_kernel(
+            x, scheme=sch, mode=mode, interpret=_backend.interpret_flag(b)
+        ),
+        lambda: _fwd_1d_xla(x, scheme=sch, mode=mode),
     )
 
 
@@ -295,10 +297,12 @@ def dwt_inv_1d(
     if s.shape[-1] - d.shape[-1] not in (0, 1):
         raise ValueError("band length mismatch")
     b = _backend.resolve(backend)
-    if b == "xla":
-        return _inv_1d_xla(s, d, scheme=sch, mode=mode)
-    return _inv_1d_kernel(
-        s, d, scheme=sch, mode=mode, interpret=_backend.interpret_flag(b)
+    return _backend.pallas_guard(
+        b, "dwt_inv_1d",
+        lambda: _inv_1d_kernel(
+            s, d, scheme=sch, mode=mode, interpret=_backend.interpret_flag(b)
+        ),
+        lambda: _inv_1d_xla(s, d, scheme=sch, mode=mode),
     )
 
 
@@ -326,18 +330,17 @@ def dwt_fwd(
             )
         n = n - n // 2
     b = _backend.resolve(backend)
-    if b == "xla":
-        approx, details = _fwd_multi_xla(
-            x, levels=levels, scheme=sch, mode=mode
-        )
-    else:
-        approx, details = _fwd_multi_kernel(
+    approx, details = _backend.pallas_guard(
+        b, "dwt_fwd",
+        lambda: _fwd_multi_kernel(
             x,
             levels=levels,
             scheme=sch,
             mode=mode,
             interpret=_backend.interpret_flag(b),
-        )
+        ),
+        lambda: _fwd_multi_xla(x, levels=levels, scheme=sch, mode=mode),
+    )
     return WaveletPyramid(approx=approx, details=details)
 
 
@@ -361,16 +364,18 @@ def dwt_inv(
             )
         n = n + d.shape[-1]
     b = _backend.resolve(backend)
-    if b == "xla":
-        return _inv_multi_xla(
+    return _backend.pallas_guard(
+        b, "dwt_inv",
+        lambda: _inv_multi_kernel(
+            pyr.approx,
+            tuple(pyr.details),
+            scheme=sch,
+            mode=mode,
+            interpret=_backend.interpret_flag(b),
+        ),
+        lambda: _inv_multi_xla(
             pyr.approx, tuple(pyr.details), scheme=sch, mode=mode
-        )
-    return _inv_multi_kernel(
-        pyr.approx,
-        tuple(pyr.details),
-        scheme=sch,
-        mode=mode,
-        interpret=_backend.interpret_flag(b),
+        ),
     )
 
 

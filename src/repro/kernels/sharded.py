@@ -37,6 +37,7 @@ See DESIGN.md §7 for the communication pattern.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Optional, Tuple
 
 import jax
@@ -47,8 +48,56 @@ from repro import sharding as SH
 from repro.core import schemes as S
 from repro.core.lifting import Pyramid2D, _check_mode
 from repro.kernels.ops import _compute_dtype
+from repro.resilience import inject
+from repro.resilience.errors import CollectiveTimeoutError
 
 Array = jax.Array
+
+
+def _watchdogged(thunk, label: str, timeout_s: Optional[float]):
+    """Run a collective-bearing thunk under a host-side completion watchdog.
+
+    XLA collectives cannot be interrupted in-process, and a stuck mesh
+    neighbor (dead host, wedged interconnect) hangs ``ppermute`` — and
+    therefore the caller — forever.  The thunk runs (and is blocked to
+    completion) on a daemon worker thread; if it has not completed within
+    ``timeout_s`` the host raises :class:`CollectiveTimeoutError` naming
+    the transform, so the controller can evict/reshard instead of
+    hanging.  The orphaned worker is a daemon: it cannot keep a dying
+    process alive, which is the strongest guarantee available without
+    runtime-level collective abort.  ``timeout_s=None`` (default) runs
+    inline with no watchdog thread — the zero-overhead fast path.
+
+    The ``sharded.collective`` inject site sits inside the timed region,
+    so the chaos suite can simulate the stuck neighbor deterministically
+    (a delay fault) without a real multi-host hang.
+    """
+    if timeout_s is None:
+        inject.check("sharded.collective")
+        return thunk()
+    result: list = []
+    failure: list = []
+
+    def _run():
+        try:
+            inject.check("sharded.collective")
+            out = thunk()
+            result.append(jax.block_until_ready(out))
+        except BaseException as e:  # surfaced below on the caller thread
+            failure.append(e)
+
+    worker = threading.Thread(target=_run, daemon=True)
+    worker.start()
+    worker.join(timeout_s)
+    if worker.is_alive():
+        raise CollectiveTimeoutError(
+            f"{label}: collective did not complete within {timeout_s}s — "
+            "a mesh participant looks stuck (dead host or wedged "
+            "interconnect); evict or reshard before retrying"
+        )
+    if failure:
+        raise failure[0]
+    return result[0]
 
 
 def _shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
@@ -292,12 +341,16 @@ def dwt_fwd_2d_sharded(
     # is the kernels' own interior math under XLA inside shard_map; a
     # per-shard Pallas routing lands behind the same flag when validated
     scheme="cdf53",
+    timeout_s: Optional[float] = None,
 ) -> Pyramid2D:
     """Row-sharded multi-level 2D forward transform over ``mesh[axis]``.
 
     Bit-exact vs :func:`repro.kernels.dwt_fwd_2d_multi` for the same
     scheme; only the scheme's halo rows move between devices (one
-    ppermute per direction per level).
+    ppermute per direction per level).  ``timeout_s`` arms a host-side
+    collective watchdog: a stuck mesh neighbor surfaces as
+    :class:`~repro.resilience.errors.CollectiveTimeoutError` instead of
+    hanging the caller forever.
     """
     _check_mode(mode)
     sch = S.get_scheme(scheme)
@@ -305,7 +358,10 @@ def dwt_fwd_2d_sharded(
         raise ValueError(f"need a (..., H, W) input, got {x.shape}")
     check_shardable(x.shape[-2], x.shape[-1], mesh.shape[axis], levels, sch)
     fn = _fwd_sharded_fn(mesh, axis, levels, mode, sch, x.ndim)
-    return fn(x.astype(_compute_dtype(x.dtype)))
+    return _watchdogged(
+        lambda: fn(x.astype(_compute_dtype(x.dtype))),
+        "dwt_fwd_2d_sharded", timeout_s,
+    )
 
 
 def dwt_inv_2d_sharded(
@@ -315,8 +371,10 @@ def dwt_inv_2d_sharded(
     axis: str = "data",
     backend: Optional[str] = None,  # noqa: ARG001 - see dwt_fwd_2d_sharded
     scheme="cdf53",
+    timeout_s: Optional[float] = None,
 ) -> Array:
-    """Inverse of :func:`dwt_fwd_2d_sharded` (same exchange pattern)."""
+    """Inverse of :func:`dwt_fwd_2d_sharded` (same exchange pattern,
+    same optional collective watchdog)."""
     _check_mode(mode)
     sch = S.get_scheme(scheme)
     levels = len(pyr.details)
@@ -334,7 +392,7 @@ def dwt_inv_2d_sharded(
             for lh, hl, hh in pyr.details
         ),
     )
-    return fn(cast)
+    return _watchdogged(lambda: fn(cast), "dwt_inv_2d_sharded", timeout_s)
 
 
 # ---------------------------------------------------------------------------

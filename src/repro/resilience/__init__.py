@@ -1,0 +1,73 @@
+"""Fault injection, self-healing storage, and graceful degradation.
+
+``repro.resilience`` is the chaos-engineering layer over the lossless
+pipeline: the paper's whole value proposition is bit-exactness, so any
+silent corruption anywhere in the quantize -> DWT -> Rice -> store ->
+serve chain destroys the one property the system reproduces.  This
+package makes every fault either *recover bit-exactly*, *degrade with a
+typed warning*, or *fail with a typed error* — never silently corrupt:
+
+    inject.py  deterministic fault-injection harness: seeded byte/bit
+               corrupters for containers and checkpoint files, plus
+               named, armable fault sites threaded through ckpt save,
+               the kernel dispatch, the sharded collectives and the
+               serve engine — each fault addressable and replayable
+    errors.py  the typed error/warning taxonomy every layer raises from
+
+Consumers of the taxonomy: ``codec/container.py`` (WZRC v2 per-band
+CRCs + XOR parity self-healing), ``ckpt/checkpoint.py`` (atomic save,
+async error surfacing, parity-healing restore), ``kernels/backend.py``
+(pallas -> xla degrade ladder), ``kernels/sharded.py`` (collective
+watchdog), ``serve/serve_step.py`` (deadlines, bounded retry, load
+shedding).  See DESIGN.md §12 and ``tests/test_resilience.py``
+(``pytest -m chaos``).
+"""
+from repro.resilience.errors import (  # noqa: F401
+    CheckpointIntegrityError,
+    CollectiveTimeoutError,
+    DeadlineExceededError,
+    DegradedRestoreWarning,
+    LoadShedError,
+    ResilienceError,
+    ResilienceWarning,
+    RetryExhaustedError,
+    RetryWarning,
+)
+from repro.resilience.inject import (  # noqa: F401
+    FAULT_CLASSES,
+    Fault,
+    InjectedFault,
+    arm,
+    armed,
+    check,
+    corrupt,
+    disarm,
+    flip_bit,
+    flip_byte,
+    reset,
+    truncate,
+)
+
+__all__ = [
+    "CheckpointIntegrityError",
+    "CollectiveTimeoutError",
+    "DeadlineExceededError",
+    "DegradedRestoreWarning",
+    "LoadShedError",
+    "ResilienceError",
+    "ResilienceWarning",
+    "RetryExhaustedError",
+    "RetryWarning",
+    "FAULT_CLASSES",
+    "Fault",
+    "InjectedFault",
+    "arm",
+    "armed",
+    "check",
+    "corrupt",
+    "disarm",
+    "flip_bit",
+    "flip_byte",
+    "reset",
+    "truncate",
+]

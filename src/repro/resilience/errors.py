@@ -1,0 +1,84 @@
+"""Typed error and warning taxonomy for the resilience subsystem.
+
+The chaos invariant (tests/test_resilience.py, DESIGN.md §12) is that
+every injected fault class resolves to exactly one of three outcomes:
+
+  1. **bit-exact recovery** — the damaged artifact reconstructs exactly
+     (per-band CRC + XOR parity in the WZRC v2 container, resume from
+     the previous intact checkpoint, retry-then-succeed in serve);
+  2. **documented degradation** — a slower-but-correct path takes over
+     and a *typed warning* names the cliff (``BackendDegradeWarning``
+     for pallas->xla, :class:`ResilienceWarning` subclasses elsewhere);
+  3. **typed error** — the failure surfaces as one of the classes below
+     (every one a :class:`ResilienceError`), never a bare IndexError /
+     struct.error / silent wrong answer.
+
+Nothing in this module imports jax — the taxonomy must be importable
+from the stdlib-only layers (gate.py fixtures, the injection harness).
+"""
+from __future__ import annotations
+
+
+class ResilienceError(RuntimeError):
+    """Base class for every typed failure the resilience layer raises."""
+
+
+class DeadlineExceededError(ResilienceError):
+    """A serve request missed its per-request deadline.
+
+    Attached to the request (``TransformRequest.error``) rather than
+    raised through the engine: one late request must not poison the
+    batch it would have ridden in.
+    """
+
+
+class RetryExhaustedError(ResilienceError):
+    """A bounded-retry policy ran out of attempts.
+
+    ``__cause__`` carries the last underlying failure.
+    """
+
+
+class LoadShedError(ResilienceError):
+    """Admission control rejected a request (queue over budget).
+
+    Raised from ``WaveletServeEngine.submit`` so backpressure reaches
+    the caller synchronously instead of growing an unbounded queue.
+    """
+
+
+class CollectiveTimeoutError(ResilienceError):
+    """A watchdogged collective did not complete within its deadline.
+
+    Surfaces a stuck mesh neighbor as an error the controller can act on
+    (evict/reshard/restart) instead of hanging the host forever inside
+    the runtime.
+    """
+
+
+class CheckpointIntegrityError(ResilienceError, OSError):
+    """A checkpoint leaf failed its integrity check and could not heal.
+
+    Subclasses ``OSError`` (== ``IOError``) so seed-era callers catching
+    ``IOError`` on restore keep working; the message always contains
+    ``"checksum"`` for the same reason.
+    """
+
+
+class ResilienceWarning(RuntimeWarning):
+    """Base category for degraded-but-correct resilience outcomes.
+
+    A dedicated category (like ``kernels.backend.BackendDegradeWarning``)
+    so operators can filter or escalate resilience notices independently
+    of generic RuntimeWarnings; the tier-1 suite ignores exactly this
+    category while escalating every other RuntimeWarning to an error.
+    """
+
+
+class DegradedRestoreWarning(ResilienceWarning):
+    """A checkpoint leaf failed its whole-file checksum but decoded via
+    the container's per-band CRC + parity self-healing path."""
+
+
+class RetryWarning(ResilienceWarning):
+    """A transient failure was retried (and eventually succeeded)."""

@@ -11,6 +11,8 @@ standard static-batching serving pattern expressible in pure pjit.
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -20,6 +22,14 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+from repro.resilience import inject
+from repro.resilience.errors import (
+    DeadlineExceededError,
+    LoadShedError,
+    ResilienceWarning,
+    RetryExhaustedError,
+    RetryWarning,
+)
 
 PyTree = Any
 
@@ -141,6 +151,8 @@ class TransformRequest:
     pyramid: Optional[Any] = None  # Pyramid2D/PyramidND result (when served)
     encoded: Optional[bytes] = None  # WZRC container (encoded-response route)
     done: bool = False
+    submitted_at: Optional[float] = None  # monotonic clock, set by submit()
+    error: Optional[Exception] = None  # per-request failure (deadline, encode)
 
 
 @dataclass
@@ -161,6 +173,27 @@ class WaveletServeEngine:
     clients reconstruct the pyramid (or the original samples, the
     integer transform being lossless) with ``codec.decode_pyramid`` /
     ``codec.inverse_transform`` and no out-of-band metadata.
+
+    Overload and failure semantics (DESIGN.md §12):
+
+      * admission control — ``submit`` raises
+        :class:`~repro.resilience.errors.LoadShedError` once the queue
+        holds ``max_queue`` requests, so backpressure reaches the client
+        synchronously instead of growing an unbounded queue;
+      * per-request deadlines — with ``deadline_s`` set, a request that
+        waited longer than its deadline is dropped from the batch it
+        would have ridden in and comes back with ``error`` set to
+        :class:`~repro.resilience.errors.DeadlineExceededError` (one
+        late request never poisons the others);
+      * bounded retry — a transform failure (transient device loss, an
+        injected ``serve.transform`` chaos fault) retries up to
+        ``max_retries`` times with exponential backoff, warning
+        :class:`~repro.resilience.errors.RetryWarning` per attempt;
+        exhaustion re-queues the batch (no request is lost) and raises
+        :class:`~repro.resilience.errors.RetryExhaustedError`;
+      * encode degradation — a response-encode failure attaches the
+        error to that request only; the transform result (the pyramid)
+        still serves.
     """
 
     height: int
@@ -174,6 +207,10 @@ class WaveletServeEngine:
     encode_response: bool = False  # attach WZRC bytes to served requests
     mesh: Optional[Any] = None  # jax.sharding.Mesh -> sharded transform
     mesh_axis: str = "data"
+    max_queue: int = 1024  # admission budget: submit() sheds beyond this
+    deadline_s: Optional[float] = None  # per-request deadline (from submit)
+    max_retries: int = 2  # transform retries after the first attempt
+    retry_backoff_s: float = 0.05  # backoff base: 1x, 2x, 4x, ...
 
     def __post_init__(self):
         from repro.core import lifting as _lifting
@@ -181,6 +218,10 @@ class WaveletServeEngine:
 
         if self.batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {self.batch_slots}")
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
         _schemes.get_scheme(self.scheme)  # fail fast on unknown names
         if self.depth is not None:
             _lifting.check_levels_nd(
@@ -219,7 +260,54 @@ class WaveletServeEngine:
                 f"{req.image.dtype}; quantize client-side "
                 "(core.compression.quantize) before submitting"
             )
+        if len(self._pending) >= self.max_queue:
+            raise LoadShedError(
+                f"serve queue at its admission budget ({self.max_queue} "
+                f"requests); request {req.uid} shed — back off and resubmit"
+            )
+        req.submitted_at = time.monotonic()
         self._pending.append(req)
+
+    def _expire_overdue(self) -> List[TransformRequest]:
+        """Pull deadline-missed requests out of the queue (typed error)."""
+        if self.deadline_s is None:
+            return []
+        now = time.monotonic()
+        overdue, live = [], []
+        for r in self._pending:
+            waited = now - (r.submitted_at or now)
+            if waited > self.deadline_s:
+                r.error = DeadlineExceededError(
+                    f"request {r.uid} waited {waited:.3f}s, over its "
+                    f"{self.deadline_s}s deadline"
+                )
+                overdue.append(r)
+            else:
+                live.append(r)
+        self._pending = live
+        return overdue
+
+    def _transform_with_retry(self, batch: jax.Array):
+        """Bounded-backoff retry around the batched transform."""
+        attempts = self.max_retries + 1
+        for attempt in range(attempts):
+            try:
+                inject.check("serve.transform")
+                return self._transform(batch)
+            except Exception as e:  # noqa: BLE001 - transient device faults
+                if attempt + 1 >= attempts:
+                    raise RetryExhaustedError(
+                        f"transform failed after {attempts} attempts: "
+                        f"{type(e).__name__}: {e}"
+                    ) from e
+                warnings.warn(
+                    RetryWarning(
+                        f"transform attempt {attempt + 1}/{attempts} failed "
+                        f"({type(e).__name__}: {e}); retrying"
+                    ),
+                    stacklevel=3,
+                )
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
 
     def _transform(self, batch: jax.Array):
         from repro import kernels as K
@@ -240,30 +328,53 @@ class WaveletServeEngine:
         )
 
     def step(self) -> List[TransformRequest]:
-        """Serve one micro-batch; returns the requests it completed."""
+        """Serve one micro-batch; returns the requests it completed.
+
+        Deadline-missed requests come back alongside the served ones,
+        with ``done=False`` and ``error`` set — check per request.
+        """
+        overdue = self._expire_overdue()
         if not self._pending:
-            return []
+            return overdue
         active = self._pending[: self.batch_slots]
         self._pending = self._pending[self.batch_slots :]
         # static batch shape: unfilled slots repeat row 0 (discarded)
         batch = np.zeros((self.batch_slots,) + self.bucket_shape, np.int32)
         for i, r in enumerate(active):
             batch[i] = r.image
-        pyr = self._transform(jnp.asarray(batch))
+        try:
+            pyr = self._transform_with_retry(jnp.asarray(batch))
+        except RetryExhaustedError:
+            # no request is lost: the batch goes back to the queue head
+            # (still deadline-governed) while the error reaches the caller
+            self._pending = active + self._pending
+            raise
         for i, r in enumerate(active):
             r.pyramid = jax.tree_util.tree_map(lambda b, i=i: b[i], pyr)
             if self.encode_response:
                 from repro.codec import container
 
-                r.encoded = container.encode_pyramid(
-                    r.pyramid,
-                    scheme=self.scheme,
-                    mode=self.mode,
-                    ndim=3 if self.depth is not None else None,
-                    backend=self.backend,
-                )
+                try:
+                    inject.check("serve.encode")
+                    r.encoded = container.encode_pyramid(
+                        r.pyramid,
+                        scheme=self.scheme,
+                        mode=self.mode,
+                        ndim=3 if self.depth is not None else None,
+                        backend=self.backend,
+                    )
+                except Exception as e:  # noqa: BLE001 - degrade per request
+                    r.error = e
+                    warnings.warn(
+                        ResilienceWarning(
+                            f"response encode failed for request {r.uid} "
+                            f"({type(e).__name__}: {e}); serving the "
+                            "pyramid without its encoded bytes"
+                        ),
+                        stacklevel=2,
+                    )
             r.done = True
-        return active
+        return overdue + active
 
     def run(self, requests: List[TransformRequest]) -> List[TransformRequest]:
         for r in requests:

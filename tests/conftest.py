@@ -36,6 +36,13 @@ def pytest_configure(config):
         "filterwarnings",
         "ignore::repro.kernels.backend.BackendDegradeWarning",
     )
+    # degraded-but-correct resilience notices (retry succeeded, restore
+    # self-healed, encode degraded) are expected under chaos injection;
+    # tests assert them explicitly with pytest.warns where they matter
+    config.addinivalue_line(
+        "filterwarnings",
+        "ignore::repro.resilience.errors.ResilienceWarning",
+    )
     # CI lanes (.github/workflows/ci.yml): the PR lane runs -m "not slow"
     # for fast feedback; the main-branch lane runs the full suite.
     config.addinivalue_line(
@@ -47,4 +54,11 @@ def pytest_configure(config):
         "markers",
         "sharded: spawns subprocesses with a forced multi-device CPU mesh "
         "(XLA_FLAGS=--xla_force_host_platform_device_count)",
+    )
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection suite (tests/test_resilience.py) — every "
+        "injected fault must recover bit-exactly, degrade with a typed "
+        "warning, or fail with a typed error; CI runs it as its own lane "
+        "with a fixed REPRO_CHAOS_SEED",
     )

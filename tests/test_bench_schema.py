@@ -70,3 +70,25 @@ def test_codec_section_shape_and_types():
         row = codec[section]
         assert row["wz_rice_bytes"] <= row["zlib_bytes"], section
         assert row["ratio_vs_zlib"] >= 1.0, section
+
+
+def test_resilience_section_shape_and_outcomes():
+    """The checked-in resilience section must carry the measured chaos
+    outcomes: a one-band parity cost, a healed single-band decode, and
+    every fault class landing on its gate-pinned outcome."""
+    from repro.resilience import FAULT_CLASSES
+
+    res = _bench()["resilience"]
+    assert 0 < res["parity_overhead_ratio"] < 1
+    assert res["parity_overhead_bytes"] > 0
+    assert res["single_band_recovery"] is True
+    assert set(res["recovery"]) == set(FAULT_CLASSES)
+    assert gate.check_resilience(_bench()) == []
+
+
+def test_gate_fault_taxonomy_matches_registry():
+    """gate.py is stdlib-only, so its fault-class expectations are a
+    literal — keep it in lockstep with the live injection taxonomy."""
+    from repro.resilience import FAULT_CLASSES
+
+    assert set(gate.EXPECTED_RECOVERY) == set(FAULT_CLASSES)

@@ -385,7 +385,10 @@ def test_ckpt_wz_rice_roundtrip_and_manifest(tmp_path):
     assert {k: m["enc"] for k, m in metas.items()} == {
         "conv": "3d", "mat": "2d", "vec": "1d", "s": "1d",
     }
-    assert all(m["enc_version"] == 1 for m in metas.values())
+    # wz-rice leaves ride the self-healing WZRC v2 container (per-band
+    # CRCs + parity); the zlib wz family stays enc_version 1
+    assert all(m["enc_version"] == 2 for m in metas.values())
+    assert all(m["parity"] is True for m in metas.values())
 
 
 def test_ckpt_enc_version_recorded_for_all_wavelet_codecs(tmp_path):
@@ -401,7 +404,10 @@ def test_ckpt_enc_version_recorded_for_all_wavelet_codecs(tmp_path):
             (Path(tmp_path) / codec / "step_0000000001" / "manifest.json")
             .read_text()
         )
-        assert manifest["leaves"]["w"]["meta"]["enc_version"] == 1, codec
+        # wz-rice writes the v2 container; the zlib family stays v1 so
+        # old builds keep reading unchanged payloads
+        want = 2 if codec == "wz-rice" else 1
+        assert manifest["leaves"]["w"]["meta"]["enc_version"] == want, codec
 
 
 def test_ckpt_unknown_enc_version_rejected(tmp_path):

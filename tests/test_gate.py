@@ -78,6 +78,20 @@ def _good_bench() -> dict:
                 "zlib_bytes": 180000, "ratio_vs_zlib": 2.0,
             },
         },
+        "resilience": {
+            "container_bytes": 50000,
+            "parity_overhead_bytes": 9000,
+            "parity_overhead_ratio": 0.18,
+            "single_band_recovery": True,
+            "recovery": {
+                "bit-flip": "recovered",
+                "truncation": "typed-error",
+                "save-crash": "previous-intact",
+                "pallas-failure": "degraded",
+                "stuck-neighbor": "typed-error",
+                "deadline-miss": "typed-error",
+            },
+        },
     }
 
 
@@ -220,6 +234,60 @@ def test_codec_missing_ratio_key_fails_schema():
 
 def test_summary_mentions_codec():
     assert "codec lossless" in gate.summary(_good_bench())
+
+
+def test_resilience_silent_corruption_fails():
+    """A bit-flip that decodes without healing is silent corruption —
+    the one outcome the resilience layer exists to rule out."""
+    bench = _good_bench()
+    bench["resilience"]["recovery"]["bit-flip"] = "silent"
+    fails = gate.check_resilience(bench)
+    assert any("bit-flip" in f and "'silent'" in f for f in fails)
+
+
+def test_resilience_heal_break_fails():
+    bench = _good_bench()
+    bench["resilience"]["single_band_recovery"] = False
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("did NOT heal" in f for f in fails)
+
+
+def test_resilience_parity_ratio_bounds():
+    """Parity must cost something (>0: the group really exists) but
+    never approach a full duplicate (<1)."""
+    for bad in (0, 1.0, 2.5, -0.1, True):
+        bench = _good_bench()
+        bench["resilience"]["parity_overhead_ratio"] = bad
+        fails = gate.check_resilience(bench)
+        assert any("parity_overhead_ratio" in f for f in fails), bad
+
+
+def test_resilience_missing_fault_class_fails():
+    bench = _good_bench()
+    del bench["resilience"]["recovery"]["stuck-neighbor"]
+    fails = gate.check_resilience(bench)
+    assert any("stuck-neighbor" in f and "missing" in f for f in fails)
+
+
+def test_resilience_unknown_fault_class_fails():
+    """Taxonomy and gate move together: a new fault class emitted by the
+    bench without a pinned expectation here must fail loudly."""
+    bench = _good_bench()
+    bench["resilience"]["recovery"]["cosmic-ray"] = "recovered"
+    fails = gate.check_resilience(bench)
+    assert any("cosmic-ray" in f and "unknown fault class" in f for f in fails)
+
+
+def test_resilience_missing_section_fails_schema():
+    bench = _good_bench()
+    del bench["resilience"]
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("missing section 'resilience'" in f for f in fails)
+
+
+def test_summary_mentions_resilience():
+    s = gate.summary(_good_bench())
+    assert "resilience parity=0.18" in s and "band-heal=True" in s
 
 
 def test_main_exit_codes(tmp_path):
