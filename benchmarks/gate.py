@@ -32,6 +32,11 @@ Gates (fail = non-zero exit, every failure listed):
     band heals bit-exactly, and every fault class in the injection
     taxonomy lands on its expected outcome (recover / degrade /
     typed-error / previous-intact — never silent).
+  * Range certificates — the derived int32 safety bounds keep their
+    meaning (cdf53 pinned exactly, all positive-monotone), the checked
+    arithmetic mode turns a wrap-capable input into a typed error on
+    EVERY engine, certified inputs round-trip bit-exactly under
+    checking, and the disabled path costs nothing.
 
 This module is dependency-free (stdlib only) on purpose: the gates must
 stay runnable — and unit-testable — without importing jax.
@@ -80,7 +85,36 @@ REQUIRED_SECTIONS: Dict[str, tuple] = {
         "single_band_recovery",
         "recovery",
     ),
+    "ranges": (
+        "certificates",
+        "wraparound",
+        "roundtrip_exact",
+        "overhead_off_x",
+        "overhead_on_x",
+    ),
 }
+
+# every engine the checked mode must cover; a wrap-capable input through
+# any of them must surface as IntegerOverflowError ("typed-error"), never
+# as silently wrong bands ("silent")
+CHECKED_ENGINES = (
+    "oracle-1d",
+    "fused-1d",
+    "fused-2d",
+    "fused-3d",
+    "tiled-2d",
+    "sharded-2d",
+)
+
+# the derived cdf53 single-level 1D certificate: |x| <= 2^29 - 1 keeps
+# every lifting intermediate inside int32.  Pinned like TABLE2_EXACT —
+# a change means the tracer (or the scheme registry) changed semantics.
+CDF53_SAFE_ABS_1D_L1 = 536870911
+
+# checked=False must be the seed's code path: one predicate, no tracing.
+# The regression this catches (the disabled path starting to run the
+# host interval walk) measures 5x+, so the bound is generous to CI noise.
+MAX_CHECKED_OFF_OVERHEAD = 2.0
 
 # fault taxonomy (repro/resilience/inject.py FAULT_CLASSES) and the
 # outcome the degradation ladder must deliver for each: recover
@@ -326,6 +360,71 @@ def check_resilience(bench: dict) -> List[str]:
     return fails
 
 
+def check_ranges(bench: dict) -> List[str]:
+    """Gates over the range-certificate / checked-arithmetic section.
+
+    Pins the overflow-safety invariant: the certificates stay derived
+    (the cdf53 value is pinned exactly; all are positive and shrink as
+    dimensions multiply the cascade depth), EVERY engine's checked mode
+    turns a wrap-capable input into a typed error, certified inputs
+    round-trip bit-exactly under checking, and the disabled path costs
+    nothing."""
+    fails = []
+    r = bench["ranges"]
+    certs = r["certificates"]
+    for need in REQUIRED_SCHEMES:
+        if need not in certs:
+            fails.append(f"ranges: certificate row missing for {need!r}")
+    for name, row in certs.items():
+        for key in ("safe_abs_1d_l1", "safe_abs_2d_l2", "int16_levels_3d"):
+            if key not in row:
+                fails.append(f"ranges certificate [{name!r}] missing {key!r}")
+        if "safe_abs_1d_l1" in row and "safe_abs_2d_l2" in row:
+            if not (0 < row["safe_abs_2d_l2"] <= row["safe_abs_1d_l1"]):
+                fails.append(
+                    f"ranges {name}: certificates not positive-monotone "
+                    f"(1d_l1={row['safe_abs_1d_l1']}, "
+                    f"2d_l2={row['safe_abs_2d_l2']})"
+                )
+    got = certs.get("cdf53", {}).get("safe_abs_1d_l1")
+    if got != CDF53_SAFE_ABS_1D_L1:
+        fails.append(
+            f"ranges cdf53: derived certificate {got} != pinned "
+            f"{CDF53_SAFE_ABS_1D_L1} — the interval tracer changed meaning"
+        )
+    wrap = r["wraparound"]
+    for eng in CHECKED_ENGINES:
+        if eng not in wrap:
+            fails.append(f"ranges: engine {eng!r} missing from wraparound")
+        elif wrap[eng] != "typed-error":
+            fails.append(
+                f"ranges {eng}: checked mode outcome {wrap[eng]!r} on a "
+                "wrapping input — overflow passed silently"
+            )
+    for eng in wrap:
+        if eng not in CHECKED_ENGINES:
+            fails.append(
+                f"ranges: unknown engine {eng!r} emitted (engine list and "
+                "gate must move together)"
+            )
+    if not r["roundtrip_exact"]:
+        fails.append(
+            "ranges: certificate-respecting input did not round-trip "
+            "bit-exactly under checked mode"
+        )
+    off = r["overhead_off_x"]
+    if not (isinstance(off, (int, float)) and 0 < off <= MAX_CHECKED_OFF_OVERHEAD):
+        fails.append(
+            f"ranges: checked-off overhead {off!r}x exceeds "
+            f"{MAX_CHECKED_OFF_OVERHEAD}x — the disabled path is not free"
+        )
+    if not (isinstance(r["overhead_on_x"], (int, float)) and r["overhead_on_x"] > 0):
+        fails.append(
+            f"ranges: overhead_on_x {r['overhead_on_x']!r} non-positive"
+        )
+    return fails
+
+
 def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
     """Every gate failure, most structural first.  ANY schema failure
     stops before the behavioural gates: those index the payload freely
@@ -340,6 +439,7 @@ def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
         + check_3d(bench)
         + check_codec(bench)
         + check_resilience(bench)
+        + check_ranges(bench)
     )
 
 
@@ -361,7 +461,9 @@ def summary(bench: dict) -> str:
         f"rice-vs-zlib {bench['codec']['smooth']['ratio_vs_zlib']}x smooth "
         f"/ {bench['codec']['noisy']['ratio_vs_zlib']}x noisy; "
         f"resilience parity={bench['resilience']['parity_overhead_ratio']} "
-        f"band-heal={bench['resilience']['single_band_recovery']} "
+        f"band-heal={bench['resilience']['single_band_recovery']}; "
+        f"ranges checked={len(bench['ranges']['wraparound'])} engines "
+        f"typed, off-cost={bench['ranges']['overhead_off_x']}x "
         f"(backend={bench['default_backend']}, platform={bench['platform']})"
     )
 

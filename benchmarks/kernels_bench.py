@@ -267,6 +267,122 @@ def _resilience_section(rng) -> dict:
     }
 
 
+def _ranges_section(rng) -> dict:
+    """Range-certificate section: derived int32 safe bounds per scheme,
+    the checked mode's outcome on a wrap-capable input through every
+    engine, a certified round-trip, and the checked-mode cost measured
+    both ways (off must be free, on pays the host interval walk).
+
+    gate.py pins all of it: every engine must report ``typed-error``,
+    the cdf53 certificate must keep its derived value, and the
+    checked-off ratio must stay ~1.0 (a regression here means the
+    disabled path started tracing)."""
+    import os
+
+    from jax.sharding import Mesh
+
+    from repro.core import ranges
+    from repro.kernels import sharded
+    from repro.resilience.errors import IntegerOverflowError
+
+    i32 = np.iinfo(np.int32)
+    certs = {}
+    for name in K.available_schemes():
+        c1 = ranges.range_certificate(name, 1, np.int32)
+        c2 = ranges.range_certificate(name, 2, np.int32, ndim=2)
+        certs[name] = {
+            "safe_abs_1d_l1": int(c1.hi),
+            "safe_abs_2d_l2": int(c2.hi),
+            "growth_bits_1d_l1": round(c1.growth_bits, 2),
+            "int16_levels_3d": int(
+                ranges.certified_levels(
+                    name, np.int32, (-32767, 32767), ndim=3
+                )
+            ),
+        }
+
+    def outcome(fn):
+        try:
+            fn()
+            return "silent"
+        except IntegerOverflowError:
+            return "typed-error"
+
+    hot1 = jnp.full((2, 64), i32.max, jnp.int32)
+    hot2 = jnp.full((2, 32, 32), i32.max, jnp.int32)
+    hot3 = jnp.full((8, 8, 8), i32.max, jnp.int32)
+    wraparound = {
+        "oracle-1d": outcome(
+            lambda: lifting_ref.dwt_fwd(hot1, levels=2, checked=True)
+        ),
+        "fused-1d": outcome(lambda: K.dwt_fwd(hot1, levels=2, checked=True)),
+        "fused-2d": outcome(
+            lambda: K.dwt_fwd_2d_multi(hot2, levels=2, checked=True)
+        ),
+        "fused-3d": outcome(
+            lambda: K.dwt_fwd_nd(hot3, levels=2, ndim=3, checked=True)
+        ),
+    }
+    # tiled engine: force the planner onto the tile path via its override
+    prev_tile = os.environ.get("REPRO_DWT_TILE")
+    os.environ["REPRO_DWT_TILE"] = "16"
+    try:
+        wraparound["tiled-2d"] = outcome(
+            lambda: K.dwt_fwd_2d_multi(hot2, levels=2, checked=True)
+        )
+    finally:
+        if prev_tile is None:
+            os.environ.pop("REPRO_DWT_TILE", None)
+        else:
+            os.environ["REPRO_DWT_TILE"] = prev_tile
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    wraparound["sharded-2d"] = outcome(
+        lambda: sharded.dwt_fwd_2d_sharded(
+            jnp.full((32, 32), i32.max, jnp.int32), mesh, levels=2,
+            checked=True,
+        )
+    )
+
+    # certificate-respecting inputs flow through checked mode bit-exactly
+    lim = min(certs["cdf53"]["safe_abs_2d_l2"], 4096)
+    ok_img = jnp.asarray(rng.integers(-lim, lim + 1, (2, 64, 64)), jnp.int32)
+    p = K.dwt_fwd_2d_multi(ok_img, levels=2, checked=True)
+    roundtrip_exact = bool(
+        np.array_equal(
+            np.asarray(K.dwt_inv_2d_multi(p, checked=True)),
+            np.asarray(ok_img),
+        )
+    )
+
+    # checked-off cost: drift-cancelled interleaved pairs (same protocol
+    # as the pyramid comparison) of default-off vs explicit checked=False
+    xb = jnp.asarray(rng.integers(-4096, 4096, (256, 256)), jnp.int32)
+    base = lambda a: K.dwt_fwd_2d_multi(a, levels=2)  # noqa: E731
+    off = lambda a: K.dwt_fwd_2d_multi(a, levels=2, checked=False)  # noqa: E731
+    ratios = []
+    for i in range(4):
+        if i % 2 == 0:
+            b = _time_us(base, xb, iters=10)
+            o = _time_us(off, xb, iters=10)
+        else:
+            o = _time_us(off, xb, iters=10)
+            b = _time_us(base, xb, iters=10)
+        ratios.append(o / b)
+    ratios.sort()
+    overhead_off = (ratios[1] + ratios[2]) / 2
+    t_on = _time_us(
+        lambda a: K.dwt_fwd_2d_multi(a, levels=2, checked=True), xb, iters=3
+    )
+    t_base = _time_us(base, xb, iters=10)
+    return {
+        "certificates": certs,
+        "wraparound": wraparound,
+        "roundtrip_exact": roundtrip_exact,
+        "overhead_off_x": round(overhead_off, 3),
+        "overhead_on_x": round(t_on / t_base, 2),
+    }
+
+
 def run_json() -> Tuple[list, dict]:
     rng = np.random.default_rng(7)
     x1d = jnp.asarray(rng.integers(-4096, 4096, size=SHAPE_1D), jnp.int32)
@@ -462,6 +578,7 @@ def run_json() -> Tuple[list, dict]:
 
     codec = _codec_section(rng)
     resilience = _resilience_section(rng)
+    ranges_sec = _ranges_section(rng)
 
     payload = {
         "platform": B.platform(),
@@ -522,6 +639,7 @@ def run_json() -> Tuple[list, dict]:
         },
         "codec": codec,
         "resilience": resilience,
+        "ranges": ranges_sec,
     }
     rows = [
         ("kernels.platform", B.platform(), "probed once at import"),
@@ -682,6 +800,43 @@ def run_json() -> Tuple[list, dict]:
                 "measured fault outcome (gate.py pins the expectation)",
             )
         )
+    for name, cert in ranges_sec["certificates"].items():
+        rows.append(
+            (
+                f"kernels.ranges.{name}.safe_abs_1d_l1",
+                cert["safe_abs_1d_l1"],
+                f"largest |input| certified int32-safe (1 level, 1D); "
+                f"growth {cert['growth_bits_1d_l1']} bits/level",
+            )
+        )
+    for eng, out in ranges_sec["wraparound"].items():
+        rows.append(
+            (
+                f"kernels.ranges.checked.{eng}",
+                out,
+                "checked mode on an int32-wrapping input (gate pins "
+                "typed-error)",
+            )
+        )
+    rows.extend(
+        [
+            (
+                "kernels.ranges.roundtrip_exact",
+                int(ranges_sec["roundtrip_exact"]),
+                "certificate-respecting input, checked=True, bit-exact",
+            ),
+            (
+                "kernels.ranges.overhead_off_x",
+                ranges_sec["overhead_off_x"],
+                "checked=False vs default (drift-cancelled; ~1.0 = free)",
+            ),
+            (
+                "kernels.ranges.overhead_on_x",
+                ranges_sec["overhead_on_x"],
+                "checked=True vs default (host interval walk cost)",
+            ),
+        ]
+    )
     return rows, payload
 
 

@@ -106,6 +106,24 @@ def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
     return out
 
 
+def _wz_quant_limit(heuristic: float, scheme: str, levels: int, ndim: int) -> float:
+    """Quantization limit for an int16-packed wavelet leaf.
+
+    The ``32767 >> k`` heuristics below assume cdf53-style ~1 bit of
+    band growth per level per axis; schemes with hotter steps (97m) grow
+    faster, so the limit is clamped to the DERIVED safe input magnitude
+    (``ranges.band_safe_input``: largest input whose band values provably
+    fit int16 and whose intermediates fit int32).  ``min`` keeps the
+    historical payloads byte-identical wherever the heuristic was
+    already safe."""
+    from repro.core import ranges
+
+    derived = ranges.band_safe_input(
+        scheme, levels, 32767, mode="paper", ndim=ndim
+    )
+    return float(min(heuristic, max(derived, 1)))
+
+
 def _quantize_for_wz(arr: np.ndarray, lim: float) -> Tuple[np.ndarray, float]:
     scale = float(np.max(np.abs(arr.astype(np.float32))) or 1.0) / lim
     scale = max(scale, 1e-12)
@@ -139,7 +157,11 @@ def _encode_wz(
 
     # transform headroom: the lifting bands grow ~1 bit/level, so quantize
     # to int16 >> levels so the packed bands still fit int16 exactly
-    q, scale = _quantize_for_wz(arr, float(32767 >> (wavelet_levels + 1)))
+    # (clamped by the scheme's derived band-growth certificate)
+    lim = _wz_quant_limit(
+        float(32767 >> (wavelet_levels + 1)), scheme, wavelet_levels, 1
+    )
+    q, scale = _quantize_for_wz(arr, lim)
     flat = _pad_to_levels(q.reshape(-1), wavelet_levels)
     pyr = K.dwt_fwd(jnp.asarray(flat[None]), levels=wavelet_levels, scheme=scheme)
     packed = np.asarray(K.pack(pyr))[0].astype(np.int16)
@@ -181,7 +203,9 @@ def _encode_wz2d(
     h, w = arr.shape[-2], arr.shape[-1]
     levels = _wz2d_levels(h, w, wavelet_levels)
     # 2D headroom: ~1 bit per level per AXIS -> 2 bits per level
-    q, scale = _quantize_for_wz(arr, float(32767 >> (2 * levels + 1)))
+    # (clamped by the scheme's derived band-growth certificate)
+    lim = _wz_quant_limit(float(32767 >> (2 * levels + 1)), scheme, levels, 2)
+    q, scale = _quantize_for_wz(arr, lim)
     pyr = K.dwt_fwd_2d_multi(
         jnp.asarray(q.reshape(-1, h, w)), levels=levels, scheme=scheme
     )
@@ -217,7 +241,9 @@ def _encode_wz3d(
     d, h, w = arr.shape[-3], arr.shape[-2], arr.shape[-1]
     levels = _wz3d_levels(d, h, w, wavelet_levels)
     # 3D headroom: ~1 bit per level per AXIS -> 3 bits per level
-    q, scale = _quantize_for_wz(arr, float(32767 >> (3 * levels + 1)))
+    # (clamped by the scheme's derived band-growth certificate)
+    lim = _wz_quant_limit(float(32767 >> (3 * levels + 1)), scheme, levels, 3)
+    q, scale = _quantize_for_wz(arr, lim)
     pyr = K.dwt_fwd_nd(
         jnp.asarray(q.reshape(-1, d, h, w)), levels=levels, scheme=scheme,
         ndim=3,
@@ -238,18 +264,34 @@ def _encode_wzrice(
     per-block Rice coder, so quantization is always to the FULL int16
     range — no ``32767 >> levels`` headroom shift, meaning restore error
     does not grow with decomposition depth the way the zlib wz family's
-    does.
+    does.  In exchange the pyramid DEPTH is capped at the scheme's
+    derived certificate (``ranges.certified_levels`` for +-32767 int32
+    samples), so a hot scheme can never push an intermediate past int32.
     """
     import jax.numpy as jnp
 
     from repro.codec import container
-    from repro.core import lifting
+    from repro.core import lifting, ranges
 
     q, scale = _quantize_for_wz(arr, 32767.0)
     enc = _wavelet_route(arr, want_3d=True)
+
+    def cert_cap(nd: int) -> int:
+        # quantization stays FULL int16 here (no headroom shift), so cap
+        # the pyramid DEPTH instead: the deepest cascade the scheme's
+        # derived certificate admits for +-32767 int32 samples
+        return max(
+            1,
+            ranges.certified_levels(
+                scheme, np.int32, (-32767, 32767), mode="paper", ndim=nd
+            ),
+        )
+
     if enc == "3d":
         d, h, w = arr.shape[-3:]
-        levels = max(1, min(wavelet_levels, lifting.max_levels_nd((d, h, w))))
+        levels = max(
+            1, min(wavelet_levels, lifting.max_levels_nd((d, h, w)), cert_cap(3))
+        )
         pyr = K.dwt_fwd_nd(
             jnp.asarray(q.reshape(-1, d, h, w)), levels=levels, scheme=scheme,
             ndim=3,
@@ -257,13 +299,18 @@ def _encode_wzrice(
         ndim = 3
     elif enc == "2d":
         h, w = arr.shape[-2:]
-        levels = max(1, min(wavelet_levels, lifting.max_levels_2d(h, w)))
+        levels = max(
+            1, min(wavelet_levels, lifting.max_levels_2d(h, w), cert_cap(2))
+        )
         pyr = K.dwt_fwd_2d_multi(
             jnp.asarray(q.reshape(-1, h, w)), levels=levels, scheme=scheme
         )
         ndim = None
     else:
-        levels = max(1, min(wavelet_levels, lifting.max_levels(max(q.size, 2))))
+        levels = max(
+            1,
+            min(wavelet_levels, lifting.max_levels(max(q.size, 2)), cert_cap(1)),
+        )
         flat = _pad_to_levels(q.reshape(-1), levels)
         pyr = K.dwt_fwd(jnp.asarray(flat[None]), levels=levels, scheme=scheme)
         ndim = None

@@ -79,7 +79,8 @@ from repro.codec.errors import (
     TruncatedStreamError,
     UnsupportedVersionError,
 )
-from repro.core import lifting
+from repro.core import lifting, ranges
+from repro.core.schemes import get_scheme
 
 MAGIC = b"WZRC"
 FORMAT_VERSION = 2
@@ -250,6 +251,7 @@ def encode_pyramid(
     checksum: bool = True,
     parity: bool = False,
     version: int = FORMAT_VERSION,
+    checked: Optional[bool] = None,
 ) -> bytes:
     """Serialize an integer wavelet pyramid to a self-describing blob.
 
@@ -265,6 +267,14 @@ def encode_pyramid(
     any single damaged band reconstruct bit-exactly.  ``version=1``
     emits the legacy layout byte-for-byte (``checksum`` controls its
     whole-blob trailer) for v1 readers; v1 supports no parity.
+
+    ``checked=True`` (or the ``REPRO_DWT_CHECKED`` env toggle) validates
+    the bands against the scheme's derived int32 band-envelope
+    certificate (``repro.core.ranges.assert_encodable``) before any byte
+    is coded, so a bitstream this module emits is always one the
+    recorded inverse transform can decode without integer wraparound —
+    :class:`~repro.resilience.errors.IntegerOverflowError` instead of a
+    container full of numbers only modulo arithmetic believes in.
     """
     kind = _pyramid_kind(pyr)
     if version not in SUPPORTED_VERSIONS:
@@ -301,6 +311,17 @@ def encode_pyramid(
             raise ValueError(
                 f"malformed pyramid: band shape {tuple(band.shape)}, "
                 f"geometry expects {lead + want}"
+            )
+
+    if ranges.checked_enabled(checked) and levels > 0:
+        try:
+            get_scheme(scheme)
+        except ValueError:
+            pass  # foreign scheme name: container records it, can't derive
+        else:
+            ranges.assert_encodable(
+                bands, scheme=scheme, levels=levels, ndim=nd, mode=mode,
+                label="codec.encode_pyramid",
             )
 
     scheme_b = scheme.encode("utf-8")

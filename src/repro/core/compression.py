@@ -70,10 +70,35 @@ def _flatten_pad(g: jax.Array, levels: int) -> Tuple[jax.Array, int]:
     return flat.reshape(-1, line), n
 
 
-def quantize(g: jax.Array, scale: jax.Array) -> jax.Array:
-    """fp -> int32 with the given positive scale (shared across pods)."""
+def quantize(
+    g: jax.Array,
+    scale: jax.Array,
+    *,
+    scheme: Optional[str] = None,
+    levels: Optional[int] = None,
+    mode: str = "paper",
+    ndim: int = 1,
+) -> jax.Array:
+    """fp -> int32 with the given positive scale (shared across pods).
+
+    The limit is ``+-(2**15 - 1)`` (int16 range).  Passing ``scheme`` and
+    ``levels`` additionally clamps it to the derived overflow certificate
+    for the cascade the caller is about to run
+    (``repro.core.ranges.range_certificate``), so quantized samples can
+    never drive a lifting intermediate past int32 — for cdf53-family
+    schemes the certificate is far wider than int16 and nothing changes;
+    for hotter schemes (97m at depth) the clamp is the price of a
+    provably exact integer round trip.
+    """
     q = jnp.round(g.astype(jnp.float32) / scale)
     lim = float(2**INT_SCALE_BITS - 1)
+    if scheme is not None and levels is not None:
+        from repro.core import ranges
+
+        cert = ranges.range_certificate(
+            scheme, levels, "int32", mode=mode, ndim=ndim
+        )
+        lim = min(lim, float(cert.hi))
     return jnp.clip(q, -lim, lim).astype(jnp.int32)
 
 

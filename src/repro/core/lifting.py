@@ -45,6 +45,7 @@ from typing import List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import ranges as _ranges
 from repro.core import schemes as S
 from repro.core.schemes import (  # noqa: F401  re-exported registry surface
     LiftingScheme,
@@ -129,22 +130,40 @@ def inv_update(s: Array, d: Array, d_prev: Array, mode: str = "paper") -> Array:
 
 
 def dwt_fwd_1d(
-    x: Array, mode: str = "paper", scheme="cdf53"
+    x: Array, mode: str = "paper", scheme="cdf53", checked=None
 ) -> Tuple[Array, Array]:
     """One forward lifting level along the last axis.
 
     Returns (s, d): approximation and detail bands.
     len(s) = ceil(N/2), len(d) = floor(N/2); arbitrary N >= 2.
+
+    ``checked=True`` (or ``REPRO_DWT_CHECKED=1``) certifies the data
+    against the derived range bounds first and raises
+    :class:`~repro.resilience.errors.IntegerOverflowError` instead of
+    ever returning wrapped bands (see ``core/ranges.py``).
     """
     _check_mode(mode)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd_1d(a, mode=mode, scheme=scheme, checked=False),
+            x, scheme=scheme, levels=1, mode=mode, ndim=1,
+            label="lifting.dwt_fwd_1d",
+        )
     return S.lift_fwd_axis(promote_narrow(x), scheme, axis=-1, mode=mode)
 
 
 def dwt_inv_1d(
-    s: Array, d: Array, mode: str = "paper", scheme="cdf53"
+    s: Array, d: Array, mode: str = "paper", scheme="cdf53", checked=None
 ) -> Array:
     """One inverse lifting level (cdf53: eqs. 8-10) along the last axis."""
     _check_mode(mode)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda t: dwt_inv_1d(t[0], t[1], mode=mode, scheme=scheme,
+                                 checked=False),
+            (s, d), scheme=scheme, levels=1, mode=mode, ndim=1,
+            label="lifting.dwt_inv_1d",
+        )
     return S.lift_inv_axis(
         promote_narrow(s), promote_narrow(d), scheme, axis=-1, mode=mode
     )
@@ -167,7 +186,8 @@ class WaveletPyramid(NamedTuple):
 
 
 def dwt_fwd(
-    x: Array, levels: int = 1, mode: str = "paper", scheme="cdf53"
+    x: Array, levels: int = 1, mode: str = "paper", scheme="cdf53",
+    checked=None,
 ) -> WaveletPyramid:
     """Multi-level forward transform along the last axis.
 
@@ -176,6 +196,13 @@ def dwt_fwd(
     """
     if levels < 0:
         raise ValueError("levels must be >= 0")
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd(a, levels=levels, mode=mode, scheme=scheme,
+                              checked=False),
+            x, scheme=scheme, levels=levels, mode=mode, ndim=1,
+            label="lifting.dwt_fwd",
+        )
     s = promote_narrow(x)
     details: List[Array] = []
     for _ in range(levels):
@@ -188,8 +215,16 @@ def dwt_fwd(
     return WaveletPyramid(approx=s, details=tuple(reversed(details)))
 
 
-def dwt_inv(pyr: WaveletPyramid, mode: str = "paper", scheme="cdf53") -> Array:
+def dwt_inv(
+    pyr: WaveletPyramid, mode: str = "paper", scheme="cdf53", checked=None
+) -> Array:
     """Multi-level inverse transform."""
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda p: dwt_inv(p, mode=mode, scheme=scheme, checked=False),
+            pyr, scheme=scheme, levels=pyr.levels, mode=mode, ndim=1,
+            label="lifting.dwt_inv",
+        )
     s = promote_narrow(pyr.approx)
     for d in pyr.details:  # coarsest first
         s = S.lift_inv_axis(s, promote_narrow(d), scheme, axis=-1, mode=mode)
@@ -208,12 +243,20 @@ class Bands2D(NamedTuple):
     hh: Array
 
 
-def dwt_fwd_2d(x: Array, mode: str = "paper", scheme="cdf53") -> Bands2D:
+def dwt_fwd_2d(
+    x: Array, mode: str = "paper", scheme="cdf53", checked=None
+) -> Bands2D:
     """One 2D level over the last two axes: rows then columns.
 
     Axis-aware stencils (no transposes): the row-stage streams feed the
     column stage directly.
     """
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd_2d(a, mode=mode, scheme=scheme, checked=False),
+            x, scheme=scheme, levels=1, mode=mode, ndim=2,
+            label="lifting.dwt_fwd_2d",
+        )
     xf = promote_narrow(x)
     s_r, d_r = S.lift_fwd_axis(xf, scheme, axis=-1, mode=mode)
     ll, lh = S.lift_fwd_axis(s_r, scheme, axis=-2, mode=mode)
@@ -221,8 +264,16 @@ def dwt_fwd_2d(x: Array, mode: str = "paper", scheme="cdf53") -> Bands2D:
     return Bands2D(ll=ll, lh=lh, hl=hl, hh=hh)
 
 
-def dwt_inv_2d(bands: Bands2D, mode: str = "paper", scheme="cdf53") -> Array:
+def dwt_inv_2d(
+    bands: Bands2D, mode: str = "paper", scheme="cdf53", checked=None
+) -> Array:
     """Inverse of :func:`dwt_fwd_2d` (columns then rows)."""
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda b: dwt_inv_2d(b, mode=mode, scheme=scheme, checked=False),
+            bands, scheme=scheme, levels=1, mode=mode, ndim=2,
+            label="lifting.dwt_inv_2d",
+        )
     ll, lh, hl, hh = (promote_narrow(b) for b in bands)
     s_r = S.lift_inv_axis(ll, lh, scheme, axis=-2, mode=mode)
     d_r = S.lift_inv_axis(hl, hh, scheme, axis=-2, mode=mode)
@@ -257,27 +308,43 @@ def check_levels_2d(h: int, w: int, levels: int) -> None:
 
 
 def dwt_fwd_2d_multi(
-    x: Array, levels: int = 1, mode: str = "paper", scheme="cdf53"
+    x: Array, levels: int = 1, mode: str = "paper", scheme="cdf53",
+    checked=None,
 ) -> Pyramid2D:
     """Multi-level 2D forward transform (Mallat pyramid, recurse on LL)."""
     check_levels_2d(x.shape[-2], x.shape[-1], levels)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd_2d_multi(a, levels=levels, mode=mode,
+                                       scheme=scheme, checked=False),
+            x, scheme=scheme, levels=levels, mode=mode, ndim=2,
+            label="lifting.dwt_fwd_2d_multi",
+        )
     ll = promote_narrow(x)
     details: List[Tuple[Array, Array, Array]] = []
     for _ in range(levels):
-        bands = dwt_fwd_2d(ll, mode=mode, scheme=scheme)
+        bands = dwt_fwd_2d(ll, mode=mode, scheme=scheme, checked=False)
         ll = bands.ll
         details.append((bands.lh, bands.hl, bands.hh))
     return Pyramid2D(ll=ll, details=tuple(reversed(details)))
 
 
 def dwt_inv_2d_multi(
-    pyr: Pyramid2D, mode: str = "paper", scheme="cdf53"
+    pyr: Pyramid2D, mode: str = "paper", scheme="cdf53", checked=None
 ) -> Array:
     """Inverse of :func:`dwt_fwd_2d_multi`."""
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda p: dwt_inv_2d_multi(p, mode=mode, scheme=scheme,
+                                       checked=False),
+            pyr, scheme=scheme, levels=pyr.levels, mode=mode, ndim=2,
+            label="lifting.dwt_inv_2d_multi",
+        )
     ll = promote_narrow(pyr.ll)
     for lh, hl, hh in pyr.details:  # coarsest first
         ll = dwt_inv_2d(
-            Bands2D(ll=ll, lh=lh, hl=hl, hh=hh), mode=mode, scheme=scheme
+            Bands2D(ll=ll, lh=lh, hl=hl, hh=hh), mode=mode, scheme=scheme,
+            checked=False,
         )
     return ll
 
@@ -552,7 +619,7 @@ def max_levels_nd(shape: Tuple[int, ...]) -> int:
 
 def dwt_fwd_nd(
     x: Array, levels: int = 1, mode: str = "paper", scheme="cdf53",
-    ndim: int = 3,
+    ndim: int = 3, checked=None,
 ) -> PyramidND:
     """Multi-level N-D forward transform over the last ``ndim`` axes.
 
@@ -566,6 +633,13 @@ def dwt_fwd_nd(
     if x.ndim < ndim:
         raise ValueError(f"need >= {ndim} axes, got shape {x.shape}")
     check_levels_nd(x.shape[-ndim:], levels)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd_nd(a, levels=levels, mode=mode, scheme=scheme,
+                                 ndim=ndim, checked=False),
+            x, scheme=scheme, levels=levels, mode=mode, ndim=ndim,
+            label="lifting.dwt_fwd_nd",
+        )
     approx = promote_narrow(x)
     details: List[Tuple[Array, ...]] = []
     for _ in range(levels):
@@ -575,8 +649,16 @@ def dwt_fwd_nd(
     return PyramidND(approx=approx, details=tuple(reversed(details)))
 
 
-def dwt_inv_nd(pyr: PyramidND, mode: str = "paper", scheme="cdf53") -> Array:
+def dwt_inv_nd(
+    pyr: PyramidND, mode: str = "paper", scheme="cdf53", checked=None
+) -> Array:
     """Inverse of :func:`dwt_fwd_nd`."""
+    if pyr.details and _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda p: dwt_inv_nd(p, mode=mode, scheme=scheme, checked=False),
+            pyr, scheme=scheme, levels=pyr.levels, mode=mode, ndim=pyr.ndim,
+            label="lifting.dwt_inv_nd",
+        )
     approx = promote_narrow(pyr.approx)
     if not pyr.details:
         return approx

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import lifting as _lift
+from repro.core import ranges as _ranges
 from repro.core import schemes as S
 from repro.core.lifting import (
     Bands2D,
@@ -262,20 +263,31 @@ def plan_2d(
 
 
 def dwt_fwd_2d(
-    x: Array, mode: str = "paper", backend: Optional[str] = None, scheme="cdf53"
+    x: Array, mode: str = "paper", backend: Optional[str] = None,
+    scheme="cdf53", checked=None,
 ) -> Bands2D:
     """One fused 2D level over the last two axes (rows then columns).
 
     Runs the whole-image Pallas kernel when the image fits the VMEM
     budget and the tiled halo-window kernel when it does not — there is
     no large-image XLA cliff.  Bit-exact vs ``core.lifting.dwt_fwd_2d``
-    on every backend, for every registered scheme.
+    on every backend, for every registered scheme.  ``checked=True`` (or
+    ``REPRO_DWT_CHECKED=1``) certifies the data against the derived
+    range bounds and raises ``IntegerOverflowError`` instead of ever
+    returning wrapped bands (``core/ranges.py``).
     """
     _check_mode(mode)
     sch = S.get_scheme(scheme)
     if x.ndim < 2 or x.shape[-1] < 2 or x.shape[-2] < 2:
         raise ValueError(f"need a (..., H>=2, W>=2) input, got {x.shape}")
     h, w = x.shape[-2], x.shape[-1]
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd_2d(a, mode=mode, backend=backend, scheme=sch,
+                                 checked=False),
+            x, scheme=sch, levels=1, mode=mode, ndim=2,
+            label="kernels.dwt_fwd_2d",
+        )
     b = _resolve_2d(backend, h, w, sch)
 
     def _kernel() -> Bands2D:
@@ -298,11 +310,18 @@ def dwt_fwd_2d(
 
 def dwt_inv_2d(
     bands: Bands2D, mode: str = "paper", backend: Optional[str] = None,
-    scheme="cdf53",
+    scheme="cdf53", checked=None,
 ) -> Array:
     """Fused inverse of :func:`dwt_fwd_2d` (columns then rows)."""
     _check_mode(mode)
     sch = S.get_scheme(scheme)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda b_: dwt_inv_2d(b_, mode=mode, backend=backend, scheme=sch,
+                                  checked=False),
+            bands, scheme=sch, levels=1, mode=mode, ndim=2,
+            label="kernels.dwt_inv_2d",
+        )
     ll = bands.ll
     h = ll.shape[-2] + bands.lh.shape[-2]
     w = ll.shape[-1] + bands.hl.shape[-1]
@@ -392,6 +411,7 @@ def dwt_fwd_2d_multi(
     mode: str = "paper",
     backend: Optional[str] = None,
     scheme="cdf53",
+    checked=None,
 ) -> Pyramid2D:
     """Fused multi-level 2D forward transform.
 
@@ -406,6 +426,14 @@ def dwt_fwd_2d_multi(
         raise ValueError(f"need a (..., H, W) input, got {x.shape}")
     h, w = x.shape[-2], x.shape[-1]
     check_levels_2d(h, w, levels)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd_2d_multi(a, levels=levels, mode=mode,
+                                       backend=backend, scheme=sch,
+                                       checked=False),
+            x, scheme=sch, levels=levels, mode=mode, ndim=2,
+            label="kernels.dwt_fwd_2d_multi",
+        )
     b = _resolve_2d(backend, h, w, sch)
     lead = x.shape[:-2]
 
@@ -437,11 +465,18 @@ def dwt_fwd_2d_multi(
 
 def dwt_inv_2d_multi(
     pyr: Pyramid2D, mode: str = "paper", backend: Optional[str] = None,
-    scheme="cdf53",
+    scheme="cdf53", checked=None,
 ) -> Array:
     """Inverse of :func:`dwt_fwd_2d_multi` (one dispatch on Pallas)."""
     _check_mode(mode)
     sch = S.get_scheme(scheme)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda p: dwt_inv_2d_multi(p, mode=mode, backend=backend,
+                                       scheme=sch, checked=False),
+            pyr, scheme=sch, levels=len(pyr.details), mode=mode, ndim=2,
+            label="kernels.dwt_inv_2d_multi",
+        )
     ll = pyr.ll
     h, w = ll.shape[-2], ll.shape[-1]
     for lh, hl, hh in pyr.details:  # validate band geometry coarsest-first

@@ -54,6 +54,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import lifting as _lift
+from repro.core import ranges as _ranges
 from repro.core import schemes as S
 from repro.core.lifting import PyramidND, _check_mode, check_levels_nd
 from repro.kernels import backend as _backend
@@ -451,7 +452,12 @@ def _inv3d_multi_xla(approx, details, scheme, mode):
 
 
 def _fwd_nd_via_1d(x, levels, mode, backend, scheme) -> PyramidND:
-    pyr = _ops.dwt_fwd(x, levels=levels, mode=mode, backend=backend, scheme=scheme)
+    # checked=False throughout the via-helpers: dwt_fwd_nd/dwt_inv_nd
+    # already ran the checked gate for the whole call
+    pyr = _ops.dwt_fwd(
+        x, levels=levels, mode=mode, backend=backend, scheme=scheme,
+        checked=False,
+    )
     return PyramidND(approx=pyr.approx, details=tuple((d,) for d in pyr.details))
 
 
@@ -459,12 +465,15 @@ def _inv_nd_via_1d(pyr: PyramidND, mode, backend, scheme):
     wp = _lift.WaveletPyramid(
         approx=pyr.approx, details=tuple(lvl[0] for lvl in pyr.details)
     )
-    return _ops.dwt_inv(wp, mode=mode, backend=backend, scheme=scheme)
+    return _ops.dwt_inv(
+        wp, mode=mode, backend=backend, scheme=scheme, checked=False
+    )
 
 
 def _fwd_nd_via_2d(x, levels, mode, backend, scheme) -> PyramidND:
     p2 = _f2d.dwt_fwd_2d_multi(
-        x, levels=levels, mode=mode, backend=backend, scheme=scheme
+        x, levels=levels, mode=mode, backend=backend, scheme=scheme,
+        checked=False,
     )
     # Pyramid2D stores (lh, hl, hh); code order is (hl, lh, hh) — bit 0
     # (highpass along -1) first
@@ -479,7 +488,9 @@ def _inv_nd_via_2d(pyr: PyramidND, mode, backend, scheme):
         ll=pyr.approx,
         details=tuple((lvl[1], lvl[0], lvl[2]) for lvl in pyr.details),
     )
-    return _f2d.dwt_inv_2d_multi(p2, mode=mode, backend=backend, scheme=scheme)
+    return _f2d.dwt_inv_2d_multi(
+        p2, mode=mode, backend=backend, scheme=scheme, checked=False
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -512,6 +523,7 @@ def dwt_fwd_nd(
     backend: Optional[str] = None,
     scheme="cdf53",
     ndim: int = 3,
+    checked=None,
 ) -> PyramidND:
     """Fused multi-level N-D forward transform over the last ``ndim`` axes.
 
@@ -519,7 +531,10 @@ def dwt_fwd_nd(
     kernel within the VMEM budget, depth-slab kernel beyond it); ndim=1/2
     reuse the existing fused engines; any registered scheme, any axis
     lengths >= 2 (``levels=0`` is the identity pyramid).  Bit-exact vs
-    ``core.lifting.dwt_fwd_nd`` on every backend.
+    ``core.lifting.dwt_fwd_nd`` on every backend.  ``checked=True`` (or
+    ``REPRO_DWT_CHECKED=1``) certifies the data against the derived
+    range bounds and raises ``IntegerOverflowError`` instead of ever
+    returning wrapped bands (``core/ranges.py``).
     """
     _check_mode(mode)
     sch = S.get_scheme(scheme)
@@ -528,6 +543,13 @@ def dwt_fwd_nd(
     if x.ndim < ndim:
         raise ValueError(f"need >= {ndim} axes, got shape {x.shape}")
     check_levels_nd(x.shape[-ndim:], levels)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd_nd(a, levels=levels, mode=mode, backend=backend,
+                                 scheme=sch, ndim=ndim, checked=False),
+            x, scheme=sch, levels=levels, mode=mode, ndim=ndim,
+            label="kernels.dwt_fwd_nd",
+        )
     if ndim == 1:
         return _fwd_nd_via_1d(x, levels, mode, backend, sch)
     if ndim == 2:
@@ -574,6 +596,7 @@ def dwt_inv_nd(
     mode: str = "paper",
     backend: Optional[str] = None,
     scheme="cdf53",
+    checked=None,
 ) -> Array:
     """Inverse of :func:`dwt_fwd_nd` (one fused dispatch on Pallas)."""
     _check_mode(mode)
@@ -581,6 +604,13 @@ def dwt_inv_nd(
     if not pyr.details:
         return _lift.promote_narrow(pyr.approx)
     ndim = pyr.ndim  # validates the band count
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda p: dwt_inv_nd(p, mode=mode, backend=backend, scheme=sch,
+                                 checked=False),
+            pyr, scheme=sch, levels=pyr.levels, mode=mode, ndim=ndim,
+            label="kernels.dwt_inv_nd",
+        )
     if ndim == 1:
         return _inv_nd_via_1d(pyr, mode, backend, sch)
     if ndim == 2:

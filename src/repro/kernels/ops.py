@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lifting as _lift
+from repro.core import ranges as _ranges
 from repro.core import schemes as S
 from repro.core.lifting import WaveletPyramid, _check_mode
 from repro.kernels import backend as _backend
@@ -264,16 +265,30 @@ def dwt_fwd_1d(
     mode: str = "paper",
     backend: Optional[str] = None,
     scheme="cdf53",
+    checked=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Backend-dispatched forward transform along the last axis. N >= 2.
 
     Returns (s, d) with len(s) = ceil(N/2), len(d) = floor(N/2), matching
     ``core.lifting.dwt_fwd_1d`` bit-exactly for the same scheme.
+
+    ``checked=True`` (or ``REPRO_DWT_CHECKED=1``) certifies the data
+    against the derived range bounds first and raises
+    :class:`~repro.resilience.errors.IntegerOverflowError` instead of
+    ever returning wrapped bands (``core/ranges.py``) — same contract on
+    every public transform in this package.
     """
     _check_mode(mode)
     sch = S.get_scheme(scheme)
     if x.shape[-1] < 2:
         raise ValueError("need at least 2 samples")
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd_1d(a, mode=mode, backend=backend, scheme=sch,
+                                 checked=False),
+            x, scheme=sch, levels=1, mode=mode, ndim=1,
+            label="kernels.dwt_fwd_1d",
+        )
     b = _backend.resolve(backend)
     return _backend.pallas_guard(
         b, "dwt_fwd_1d",
@@ -290,12 +305,20 @@ def dwt_inv_1d(
     mode: str = "paper",
     backend: Optional[str] = None,
     scheme="cdf53",
+    checked=None,
 ) -> jax.Array:
     """Backend-dispatched inverse transform; bit-exact vs core.lifting."""
     _check_mode(mode)
     sch = S.get_scheme(scheme)
     if s.shape[-1] - d.shape[-1] not in (0, 1):
         raise ValueError("band length mismatch")
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda t: dwt_inv_1d(t[0], t[1], mode=mode, backend=backend,
+                                 scheme=sch, checked=False),
+            (s, d), scheme=sch, levels=1, mode=mode, ndim=1,
+            label="kernels.dwt_inv_1d",
+        )
     b = _backend.resolve(backend)
     return _backend.pallas_guard(
         b, "dwt_inv_1d",
@@ -312,6 +335,7 @@ def dwt_fwd(
     mode: str = "paper",
     backend: Optional[str] = None,
     scheme="cdf53",
+    checked=None,
 ) -> WaveletPyramid:
     """Fused multi-level forward transform (one compiled dispatch).
 
@@ -329,6 +353,13 @@ def dwt_fwd(
                 f"signal too short for {levels} levels (got {x.shape[-1]})"
             )
         n = n - n // 2
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd(a, levels=levels, mode=mode, backend=backend,
+                              scheme=sch, checked=False),
+            x, scheme=sch, levels=levels, mode=mode, ndim=1,
+            label="kernels.dwt_fwd",
+        )
     b = _backend.resolve(backend)
     approx, details = _backend.pallas_guard(
         b, "dwt_fwd",
@@ -349,10 +380,18 @@ def dwt_inv(
     mode: str = "paper",
     backend: Optional[str] = None,
     scheme="cdf53",
+    checked=None,
 ) -> jax.Array:
     """Fused multi-level inverse transform (one compiled dispatch)."""
     _check_mode(mode)
     sch = S.get_scheme(scheme)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda p: dwt_inv(p, mode=mode, backend=backend, scheme=sch,
+                              checked=False),
+            pyr, scheme=sch, levels=pyr.levels, mode=mode, ndim=1,
+            label="kernels.dwt_inv",
+        )
     # validate band lengths per level up front: every backend must reject a
     # malformed pyramid identically (the xla path raises inside ref, the
     # kernel path would otherwise silently reconstruct garbage)

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro import sharding as SH
+from repro.core import ranges as _ranges
 from repro.core import schemes as S
 from repro.core.lifting import Pyramid2D, _check_mode
 from repro.kernels.ops import _compute_dtype
@@ -342,6 +343,7 @@ def dwt_fwd_2d_sharded(
     # per-shard Pallas routing lands behind the same flag when validated
     scheme="cdf53",
     timeout_s: Optional[float] = None,
+    checked=None,
 ) -> Pyramid2D:
     """Row-sharded multi-level 2D forward transform over ``mesh[axis]``.
 
@@ -350,13 +352,25 @@ def dwt_fwd_2d_sharded(
     ppermute per direction per level).  ``timeout_s`` arms a host-side
     collective watchdog: a stuck mesh neighbor surfaces as
     :class:`~repro.resilience.errors.CollectiveTimeoutError` instead of
-    hanging the caller forever.
+    hanging the caller forever.  ``checked=True`` (or
+    ``REPRO_DWT_CHECKED=1``) certifies the data against the derived
+    range bounds and raises ``IntegerOverflowError`` instead of ever
+    returning wrapped bands (``core/ranges.py``).
     """
     _check_mode(mode)
     sch = S.get_scheme(scheme)
     if x.ndim < 2:
         raise ValueError(f"need a (..., H, W) input, got {x.shape}")
     check_shardable(x.shape[-2], x.shape[-1], mesh.shape[axis], levels, sch)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked(
+            lambda a: dwt_fwd_2d_sharded(
+                a, mesh, levels=levels, mode=mode, axis=axis, backend=backend,
+                scheme=sch, timeout_s=timeout_s, checked=False,
+            ),
+            x, scheme=sch, levels=levels, mode=mode, ndim=2,
+            label="kernels.dwt_fwd_2d_sharded",
+        )
     fn = _fwd_sharded_fn(mesh, axis, levels, mode, sch, x.ndim)
     return _watchdogged(
         lambda: fn(x.astype(_compute_dtype(x.dtype))),
@@ -372,11 +386,21 @@ def dwt_inv_2d_sharded(
     backend: Optional[str] = None,  # noqa: ARG001 - see dwt_fwd_2d_sharded
     scheme="cdf53",
     timeout_s: Optional[float] = None,
+    checked=None,
 ) -> Array:
     """Inverse of :func:`dwt_fwd_2d_sharded` (same exchange pattern,
     same optional collective watchdog)."""
     _check_mode(mode)
     sch = S.get_scheme(scheme)
+    if _ranges.checked_enabled(checked):
+        return _ranges.run_checked_inv(
+            lambda p: dwt_inv_2d_sharded(
+                p, mesh, mode=mode, axis=axis, backend=backend, scheme=sch,
+                timeout_s=timeout_s, checked=False,
+            ),
+            pyr, scheme=sch, levels=len(pyr.details), mode=mode, ndim=2,
+            label="kernels.dwt_inv_2d_sharded",
+        )
     levels = len(pyr.details)
     h = pyr.ll.shape[-2] * (1 << levels)
     w = pyr.ll.shape[-1]

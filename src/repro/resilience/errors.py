@@ -56,6 +56,21 @@ class CollectiveTimeoutError(ResilienceError):
     """
 
 
+class IntegerOverflowError(ResilienceError, OverflowError):
+    """An integer transform would have wrapped (or its result cannot be
+    represented in the requested band dtype).
+
+    Raised by the checked execution mode (``checked=True`` /
+    ``REPRO_DWT_CHECKED=1``) of every transform engine, and by the
+    boundary validators (codec encode, checkpoint wavelet codecs,
+    quantize, serve admission) when samples fall outside the derived
+    range certificate (``repro.core.ranges``).  Subclasses the builtin
+    ``OverflowError`` so numeric-minded callers catch it naturally;
+    being a :class:`ResilienceError` keeps it inside the one typed
+    taxonomy the chaos suite enforces.
+    """
+
+
 class CheckpointIntegrityError(ResilienceError, OSError):
     """A checkpoint leaf failed its integrity check and could not heal.
 

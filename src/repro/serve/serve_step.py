@@ -4,15 +4,18 @@ CPU-runnable with reduced configs (examples/serve_decode.py) and
 dry-runnable at production shapes (the decode_32k / long_500k cells).
 
 The engine keeps a fixed pool of batch slots; finished sequences free
-their slot, pending requests claim one and are prefllled individually
+their slot, pending requests claim one and are prefilled individually
 (static shapes: one prefill length bucket per engine).  This is the
-standard static-batching serving pattern expressible in pure pjit.
+standard continuous-batching serving pattern expressible in pure pjit:
+shapes stay static so nothing recompiles, while slot occupancy changes
+every step as sequences finish and new requests are admitted.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 import warnings
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -21,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import ranges as _ranges
 from repro.models import transformer as T
 from repro.resilience import inject
 from repro.resilience.errors import (
@@ -58,6 +62,10 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, t: T.decode_step(p, self.cfg, c, tokens=t)
         )
+        # cached jitted prefill: admit() runs this once per admitted
+        # request, and a fresh jax.jit wrapper there would retrace and
+        # recompile the full prefill graph on EVERY admission
+        self._prefill = jax.jit(lambda p, t: T.prefill(p, self.cfg, tokens=t))
         self._key = jax.random.PRNGKey(self.seed)
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
@@ -79,9 +87,7 @@ class ServeEngine:
         prompt[:plen] = req.prompt[:plen]
         # per-slot prefill: run the full-batch prefill with this row active.
         tokens = jnp.asarray(np.tile(prompt, (self.batch_slots, 1)))
-        logits, caches = jax.jit(lambda p, t: T.prefill(p, self.cfg, tokens=t))(
-            self.params, tokens
-        )
+        logits, caches = self._prefill(self.params, tokens)
         # merge this slot's row into the engine caches
         def merge(dst, src):
             if dst.ndim >= 2 and dst.shape[1] == self.batch_slots:  # (L,B,...)
@@ -118,12 +124,12 @@ class ServeEngine:
         return finished
 
     def run(self, requests: List[Request], max_steps: int = 10_000) -> List[Request]:
-        pending = list(requests)
+        pending = deque(requests)
         done: List[Request] = []
         steps = 0
         while (pending or any(self.slot_req)) and steps < max_steps:
             while pending and self.admit(pending[0]):
-                pending.pop(0)
+                pending.popleft()
             done.extend(self.step())
             steps += 1
         return done
@@ -193,7 +199,14 @@ class WaveletServeEngine:
         :class:`~repro.resilience.errors.RetryExhaustedError`;
       * encode degradation — a response-encode failure attaches the
         error to that request only; the transform result (the pyramid)
-        still serves.
+        still serves;
+      * range certification — with ``checked=True`` (or the
+        ``REPRO_DWT_CHECKED`` env toggle), ``submit`` traces the
+        request's measured sample interval through the engine's cascade
+        and raises
+        :class:`~repro.resilience.errors.IntegerOverflowError` for
+        samples that could wrap a lifting intermediate, before the
+        request ever rides a batch.
     """
 
     height: int
@@ -211,6 +224,7 @@ class WaveletServeEngine:
     deadline_s: Optional[float] = None  # per-request deadline (from submit)
     max_retries: int = 2  # transform retries after the first attempt
     retry_backoff_s: float = 0.05  # backoff base: 1x, 2x, 4x, ...
+    checked: Optional[bool] = None  # range-certify at submit (None: env)
 
     def __post_init__(self):
         from repro.core import lifting as _lifting
@@ -259,6 +273,20 @@ class WaveletServeEngine:
                 "integer DWT serving requires integer samples, got "
                 f"{req.image.dtype}; quantize client-side "
                 "(core.compression.quantize) before submitting"
+            )
+        if _ranges.checked_enabled(self.checked) and req.image.size:
+            # admission-time range certification: reject a request whose
+            # samples could wrap a lifting intermediate BEFORE it rides a
+            # batch (one host min/max + a cascade trace, no device work)
+            _ranges.assert_interval_safe(
+                int(req.image.min()),
+                int(req.image.max()),
+                scheme=self.scheme,
+                levels=self.levels,
+                dtype=np.int32,  # step() batches every bucket as int32
+                mode=self.mode,
+                ndim=3 if self.depth is not None else 2,
+                label=f"serve.submit(request {req.uid})",
             )
         if len(self._pending) >= self.max_queue:
             raise LoadShedError(

@@ -1,0 +1,59 @@
+"""Banned-API enforcement the linter cannot express.
+
+ruff's TID251 bans importable *paths*; it cannot ban a METHOD CALL.  The
+one that matters here is a raw ``.astype(jnp.int32)`` inside the
+transform engines: every integer entering a lifting cascade must go
+through ``core.lifting.promote_narrow`` (or the kernels' mirrored
+``_compute_dtype`` resolver), because that is the dtype contract the
+overflow certificates (``core.ranges``) are derived against — a stray
+cast would let a width the certificates never priced into the cascade.
+Codec/quantizer layers outside the engines legitimately cast shifted
+int8/int16 band payloads back to int32; the ban is scoped to the engine
+modules, where no such cast belongs.
+"""
+import re
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src" / "repro"
+
+# the transform-engine surface: everything that evaluates a lifting step
+ENGINE_FILES = sorted(
+    list((SRC / "kernels").glob("*.py"))
+    + [
+        SRC / "core" / "lifting.py",
+        SRC / "core" / "schemes.py",
+        SRC / "core" / "ranges.py",
+    ]
+)
+
+_CAST = re.compile(r"\.astype\(\s*jnp\.int32\s*\)")
+
+
+def _allowed(path: Path, line: str, context: str) -> bool:
+    # the single sanctioned cast: promote_narrow's own int32 promotion
+    return path.name == "lifting.py" and context == "promote_narrow"
+
+
+def test_no_raw_int32_casts_in_engines():
+    assert ENGINE_FILES, "engine file list is empty — layout moved?"
+    offenders = []
+    for path in ENGINE_FILES:
+        context = ""
+        for i, line in enumerate(path.read_text().splitlines(), start=1):
+            m = re.match(r"def\s+(\w+)", line)
+            if m:
+                context = m.group(1)
+            if _CAST.search(line) and not _allowed(path, line, context):
+                offenders.append(f"{path.relative_to(SRC.parent)}:{i}: {line.strip()}")
+    assert not offenders, (
+        "raw .astype(jnp.int32) in a transform engine bypasses "
+        "promote_narrow and voids the range certificates:\n"
+        + "\n".join(offenders)
+    )
+
+
+def test_promote_narrow_still_exists():
+    """The allowlist references promote_narrow by name; fail loudly if it
+    is renamed so the ban does not silently start passing vacuously."""
+    text = (SRC / "core" / "lifting.py").read_text()
+    assert "def promote_narrow" in text

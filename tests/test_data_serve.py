@@ -82,6 +82,31 @@ def test_serve_engine_end_to_end():
         assert all(0 <= t < cfg.vocab_size for t in r.out_tokens)
 
 
+def test_serve_prefill_compiles_once(monkeypatch):
+    """Admitting N requests must trace/compile prefill exactly once.
+
+    The engine jits ``T.prefill`` in ``__post_init__`` (fixed prompt
+    length => one static shape); a per-admit ``jax.jit(lambda ...)``
+    would retrace on every call because each lambda is a fresh callable.
+    Counting invocations of the traced function catches a regression:
+    under jit, the Python body runs only while tracing.
+    """
+    calls = {"n": 0}
+    real_prefill = T.prefill
+
+    def counting_prefill(*args, **kwargs):
+        calls["n"] += 1
+        return real_prefill(*args, **kwargs)
+
+    monkeypatch.setattr(T, "prefill", counting_prefill)
+    cfg = reduced(get_config("stablelm-1.6b"))
+    params = L.init_params(T.model_defs(cfg), jax.random.PRNGKey(2))
+    eng = ServeEngine(cfg, params, batch_slots=4, prefill_len=8)
+    for uid in range(3):
+        eng.admit(Request(uid=uid, prompt=np.array([1 + uid, 2], np.int32), max_new=1))
+    assert calls["n"] == 1, f"prefill traced {calls['n']}x for 3 admits"
+
+
 def test_serve_greedy_deterministic():
     cfg = reduced(get_config("stablelm-1.6b"))
     params = L.init_params(T.model_defs(cfg), jax.random.PRNGKey(1))

@@ -92,6 +92,30 @@ def _good_bench() -> dict:
                 "deadline-miss": "typed-error",
             },
         },
+        "ranges": {
+            "certificates": {
+                "cdf53": {"safe_abs_1d_l1": gate.CDF53_SAFE_ABS_1D_L1,
+                          "safe_abs_2d_l2": 268435455,
+                          "growth_bits_1d_l1": 1.0,
+                          "int16_levels_3d": 5},
+                "haar": {"safe_abs_1d_l1": 1073741823,
+                         "safe_abs_2d_l2": 536870911,
+                         "growth_bits_1d_l1": 1.0,
+                         "int16_levels_3d": 5},
+                "cdf22": {"safe_abs_1d_l1": 536870911,
+                          "safe_abs_2d_l2": 134217727,
+                          "growth_bits_1d_l1": 2.0,
+                          "int16_levels_3d": 4},
+                "97m": {"safe_abs_1d_l1": 12005499,
+                        "safe_abs_2d_l2": 928521,
+                        "growth_bits_1d_l1": 7.5,
+                        "int16_levels_3d": 1},
+            },
+            "wraparound": {e: "typed-error" for e in gate.CHECKED_ENGINES},
+            "roundtrip_exact": True,
+            "overhead_off_x": 1.01,
+            "overhead_on_x": 4.0,
+        },
     }
 
 
@@ -288,6 +312,74 @@ def test_resilience_missing_section_fails_schema():
 def test_summary_mentions_resilience():
     s = gate.summary(_good_bench())
     assert "resilience parity=0.18" in s and "band-heal=True" in s
+
+
+def test_ranges_silent_wraparound_fails():
+    """A checked engine that lets a wrapping input through silently is
+    the exact corruption mode the certificates exist to rule out."""
+    bench = _good_bench()
+    bench["ranges"]["wraparound"]["fused-3d"] = "silent"
+    fails = gate.check_ranges(bench)
+    assert any("fused-3d" in f and "silently" in f for f in fails)
+
+
+def test_ranges_missing_engine_fails():
+    bench = _good_bench()
+    del bench["ranges"]["wraparound"]["sharded-2d"]
+    fails = gate.check_ranges(bench)
+    assert any("sharded-2d" in f and "missing" in f for f in fails)
+
+
+def test_ranges_unknown_engine_fails():
+    bench = _good_bench()
+    bench["ranges"]["wraparound"]["warp-engine"] = "typed-error"
+    fails = gate.check_ranges(bench)
+    assert any("warp-engine" in f and "unknown engine" in f for f in fails)
+
+
+def test_ranges_certificate_pin():
+    """A drifted cdf53 certificate means the tracer's semantics moved."""
+    bench = _good_bench()
+    bench["ranges"]["certificates"]["cdf53"]["safe_abs_1d_l1"] += 1
+    fails = gate.check_ranges(bench)
+    assert any("pinned" in f for f in fails)
+
+
+def test_ranges_monotonicity_and_missing_scheme():
+    bench = _good_bench()
+    bench["ranges"]["certificates"]["haar"]["safe_abs_2d_l2"] = 0
+    fails = gate.check_ranges(bench)
+    assert any("haar" in f and "positive-monotone" in f for f in fails)
+    bench2 = _good_bench()
+    del bench2["ranges"]["certificates"]["97m"]
+    fails2 = gate.check_ranges(bench2)
+    assert any("97m" in f for f in fails2)
+
+
+def test_ranges_checked_off_must_be_free():
+    bench = _good_bench()
+    bench["ranges"]["overhead_off_x"] = 5.2
+    fails = gate.check_ranges(bench)
+    assert any("not free" in f for f in fails)
+
+
+def test_ranges_roundtrip_break_fails():
+    bench = _good_bench()
+    bench["ranges"]["roundtrip_exact"] = False
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("round-trip bit-exactly under checked" in f for f in fails)
+
+
+def test_ranges_missing_section_fails_schema():
+    bench = _good_bench()
+    del bench["ranges"]
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("missing section 'ranges'" in f for f in fails)
+
+
+def test_summary_mentions_ranges():
+    s = gate.summary(_good_bench())
+    assert "ranges checked=6 engines typed" in s
 
 
 def test_main_exit_codes(tmp_path):
