@@ -37,6 +37,11 @@ Gates (fail = non-zero exit, every failure listed):
     arithmetic mode turns a wrap-capable input into a typed error on
     EVERY engine, certified inputs round-trip bit-exactly under
     checking, and the disabled path costs nothing.
+  * Serve tier — the compiled-executable cache takes a mixed-bucket
+    workload with a 100% hit rate after warmup (nothing recompiles on
+    admission or bucket switch), the batch-level response encode beats
+    the per-request loop by 1.5x+, and the progressive thumbnail tier
+    reads a strict fraction of the stored container's bytes.
 
 This module is dependency-free (stdlib only) on purpose: the gates must
 stay runnable — and unit-testable — without importing jax.
@@ -92,7 +97,22 @@ REQUIRED_SECTIONS: Dict[str, tuple] = {
         "overhead_off_x",
         "overhead_on_x",
     ),
+    "serve": (
+        "buckets",
+        "batch_slots",
+        "requests_per_s",
+        "p99_ms",
+        "compiles",
+        "cache_hit_rate",
+        "batch_encode_speedup",
+        "thumbnail_bytes_fraction",
+    ),
 }
+
+# batch-level response encode (one WZRC container per micro-batch) must
+# amortize the per-request coder overhead by at least this much on the
+# bench workload — the reason PR 8 moved the encode to the batch level
+MIN_BATCH_ENCODE_SPEEDUP = 1.5
 
 # every engine the checked mode must cover; a wrap-capable input through
 # any of them must surface as IntegerOverflowError ("typed-error"), never
@@ -425,6 +445,50 @@ def check_ranges(bench: dict) -> List[str]:
     return fails
 
 
+def check_serve(bench: dict) -> List[str]:
+    """Gates over the serve-tier section.
+
+    Pins the PR 8 serve invariants at the bench layer: the compiled-
+    executable cache serves a mixed-bucket workload with NO miss after
+    warmup (an admission or bucket switch that recompiles shows up here
+    as a hit rate below 1.0), the batch-level response encode actually
+    amortizes the coder (>= 1.5x the per-request loop), and the
+    progressive thumbnail tier reads a strict fraction of the stored
+    container's bytes (partial decode is measurably partial)."""
+    fails = []
+    srv = bench["serve"]
+    if srv["requests_per_s"] <= 0:
+        fails.append(
+            f"serve: non-positive throughput ({srv['requests_per_s']} req/s)"
+        )
+    if srv["p99_ms"] <= 0:
+        fails.append(f"serve: non-positive p99 latency ({srv['p99_ms']} ms)")
+    if srv["cache_hit_rate"] != 1.0:
+        fails.append(
+            f"serve: executable cache hit rate {srv['cache_hit_rate']} after "
+            "warmup — something recompiled under the mixed-bucket workload"
+        )
+    n_buckets = len(srv["buckets"])
+    if srv["compiles"] > n_buckets:
+        fails.append(
+            f"serve: {srv['compiles']} compiles for {n_buckets} buckets — "
+            "more than one executable per bucket"
+        )
+    s = srv["batch_encode_speedup"]
+    if not (isinstance(s, (int, float)) and s >= MIN_BATCH_ENCODE_SPEEDUP):
+        fails.append(
+            f"serve: batch-level encode speedup {s!r}x below the "
+            f"{MIN_BATCH_ENCODE_SPEEDUP}x floor vs the per-request loop"
+        )
+    frac = srv["thumbnail_bytes_fraction"]
+    if not (isinstance(frac, (int, float)) and 0 < frac < 1):
+        fails.append(
+            f"serve: thumbnail tier read {frac!r} of the container — "
+            "progressive decode is not reading a strict byte subset"
+        )
+    return fails
+
+
 def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
     """Every gate failure, most structural first.  ANY schema failure
     stops before the behavioural gates: those index the payload freely
@@ -440,6 +504,7 @@ def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
         + check_codec(bench)
         + check_resilience(bench)
         + check_ranges(bench)
+        + check_serve(bench)
     )
 
 
@@ -463,7 +528,12 @@ def summary(bench: dict) -> str:
         f"resilience parity={bench['resilience']['parity_overhead_ratio']} "
         f"band-heal={bench['resilience']['single_band_recovery']}; "
         f"ranges checked={len(bench['ranges']['wraparound'])} engines "
-        f"typed, off-cost={bench['ranges']['overhead_off_x']}x "
+        f"typed, off-cost={bench['ranges']['overhead_off_x']}x; "
+        f"serve {bench['serve']['requests_per_s']} req/s "
+        f"p99={bench['serve']['p99_ms']}ms "
+        f"hit-rate={bench['serve']['cache_hit_rate']} "
+        f"batch-enc={bench['serve']['batch_encode_speedup']}x "
+        f"thumb={bench['serve']['thumbnail_bytes_fraction']} "
         f"(backend={bench['default_backend']}, platform={bench['platform']})"
     )
 

@@ -51,6 +51,14 @@ SHAPE_3D_LARGE = (64, 512, 512)
 SHAPE_CODEC = (256, 192)
 LEVELS_CODEC = 2
 
+# serve workloads: a mixed-bucket request stream small enough for CI
+# smoke; the batch-encode comparison uses the smaller bucket, where the
+# per-call coder overhead the batch container amortizes dominates
+SERVE_BUCKETS = ((16, 16), (32, 32))
+SERVE_SLOTS = 8
+SERVE_REQUESTS = 32
+SERVE_LEVELS = 2
+
 
 def _time_us(fn, *args, iters: int = 5) -> float:
     out = fn(*args)
@@ -180,6 +188,122 @@ def _codec_section(rng) -> dict:
         "decode_mbps": round(raw_mb / t_dec, 1),
         "smooth": sizes(smooth),
         "noisy": sizes(noisy),
+    }
+
+
+def _serve_section(rng) -> dict:
+    """Serve-tier section: throughput, tail latency, cache and encode
+    amortization over a mixed-bucket continuous-batching workload.
+
+    gate.py pins the structural invariants: the executable cache must be
+    100% hits after warmup (no admission or bucket switch recompiles),
+    the batch-level response encode must beat the per-request loop by
+    1.5x+, and the progressive thumbnail tier must read a strict
+    fraction of the stored container's bytes."""
+    import jax as _jax
+
+    from repro import codec
+    from repro.serve import TransformRequest, WaveletServeEngine
+
+    eng = WaveletServeEngine(
+        buckets=list(SERVE_BUCKETS),
+        batch_slots=SERVE_SLOTS,
+        levels=SERVE_LEVELS,
+        encode_response=True,
+    )
+    eng.warmup()
+
+    def make_requests():
+        reqs = []
+        for i in range(SERVE_REQUESTS):
+            bucket = SERVE_BUCKETS[i % len(SERVE_BUCKETS)]
+            # odd requests ride undersized (zero-pad admission)
+            shape = bucket if i % 4 < 2 else tuple(s - 3 for s in bucket)
+            reqs.append(
+                TransformRequest(
+                    uid=i,
+                    image=rng.integers(-4096, 4096, shape).astype(np.int32),
+                )
+            )
+        return reqs
+
+    eng.run(make_requests())  # warm run: pays compiles + coder jit
+    hits0, misses0 = eng.executor.hits, eng.executor.misses
+    reqs = make_requests()
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    finished = [r for r in done if r.done and r.error is None]
+    # p99 latency: submit-to-completion per request, stamped per step
+    lat = []
+    eng2 = WaveletServeEngine(
+        buckets=list(SERVE_BUCKETS),
+        batch_slots=SERVE_SLOTS,
+        levels=SERVE_LEVELS,
+        encode_response=True,
+        executor=eng.executor,  # share the warmed cache
+    )
+    for r in make_requests():
+        eng2.submit(r)
+    while eng2.scheduler.pending():
+        ts = time.perf_counter()
+        batch = eng2.step()
+        te = time.perf_counter()
+        for r in batch:
+            if r.done and r.error is None and r.submitted_at is not None:
+                lat.append((te - r.submitted_at) * 1e3)
+    p99_ms = float(np.percentile(lat, 99)) if lat else 0.0
+
+    # batch-level encode vs the PR 6 per-request loop, same pyramids
+    xb = jnp.asarray(
+        rng.integers(-4096, 4096, (SERVE_SLOTS,) + SERVE_BUCKETS[0]),
+        jnp.int32,
+    )
+    pyr = K.dwt_fwd_2d_multi(xb, levels=SERVE_LEVELS)
+    per_rows = [
+        _jax.tree_util.tree_map(lambda b, i=i: b[i], pyr)
+        for i in range(SERVE_SLOTS)
+    ]
+
+    def _best_of(fn, n=3):
+        fn()
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_batch_enc = _best_of(lambda: codec_container.encode_batch(pyr))
+    t_per_enc = _best_of(
+        lambda: [codec_container.encode_pyramid(r) for r in per_rows]
+    )
+
+    # progressive decode: the thumbnail tier's byte footprint on a
+    # stored batch container (measured with the counting reader)
+    blob = codec_container.encode_batch(pyr)
+    reader = codec.CountingReader(blob)
+    codec.decode_lowband(reader)
+    thumb_fraction = reader.bytes_read / len(blob)
+
+    return {
+        "buckets": [list(b) for b in SERVE_BUCKETS],
+        "batch_slots": SERVE_SLOTS,
+        "levels": SERVE_LEVELS,
+        "requests": SERVE_REQUESTS,
+        "requests_per_s": round(len(finished) / wall, 1),
+        "p99_ms": round(p99_ms, 2),
+        "compiles": int(eng.executor.compiles),
+        "cache_hit_rate": round(
+            (eng.executor.hits - hits0)
+            / max((eng.executor.hits - hits0)
+                  + (eng.executor.misses - misses0), 1),
+            4,
+        ),
+        "batch_encode_ms": round(t_batch_enc * 1e3, 2),
+        "per_request_encode_ms": round(t_per_enc * 1e3, 2),
+        "batch_encode_speedup": round(t_per_enc / t_batch_enc, 2),
+        "thumbnail_bytes_fraction": round(thumb_fraction, 4),
     }
 
 
@@ -579,6 +703,7 @@ def run_json() -> Tuple[list, dict]:
     codec = _codec_section(rng)
     resilience = _resilience_section(rng)
     ranges_sec = _ranges_section(rng)
+    serve = _serve_section(rng)
 
     payload = {
         "platform": B.platform(),
@@ -640,6 +765,7 @@ def run_json() -> Tuple[list, dict]:
         "codec": codec,
         "resilience": resilience,
         "ranges": ranges_sec,
+        "serve": serve,
     }
     rows = [
         ("kernels.platform", B.platform(), "probed once at import"),
@@ -834,6 +960,39 @@ def run_json() -> Tuple[list, dict]:
                 "kernels.ranges.overhead_on_x",
                 ranges_sec["overhead_on_x"],
                 "checked=True vs default (host interval walk cost)",
+            ),
+        ]
+    )
+    rows.extend(
+        [
+            (
+                "kernels.serve.requests_per_s",
+                serve["requests_per_s"],
+                f"{serve['requests']} mixed-bucket requests, "
+                f"{serve['batch_slots']} slots, buckets {serve['buckets']}",
+            ),
+            (
+                "kernels.serve.p99_ms",
+                serve["p99_ms"],
+                "submit-to-completion tail latency (warm cache)",
+            ),
+            (
+                "kernels.serve.cache_hit_rate",
+                serve["cache_hit_rate"],
+                f"executable cache after warmup ({serve['compiles']} "
+                "compiles total; gate pins 1.0)",
+            ),
+            (
+                "kernels.serve.batch_encode_speedup",
+                serve["batch_encode_speedup"],
+                f"one WZRC container per micro-batch "
+                f"({serve['batch_encode_ms']}ms) vs per-request loop "
+                f"({serve['per_request_encode_ms']}ms); gate pins >= 1.5",
+            ),
+            (
+                "kernels.serve.thumbnail_bytes_fraction",
+                serve["thumbnail_bytes_fraction"],
+                "progressive LL-tier bytes read / stored container bytes",
             ),
         ]
     )

@@ -719,6 +719,61 @@ def inverse_transform(dec, backend: Optional[str] = None):
     )
 
 
+def encode_batch(
+    pyr: Any,
+    scheme: str = "cdf53",
+    mode: str = "paper",
+    *,
+    ndim: Optional[int] = None,
+    backend: Optional[str] = None,
+    **kw,
+) -> bytes:
+    """Serialize a BATCH of pyramids as one container (lead dim = batch).
+
+    The WZRC layout has always carried leading (batch) dims; this entry
+    point is the serve tier's contract for it: the pyramid's bands must
+    have at least one leading dim, which is the micro-batch.  One
+    container per micro-batch amortizes the host-side Rice coder over
+    the batch — every band is coded in ONE pass over ``(B, ...)`` data
+    instead of B per-request passes (the serve bench gates the ratio).
+
+    Decode the whole batch with :func:`decode_batch`, or any single
+    band/tier of it with ``codec.progressive`` (the per-band byte
+    ranges serve the batch container exactly like a single-request one;
+    each band decodes to ``(B, ...)``).
+    """
+    kind = _pyramid_kind(pyr)
+    nd, lead, _ = _infer_geometry(pyr, kind, ndim)
+    if not lead:
+        raise ValueError(
+            "encode_batch needs a leading batch dim on every band; got a "
+            f"lead-free pyramid (trailing ndim={nd}) — use encode_pyramid "
+            "for single requests"
+        )
+    return encode_pyramid(
+        pyr, scheme, mode, ndim=ndim, backend=backend, **kw
+    )
+
+
+def decode_batch(data: bytes) -> List[Any]:
+    """Split a batch container back into per-item pyramids.
+
+    The inverse of :func:`encode_batch`: decodes once (self-healing and
+    typed errors exactly as :func:`decode_pyramid`) and slices the
+    leading batch dim, returning one pyramid per batch row.  Raises
+    ``ValueError`` on a container with no lead dims.
+    """
+    dec = decode_pyramid(data)
+    if not dec.lead:
+        raise ValueError(
+            "not a batch container (no lead dims); use decode_pyramid"
+        )
+    return [
+        jax.tree_util.tree_map(lambda b, i=i: b[i], dec.pyramid)
+        for i in range(dec.lead[0])
+    ]
+
+
 def roundtrip_exact(pyr: Any, **kw) -> bool:
     """True when encode->decode reproduces every band bit-exactly."""
     dec = decode_pyramid(encode_pyramid(pyr, **kw))

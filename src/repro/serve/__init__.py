@@ -1,1 +1,45 @@
-"""Subpackage."""
+"""Production serve tier: the layered wavelet-transform service core.
+
+    scheduler.py   bucketed FIFO admission — shape routing, load
+                   shedding, deadlines (host-only, no device work)
+    executor.py    compiled-executable cache keyed on
+                   (bucket, scheme, levels, mode, backend, mesh) with
+                   donated input buffers
+    engine.py      micro-batch assembly, bounded retry, batch-level
+                   WZRC response encode
+    routes.py      progressive fidelity tiers (thumbnail / refine /
+                   full) from one stored bitstream per micro-batch
+    serve_step.py  the batched-LM serving engine (prefill + decode
+                   slots) and seed-era re-exports
+
+See DESIGN.md §14.
+"""
+from repro.serve.engine import (  # noqa: F401
+    TransformRequest,
+    WaveletServeEngine,
+    crop_result,
+)
+from repro.serve.executor import (  # noqa: F401
+    ExecKey,
+    TransformExecutor,
+    mesh_signature,
+)
+from repro.serve.routes import (  # noqa: F401
+    ProgressiveServeRoute,
+    StoredResponse,
+    tier_shape,
+)
+from repro.serve.scheduler import BucketScheduler  # noqa: F401
+
+__all__ = [
+    "BucketScheduler",
+    "ExecKey",
+    "ProgressiveServeRoute",
+    "StoredResponse",
+    "TransformExecutor",
+    "TransformRequest",
+    "WaveletServeEngine",
+    "crop_result",
+    "mesh_signature",
+    "tier_shape",
+]

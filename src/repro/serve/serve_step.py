@@ -1,4 +1,4 @@
-"""Batched serving: prefill + decode loop with continuous batching slots.
+"""Batched LM serving: prefill + decode loop with continuous batching slots.
 
 CPU-runnable with reduced configs (examples/serve_decode.py) and
 dry-runnable at production shapes (the decode_32k / long_500k cells).
@@ -9,30 +9,29 @@ their slot, pending requests claim one and are prefilled individually
 standard continuous-batching serving pattern expressible in pure pjit:
 shapes stay static so nothing recompiles, while slot occupancy changes
 every step as sequences finish and new requests are admitted.
+
+The wavelet transform serving engine lives in the layered service core
+— ``serve/scheduler.py`` (bucketed admission), ``serve/executor.py``
+(compiled-executable cache), ``serve/engine.py`` (micro-batching +
+batch-level encode), ``serve/routes.py`` (progressive fidelity tiers) —
+and is re-exported here for seed-era imports.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-import warnings
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import ranges as _ranges
 from repro.models import transformer as T
-from repro.resilience import inject
-from repro.resilience.errors import (
-    DeadlineExceededError,
-    LoadShedError,
-    ResilienceWarning,
-    RetryExhaustedError,
-    RetryWarning,
+from repro.serve.engine import (  # noqa: F401  back-compat re-exports
+    TransformRequest,
+    WaveletServeEngine,
+    crop_result,
 )
 
 PyTree = Any
@@ -62,9 +61,11 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, t: T.decode_step(p, self.cfg, c, tokens=t)
         )
-        # cached jitted prefill: admit() runs this once per admitted
-        # request, and a fresh jax.jit wrapper there would retrace and
-        # recompile the full prefill graph on EVERY admission
+        # cached jitted BATCH-1 prefill: admit() fills exactly one slot,
+        # so it prefills exactly one row — the old path tiled the prompt
+        # to (batch_slots, prefill_len) and ran the full-batch prefill
+        # per admission, batch_slots x the needed work.  Jitting here
+        # (not per admit) keeps it one trace for the engine's lifetime.
         self._prefill = jax.jit(lambda p, t: T.prefill(p, self.cfg, tokens=t))
         self._key = jax.random.PRNGKey(self.seed)
 
@@ -85,19 +86,19 @@ class ServeEngine:
         prompt = np.zeros((self.prefill_len,), np.int32)
         plen = min(len(req.prompt), self.prefill_len)
         prompt[:plen] = req.prompt[:plen]
-        # per-slot prefill: run the full-batch prefill with this row active.
-        tokens = jnp.asarray(np.tile(prompt, (self.batch_slots, 1)))
-        logits, caches = self._prefill(self.params, tokens)
-        # merge this slot's row into the engine caches
+        # single-row prefill: one (1, prefill_len) forward, merged into
+        # this slot only — admission cost no longer scales with the pool
+        logits, caches = self._prefill(self.params, jnp.asarray(prompt[None]))
+
         def merge(dst, src):
             if dst.ndim >= 2 and dst.shape[1] == self.batch_slots:  # (L,B,...)
-                return dst.at[:, slot].set(src[:, slot])
+                return dst.at[:, slot].set(src[:, 0])
             if dst.ndim >= 1 and dst.shape[0] == self.batch_slots:  # (B,...)
-                return dst.at[slot].set(src[slot])
+                return dst.at[slot].set(src[0])
             return src  # scalars ("len") — lockstep by construction
 
         self.caches = jax.tree_util.tree_map(merge, self.caches, caches)
-        req.out_tokens = [int(self._sample(logits)[slot])]
+        req.out_tokens = [int(self._sample(logits)[0])]
         self.slot_req[slot] = req
         return True
 
@@ -135,279 +136,3 @@ class ServeEngine:
         return done
 
 
-# ---------------------------------------------------------------------------
-# Wavelet transform serving: the image/tensor-compression workload of the
-# paper's modules, served batched at hardware speed.
-#
-# Requests are fixed-shape (H, W) slices (one shape bucket per engine,
-# like the LM engine's prefill bucket).  Each step drains up to
-# ``batch_slots`` pending requests and runs ONE fused multi-level 2D
-# dispatch — the batch maps to leading Pallas grid cells, and images past
-# the VMEM budget take the tiled halo-window kernels, so a 2048x2048
-# bucket serves on the compiled path end-to-end.  With a mesh, batches
-# route through the row-sharded ``shard_map`` transform instead
-# (kernels/sharded.py), sharding H over the ``data`` axis.
-# ---------------------------------------------------------------------------
-
-
-@dataclass
-class TransformRequest:
-    uid: int
-    image: np.ndarray  # (H, W) — or (D, H, W) on a volume engine — bucket
-    pyramid: Optional[Any] = None  # Pyramid2D/PyramidND result (when served)
-    encoded: Optional[bytes] = None  # WZRC container (encoded-response route)
-    done: bool = False
-    submitted_at: Optional[float] = None  # monotonic clock, set by submit()
-    error: Optional[Exception] = None  # per-request failure (deadline, encode)
-
-
-@dataclass
-class WaveletServeEngine:
-    """Continuous micro-batched 2D/3D DWT serving over fixed batch slots.
-
-    ``depth=None`` (default) serves (H, W) image buckets through the
-    fused 2D pyramid; setting ``depth`` makes the bucket a (D, H, W)
-    volume served through the fused N-D engine (``K.dwt_fwd_nd``,
-    kernels/fused3d.py) — video frame stacks and CT-style volumes run
-    whole-volume or depth-slab Pallas kernels, batch mapped to grid
-    cells.  The sharded mesh route stays 2D-only.
-
-    ``encode_response=True`` turns the engine into an end-to-end
-    lossless codec service: each completed request additionally carries
-    its pyramid as a self-describing WZRC bitstream (``repro.codec``),
-    so the response that leaves the host is the entropy-coded bytes —
-    clients reconstruct the pyramid (or the original samples, the
-    integer transform being lossless) with ``codec.decode_pyramid`` /
-    ``codec.inverse_transform`` and no out-of-band metadata.
-
-    Overload and failure semantics (DESIGN.md §12):
-
-      * admission control — ``submit`` raises
-        :class:`~repro.resilience.errors.LoadShedError` once the queue
-        holds ``max_queue`` requests, so backpressure reaches the client
-        synchronously instead of growing an unbounded queue;
-      * per-request deadlines — with ``deadline_s`` set, a request that
-        waited longer than its deadline is dropped from the batch it
-        would have ridden in and comes back with ``error`` set to
-        :class:`~repro.resilience.errors.DeadlineExceededError` (one
-        late request never poisons the others);
-      * bounded retry — a transform failure (transient device loss, an
-        injected ``serve.transform`` chaos fault) retries up to
-        ``max_retries`` times with exponential backoff, warning
-        :class:`~repro.resilience.errors.RetryWarning` per attempt;
-        exhaustion re-queues the batch (no request is lost) and raises
-        :class:`~repro.resilience.errors.RetryExhaustedError`;
-      * encode degradation — a response-encode failure attaches the
-        error to that request only; the transform result (the pyramid)
-        still serves;
-      * range certification — with ``checked=True`` (or the
-        ``REPRO_DWT_CHECKED`` env toggle), ``submit`` traces the
-        request's measured sample interval through the engine's cascade
-        and raises
-        :class:`~repro.resilience.errors.IntegerOverflowError` for
-        samples that could wrap a lifting intermediate, before the
-        request ever rides a batch.
-    """
-
-    height: int
-    width: int
-    depth: Optional[int] = None  # set -> (D, H, W) volume bucket
-    batch_slots: int = 8
-    levels: int = 2
-    mode: str = "paper"
-    scheme: str = "cdf53"  # lifting scheme from the registry
-    backend: Optional[str] = None
-    encode_response: bool = False  # attach WZRC bytes to served requests
-    mesh: Optional[Any] = None  # jax.sharding.Mesh -> sharded transform
-    mesh_axis: str = "data"
-    max_queue: int = 1024  # admission budget: submit() sheds beyond this
-    deadline_s: Optional[float] = None  # per-request deadline (from submit)
-    max_retries: int = 2  # transform retries after the first attempt
-    retry_backoff_s: float = 0.05  # backoff base: 1x, 2x, 4x, ...
-    checked: Optional[bool] = None  # range-certify at submit (None: env)
-
-    def __post_init__(self):
-        from repro.core import lifting as _lifting
-        from repro.core import schemes as _schemes
-
-        if self.batch_slots < 1:
-            raise ValueError(f"batch_slots must be >= 1, got {self.batch_slots}")
-        if self.max_queue < 1:
-            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
-        if self.max_retries < 0:
-            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
-        _schemes.get_scheme(self.scheme)  # fail fast on unknown names
-        if self.depth is not None:
-            _lifting.check_levels_nd(
-                (self.depth, self.height, self.width), self.levels
-            )
-            if self.mesh is not None:
-                raise ValueError(
-                    "the sharded mesh route is 2D-only; volume buckets "
-                    "(depth set) serve through the fused N-D engine"
-                )
-        else:
-            _lifting.check_levels_2d(self.height, self.width, self.levels)
-        if self.mesh is not None:
-            from repro.kernels import sharded as _sharded
-
-            _sharded.check_shardable(
-                self.height, self.width, self.mesh.shape[self.mesh_axis],
-                self.levels, self.scheme,
-            )
-        self._pending: List[TransformRequest] = []
-
-    @property
-    def bucket_shape(self) -> Tuple[int, ...]:
-        if self.depth is not None:
-            return (self.depth, self.height, self.width)
-        return (self.height, self.width)
-
-    def submit(self, req: TransformRequest) -> None:
-        if req.image.shape != self.bucket_shape:
-            raise ValueError(
-                f"engine bucket is {self.bucket_shape}, got {req.image.shape}"
-            )
-        if not np.issubdtype(req.image.dtype, np.integer):
-            raise TypeError(
-                "integer DWT serving requires integer samples, got "
-                f"{req.image.dtype}; quantize client-side "
-                "(core.compression.quantize) before submitting"
-            )
-        if _ranges.checked_enabled(self.checked) and req.image.size:
-            # admission-time range certification: reject a request whose
-            # samples could wrap a lifting intermediate BEFORE it rides a
-            # batch (one host min/max + a cascade trace, no device work)
-            _ranges.assert_interval_safe(
-                int(req.image.min()),
-                int(req.image.max()),
-                scheme=self.scheme,
-                levels=self.levels,
-                dtype=np.int32,  # step() batches every bucket as int32
-                mode=self.mode,
-                ndim=3 if self.depth is not None else 2,
-                label=f"serve.submit(request {req.uid})",
-            )
-        if len(self._pending) >= self.max_queue:
-            raise LoadShedError(
-                f"serve queue at its admission budget ({self.max_queue} "
-                f"requests); request {req.uid} shed — back off and resubmit"
-            )
-        req.submitted_at = time.monotonic()
-        self._pending.append(req)
-
-    def _expire_overdue(self) -> List[TransformRequest]:
-        """Pull deadline-missed requests out of the queue (typed error)."""
-        if self.deadline_s is None:
-            return []
-        now = time.monotonic()
-        overdue, live = [], []
-        for r in self._pending:
-            waited = now - (r.submitted_at or now)
-            if waited > self.deadline_s:
-                r.error = DeadlineExceededError(
-                    f"request {r.uid} waited {waited:.3f}s, over its "
-                    f"{self.deadline_s}s deadline"
-                )
-                overdue.append(r)
-            else:
-                live.append(r)
-        self._pending = live
-        return overdue
-
-    def _transform_with_retry(self, batch: jax.Array):
-        """Bounded-backoff retry around the batched transform."""
-        attempts = self.max_retries + 1
-        for attempt in range(attempts):
-            try:
-                inject.check("serve.transform")
-                return self._transform(batch)
-            except Exception as e:  # noqa: BLE001 - transient device faults
-                if attempt + 1 >= attempts:
-                    raise RetryExhaustedError(
-                        f"transform failed after {attempts} attempts: "
-                        f"{type(e).__name__}: {e}"
-                    ) from e
-                warnings.warn(
-                    RetryWarning(
-                        f"transform attempt {attempt + 1}/{attempts} failed "
-                        f"({type(e).__name__}: {e}); retrying"
-                    ),
-                    stacklevel=3,
-                )
-                time.sleep(self.retry_backoff_s * (2 ** attempt))
-
-    def _transform(self, batch: jax.Array):
-        from repro import kernels as K
-
-        if self.mesh is not None:
-            return K.dwt_fwd_2d_sharded(
-                batch, self.mesh, levels=self.levels, mode=self.mode,
-                axis=self.mesh_axis, scheme=self.scheme,
-            )
-        if self.depth is not None:
-            return K.dwt_fwd_nd(
-                batch, levels=self.levels, mode=self.mode,
-                backend=self.backend, scheme=self.scheme, ndim=3,
-            )
-        return K.dwt_fwd_2d_multi(
-            batch, levels=self.levels, mode=self.mode, backend=self.backend,
-            scheme=self.scheme,
-        )
-
-    def step(self) -> List[TransformRequest]:
-        """Serve one micro-batch; returns the requests it completed.
-
-        Deadline-missed requests come back alongside the served ones,
-        with ``done=False`` and ``error`` set — check per request.
-        """
-        overdue = self._expire_overdue()
-        if not self._pending:
-            return overdue
-        active = self._pending[: self.batch_slots]
-        self._pending = self._pending[self.batch_slots :]
-        # static batch shape: unfilled slots repeat row 0 (discarded)
-        batch = np.zeros((self.batch_slots,) + self.bucket_shape, np.int32)
-        for i, r in enumerate(active):
-            batch[i] = r.image
-        try:
-            pyr = self._transform_with_retry(jnp.asarray(batch))
-        except RetryExhaustedError:
-            # no request is lost: the batch goes back to the queue head
-            # (still deadline-governed) while the error reaches the caller
-            self._pending = active + self._pending
-            raise
-        for i, r in enumerate(active):
-            r.pyramid = jax.tree_util.tree_map(lambda b, i=i: b[i], pyr)
-            if self.encode_response:
-                from repro.codec import container
-
-                try:
-                    inject.check("serve.encode")
-                    r.encoded = container.encode_pyramid(
-                        r.pyramid,
-                        scheme=self.scheme,
-                        mode=self.mode,
-                        ndim=3 if self.depth is not None else None,
-                        backend=self.backend,
-                    )
-                except Exception as e:  # noqa: BLE001 - degrade per request
-                    r.error = e
-                    warnings.warn(
-                        ResilienceWarning(
-                            f"response encode failed for request {r.uid} "
-                            f"({type(e).__name__}: {e}); serving the "
-                            "pyramid without its encoded bytes"
-                        ),
-                        stacklevel=2,
-                    )
-            r.done = True
-        return overdue + active
-
-    def run(self, requests: List[TransformRequest]) -> List[TransformRequest]:
-        for r in requests:
-            self.submit(r)
-        done: List[TransformRequest] = []
-        while self._pending:
-            done.extend(self.step())
-        return done

@@ -86,6 +86,23 @@ def test_resilience_section_shape_and_outcomes():
     assert gate.check_resilience(_bench()) == []
 
 
+def test_serve_section_shape_and_invariants():
+    """The checked-in serve section must carry the measured serve-tier
+    acceptance numbers: a perfect post-warmup executable-cache hit rate,
+    at most one compile per bucket, a batch-level encode that actually
+    amortizes the coder, and a thumbnail tier that reads a strict byte
+    subset of the stored container."""
+    srv = _bench()["serve"]
+    assert len(srv["buckets"]) >= 2
+    assert all(len(b) == 2 for b in srv["buckets"])
+    assert srv["requests_per_s"] > 0 and srv["p99_ms"] > 0
+    assert srv["cache_hit_rate"] == 1.0
+    assert srv["compiles"] <= len(srv["buckets"])
+    assert srv["batch_encode_speedup"] >= gate.MIN_BATCH_ENCODE_SPEEDUP
+    assert 0 < srv["thumbnail_bytes_fraction"] < 1
+    assert gate.check_serve(_bench()) == []
+
+
 def test_gate_fault_taxonomy_matches_registry():
     """gate.py is stdlib-only, so its fault-class expectations are a
     literal — keep it in lockstep with the live injection taxonomy."""

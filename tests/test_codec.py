@@ -526,10 +526,16 @@ def test_serve_encoded_response_roundtrip():
         for i in range(3)
     ]
     for r in eng.run(reqs):
+        # responses share ONE WZRC container per micro-batch; each
+        # request carries its row index into the batched decode
         dec = container.decode_pyramid(r.encoded)
         assert dec.scheme == "97m"
+        row = container.decode_batch(r.encoded)[r.batch_index]
         np.testing.assert_array_equal(
-            np.asarray(container.inverse_transform(dec)), r.image
+            np.asarray(
+                container.inverse_transform(dec._replace(pyramid=row, lead=()))
+            ),
+            r.image,
         )
 
 
@@ -544,9 +550,11 @@ def test_serve_encoded_response_volume():
         uid=0, image=RNG.integers(-500, 500, (8, 8, 8)).astype(np.int32)
     )
     eng.run([req])
+    dec = container.decode_pyramid(req.encoded)
+    row = container.decode_batch(req.encoded)[req.batch_index]
     np.testing.assert_array_equal(
         np.asarray(
-            container.inverse_transform(container.decode_pyramid(req.encoded))
+            container.inverse_transform(dec._replace(pyramid=row, lead=()))
         ),
         req.image,
     )

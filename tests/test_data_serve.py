@@ -142,11 +142,15 @@ def test_wavelet_serve_engine_batched():
 
 
 def test_wavelet_serve_engine_rejects_wrong_bucket():
+    """Images larger than every bucket are rejected at admission;
+    smaller images zero-pad into the nearest containing bucket."""
     from repro.serve.serve_step import TransformRequest, WaveletServeEngine
 
     eng = WaveletServeEngine(height=16, width=16, batch_slots=2, levels=1)
     with pytest.raises(ValueError, match="bucket"):
-        eng.submit(TransformRequest(uid=1, image=np.zeros((8, 8), np.int32)))
+        eng.submit(TransformRequest(uid=1, image=np.zeros((32, 32), np.int32)))
+    eng.submit(TransformRequest(uid=2, image=np.zeros((8, 8), np.int32)))
+    assert eng.scheduler.pending() == 1  # pad-admitted, not rejected
 
 
 def test_wavelet_serve_volume_route():

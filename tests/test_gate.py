@@ -92,6 +92,20 @@ def _good_bench() -> dict:
                 "deadline-miss": "typed-error",
             },
         },
+        "serve": {
+            "buckets": [[16, 16], [32, 32]],
+            "batch_slots": 8,
+            "levels": 2,
+            "requests": 32,
+            "requests_per_s": 100.0,
+            "p99_ms": 50.0,
+            "compiles": 2,
+            "cache_hit_rate": 1.0,
+            "batch_encode_ms": 1.0,
+            "per_request_encode_ms": 4.0,
+            "batch_encode_speedup": 4.0,
+            "thumbnail_bytes_fraction": 0.1,
+        },
         "ranges": {
             "certificates": {
                 "cdf53": {"safe_abs_1d_l1": gate.CDF53_SAFE_ABS_1D_L1,
@@ -380,6 +394,60 @@ def test_ranges_missing_section_fails_schema():
 def test_summary_mentions_ranges():
     s = gate.summary(_good_bench())
     assert "ranges checked=6 engines typed" in s
+
+
+def test_serve_cache_miss_after_warmup_fails():
+    """A hit rate below 1.0 means something recompiled under the warmed
+    mixed-bucket workload — the exact regression the executable cache
+    exists to rule out."""
+    bench = _good_bench()
+    bench["serve"]["cache_hit_rate"] = 0.75
+    fails = gate.check_serve(bench)
+    assert any("hit rate 0.75" in f and "recompiled" in f for f in fails)
+
+
+def test_serve_recompile_per_request_fails():
+    bench = _good_bench()
+    bench["serve"]["compiles"] = 7
+    fails = gate.check_serve(bench)
+    assert any("7 compiles for 2 buckets" in f for f in fails)
+
+
+def test_serve_batch_encode_speedup_floor():
+    bench = _good_bench()
+    bench["serve"]["batch_encode_speedup"] = 1.2
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("below the 1.5x floor" in f for f in fails)
+
+
+def test_serve_thumbnail_fraction_bounds():
+    """The thumbnail tier must read a STRICT byte subset: a fraction of
+    1.0 means progressive decode degenerated into a full read, 0 or
+    negative means the accounting broke."""
+    for bad in (0, 1.0, 1.7, -0.2, True):
+        bench = _good_bench()
+        bench["serve"]["thumbnail_bytes_fraction"] = bad
+        fails = gate.check_serve(bench)
+        assert any("thumbnail tier" in f for f in fails), bad
+
+
+def test_serve_nonpositive_throughput_fails():
+    bench = _good_bench()
+    bench["serve"]["requests_per_s"] = 0
+    fails = gate.check_serve(bench)
+    assert any("non-positive throughput" in f for f in fails)
+
+
+def test_serve_missing_section_fails_schema():
+    bench = _good_bench()
+    del bench["serve"]
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("missing section 'serve'" in f for f in fails)
+
+
+def test_summary_mentions_serve():
+    s = gate.summary(_good_bench())
+    assert "serve 100.0 req/s" in s and "hit-rate=1.0" in s
 
 
 def test_main_exit_codes(tmp_path):

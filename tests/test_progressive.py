@@ -1,0 +1,276 @@
+"""Progressive byte-range decode of WZRC containers (codec.progressive).
+
+The three acceptance invariants: partial decode is MEASURABLY partial
+(the thumbnail tier reads strictly fewer bytes than the container
+holds, proven with the counting reader), every tier is bit-exact
+against the full decode truncated to the same levels, and a corrupt
+refinement band never disturbs the clean coarser tiers.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import codec
+from repro import kernels as K
+from repro.codec import container, progressive
+from repro.codec.errors import CorruptBandError, CorruptHeaderError
+from repro.resilience import inject
+
+
+def _pyr2d(seed=0, shape=(32, 24), levels=2, lead=()):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-4096, 4096, lead + shape), jnp.int32)
+    return K.dwt_fwd_2d_multi(x, levels=levels), x
+
+
+def _bands_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Ranged header + band reads.
+# ---------------------------------------------------------------------------
+
+
+def test_read_header_matches_full_parse():
+    pyr, _ = _pyr2d()
+    blob = container.encode_pyramid(pyr)
+    h_ranged = progressive.read_header(progressive.CountingReader(blob))
+    h_full = container._parse_header(blob)
+    assert h_ranged == h_full
+
+
+def test_read_header_reads_only_the_header():
+    pyr, _ = _pyr2d()
+    blob = container.encode_pyramid(pyr)
+    reader = progressive.CountingReader(blob)
+    h = progressive.read_header(reader)
+    assert reader.bytes_read == h.body_off  # not one body byte
+    assert h.body_off < len(blob)
+
+
+def test_read_header_rejects_garbage():
+    with pytest.raises(CorruptHeaderError, match="magic"):
+        progressive.read_header(b"nope" + b"\x00" * 64)
+
+
+def test_band_byte_ranges_tile_the_body():
+    pyr, _ = _pyr2d(levels=3)
+    blob = container.encode_pyramid(pyr, parity=True)
+    h = progressive.read_header(blob)
+    ranges = progressive.band_byte_ranges(h)
+    off = h.body_off
+    for (o, ln), blen in zip(ranges, h.blob_lens):
+        assert (o, ln) == (off, blen)
+        off += blen
+    assert off + h.parity_len == len(blob)
+
+
+# ---------------------------------------------------------------------------
+# Tier bit-exactness.
+# ---------------------------------------------------------------------------
+
+
+def test_lowband_tier_is_bit_exact_and_partial():
+    """The thumbnail tier equals the full decode's approx band exactly,
+    while reading strictly fewer bytes than the container holds."""
+    pyr, _ = _pyr2d(levels=3)
+    blob = container.encode_pyramid(pyr)
+    reader = progressive.CountingReader(blob)
+    dec = codec.decode_lowband(reader)
+    np.testing.assert_array_equal(np.asarray(dec.band), np.asarray(pyr.ll))
+    assert dec.status == "ok" and dec.levels == 3
+    assert reader.bytes_read < len(reader)
+    # a 3-level pyramid's LL holds ~1/64 of the samples; the tier must
+    # be a small fraction of the blob, not "all but one byte"
+    assert reader.bytes_read < len(reader) // 2
+
+
+def test_decode_band_every_index_matches_full_decode():
+    pyr, _ = _pyr2d(levels=2)
+    blob = container.encode_pyramid(pyr)
+    full = container.decode_pyramid(blob)
+    flat = container._flatten_bands(full.pyramid, full.kind)
+    for i in range(1 + 3 * 2):
+        got = codec.decode_band(blob, i)
+        np.testing.assert_array_equal(np.asarray(got.band), flat[i])
+    with pytest.raises(ValueError, match="out of range"):
+        codec.decode_band(blob, 7)
+
+
+@pytest.mark.parametrize("up_to", [0, 1, 2, 3])
+def test_decode_progressive_is_truncated_full_decode(up_to):
+    """decode_progressive(L) == the full pyramid truncated to its
+    coarsest L levels, bit for bit, at every tier."""
+    pyr, _ = _pyr2d(levels=3)
+    blob = container.encode_pyramid(pyr)
+    dec = codec.decode_progressive(blob, up_to)
+    assert dec.levels == up_to
+    np.testing.assert_array_equal(np.asarray(dec.pyramid.ll), np.asarray(pyr.ll))
+    assert _bands_equal(dec.pyramid.details, pyr.details[:up_to])
+
+
+def test_decode_progressive_reads_only_its_tiers_bytes():
+    """Byte accounting per tier: each deeper tier reads more, the top
+    tier reads everything, every lower tier strictly less."""
+    pyr, _ = _pyr2d(levels=3)
+    blob = container.encode_pyramid(pyr)
+    reads = []
+    for up_to in range(4):
+        reader = progressive.CountingReader(blob)
+        codec.decode_progressive(reader, up_to)
+        reads.append(reader.bytes_read)
+    assert reads == sorted(reads) and len(set(reads)) == 4
+    assert reads[-1] == len(blob)  # full tier touches every byte
+    assert reads[0] < len(blob) // 2
+    with pytest.raises(ValueError, match="up_to_level"):
+        codec.decode_progressive(blob, 4)
+
+
+def test_progressive_reconstruct_yields_intermediate_resolutions():
+    """Inverse-transforming a truncated tier yields the cascade's own
+    intermediate approximation — i.e. what dwt_fwd at fewer levels calls
+    its ll band."""
+    pyr, x = _pyr2d(levels=3, shape=(32, 32))
+    blob = container.encode_pyramid(pyr)
+    # tier 0: the ll band itself
+    d0 = codec.decode_progressive(blob, 0)
+    np.testing.assert_array_equal(
+        np.asarray(progressive.reconstruct(d0)), np.asarray(pyr.ll)
+    )
+    # tier 1 reconstructs the level-2 approximation of the original
+    d1 = codec.decode_progressive(blob, 1)
+    want = K.dwt_fwd_2d_multi(x, levels=2).ll
+    np.testing.assert_array_equal(
+        np.asarray(progressive.reconstruct(d1)), np.asarray(want)
+    )
+    # full tier reconstructs the original samples
+    d3 = codec.decode_progressive(blob, 3)
+    np.testing.assert_array_equal(
+        np.asarray(progressive.reconstruct(d3)), np.asarray(x)
+    )
+
+
+def test_progressive_on_batch_and_nd_containers():
+    # batch container: every tier keeps the lead dim
+    pyr, x = _pyr2d(levels=2, lead=(3,))
+    blob = container.encode_batch(pyr)
+    dec = codec.decode_lowband(blob)
+    assert dec.band.shape == (3,) + pyr.ll.shape[1:]
+    np.testing.assert_array_equal(np.asarray(dec.band), np.asarray(pyr.ll))
+    d1 = codec.decode_progressive(blob, 1)
+    assert _bands_equal(d1.pyramid.details, pyr.details[:1])
+    # 3D container
+    rng = np.random.default_rng(5)
+    vol = jnp.asarray(rng.integers(-512, 512, (8, 16, 16)), jnp.int32)
+    pyr3 = K.dwt_fwd_nd(vol, levels=2, ndim=3)
+    blob3 = container.encode_pyramid(pyr3, ndim=3)
+    low3 = codec.decode_lowband(blob3)
+    np.testing.assert_array_equal(np.asarray(low3.band), np.asarray(pyr3.approx))
+    d31 = codec.decode_progressive(blob3, 1)
+    assert _bands_equal(d31.pyramid.details, pyr3.details[:1])
+
+
+def test_progressive_supports_v1_containers():
+    pyr, _ = _pyr2d(levels=2)
+    blob = container.encode_pyramid(pyr, version=1)
+    dec = codec.decode_lowband(blob)
+    np.testing.assert_array_equal(np.asarray(dec.band), np.asarray(pyr.ll))
+    d2 = codec.decode_progressive(blob, 2)
+    assert _bands_equal(d2.pyramid, pyr)
+
+
+# ---------------------------------------------------------------------------
+# Corruption: quarantine, healing, isolation of tiers.
+# ---------------------------------------------------------------------------
+
+
+def _corrupt_band(blob: bytes, index: int) -> bytes:
+    h = progressive.read_header(blob)
+    off, ln = progressive.band_byte_ranges(h)[index]
+    return inject.flip_byte(blob, off + ln // 2)
+
+
+def test_corrupt_refinement_band_leaves_thumbnail_clean():
+    """Damage in a finest-level detail band: the thumbnail and every
+    coarser tier decode bit-exactly from their own byte ranges; only the
+    tier that includes the damaged band is affected."""
+    pyr, _ = _pyr2d(levels=2)
+    blob = container.encode_pyramid(pyr)  # v2, no parity
+    bad = _corrupt_band(blob, 5)  # a level-2 (finest) detail band
+    low = codec.decode_lowband(bad)
+    np.testing.assert_array_equal(np.asarray(low.band), np.asarray(pyr.ll))
+    d1 = codec.decode_progressive(bad, 1)  # tier below the damage
+    assert _bands_equal(d1.pyramid.details, pyr.details[:1])
+    with pytest.raises(CorruptBandError):
+        codec.decode_progressive(bad, 2)  # tier including the damage
+    # partial=True quarantines the damaged band and keeps the rest
+    d2 = codec.decode_progressive(bad, 2, partial=True)
+    assert d2.band_status.count("corrupt") == 1
+    np.testing.assert_array_equal(np.asarray(d2.pyramid.ll), np.asarray(pyr.ll))
+    assert _bands_equal(d2.pyramid.details[0], pyr.details[0])
+
+
+def test_corrupt_lowband_heals_from_parity():
+    pyr, _ = _pyr2d(levels=2)
+    blob = container.encode_pyramid(pyr, parity=True)
+    bad = _corrupt_band(blob, 0)
+    dec = codec.decode_lowband(bad)  # heal=True default
+    assert dec.status == "reconstructed"
+    np.testing.assert_array_equal(np.asarray(dec.band), np.asarray(pyr.ll))
+    with pytest.raises(CorruptBandError, match="parity absent|could not heal"):
+        codec.decode_lowband(_corrupt_band(container.encode_pyramid(pyr), 0))
+
+
+def test_heal_false_never_reads_beyond_the_tier():
+    """With healing off, a clean decode and a corrupt one both stay
+    inside the tier's byte ranges — no full-body fallback read."""
+    pyr, _ = _pyr2d(levels=2)
+    blob = container.encode_pyramid(pyr, parity=True)
+    reader = progressive.CountingReader(blob)
+    codec.decode_lowband(reader, heal=False)
+    h = progressive.read_header(blob)
+    assert reader.bytes_read <= 2 * h.body_off + h.blob_lens[0]
+    bad = _corrupt_band(blob, 0)
+    with pytest.raises(CorruptBandError):
+        codec.decode_lowband(bad, heal=False)
+
+
+def test_crc_checked_per_band_on_every_tier():
+    """Each tier re-verifies exactly the CRCs of the bands it returns —
+    flipping any byte of an in-range band is always caught."""
+    pyr, _ = _pyr2d(levels=2)
+    blob = container.encode_pyramid(pyr)
+    for i in range(4):  # every band the up_to=1 tier reads
+        with pytest.raises(CorruptBandError):
+            codec.decode_progressive(_corrupt_band(blob, i), 1)
+
+
+def test_header_crc_verified_on_ranged_reads():
+    pyr, _ = _pyr2d()
+    blob = container.encode_pyramid(pyr)
+    h = progressive.read_header(blob)
+    bad = inject.flip_byte(blob, h.body_off - 6)  # inside the header CRC span
+    with pytest.raises(CorruptHeaderError):
+        progressive.read_header(bad)
+
+
+def test_parity_crc_guards_healing():
+    """A damaged band AND damaged parity: healing must refuse (the
+    reconstruction would be garbage) and report unrecoverable."""
+    pyr, _ = _pyr2d(levels=2)
+    blob = container.encode_pyramid(pyr, parity=True)
+    h = progressive.read_header(blob)
+    parity_off = h.body_off + sum(h.blob_lens)
+    bad = inject.flip_byte(_corrupt_band(blob, 0), parity_off + 3)
+    with pytest.raises(CorruptBandError, match="could not heal"):
+        codec.decode_lowband(bad)
+    # crc32 sanity: the parity byte really is covered by parity_crc
+    assert zlib.crc32(bad[parity_off:]) & 0xFFFFFFFF != h.parity_crc

@@ -493,7 +493,7 @@ def test_serve_submit_range_admission():
     hot[::2] = -(2**29)
     with pytest.raises(IntegerOverflowError):
         eng.submit(TransformRequest(uid=0, image=hot))
-    assert not eng._pending  # shed synchronously, nothing queued
+    assert eng.scheduler.pending() == 0  # shed synchronously, nothing queued
     good = TransformRequest(
         uid=1,
         image=np.random.default_rng(14)
@@ -506,7 +506,7 @@ def test_serve_submit_range_admission():
     # unchecked engine admits the same hot request (historic behavior)
     eng2 = WaveletServeEngine(height=16, width=16, batch_slots=2, levels=2)
     eng2.submit(TransformRequest(uid=2, image=hot))
-    assert len(eng2._pending) == 1
+    assert eng2.scheduler.pending() == 1
 
 
 # ---------------------------------------------------------------------------

@@ -488,18 +488,24 @@ def test_serve_load_shedding_admission():
 
 
 def test_serve_encode_failure_degrades_per_request():
+    """The encode degradation ladder: batch container -> per-request loop
+    -> per-request quarantine.  A failed batch-level encode falls back to
+    the PR 6 per-request loop, and a per-request failure inside THAT
+    quarantines one request without poisoning its batchmates."""
     eng = WaveletServeEngine(
         height=16, width=16, levels=1, encode_response=True, batch_slots=2
     )
     eng.submit(TransformRequest(uid=1, image=_image(1)))
     eng.submit(TransformRequest(uid=2, image=_image(2)))
-    with inject.armed("serve.encode", at_call=1, times=1):  # first encode only
-        done = eng.step()
+    with inject.armed("serve.encode_batch", times=1):  # force the fallback
+        with inject.armed("serve.encode", at_call=1, times=1):  # then uid 1
+            done = eng.step()
     by_uid = {r.uid: r for r in done}
     assert by_uid[1].done and by_uid[1].encoded is None
     assert isinstance(by_uid[1].error, InjectedFault)
     assert by_uid[1].pyramid is not None  # the transform result still serves
     assert by_uid[2].encoded is not None and by_uid[2].error is None
+    assert by_uid[2].batch_index is None  # per-request container
     dec = decode_pyramid(by_uid[2].encoded)
     assert _pyramids_equal(dec.pyramid, by_uid[2].pyramid)
 
