@@ -42,6 +42,10 @@ Gates (fail = non-zero exit, every failure listed):
     admission or bucket switch), the batch-level response encode beats
     the per-request loop by 1.5x+, and the progressive thumbnail tier
     reads a strict fraction of the stored container's bytes.
+  * Observability — the ``repro.obs`` instrumentation costs <= 1.10x on
+    the serve throughput workload vs the disabled arm, every subsystem
+    reports live metric series AND spans after one seeded chaos run,
+    and that run emits every event kind in the taxonomy at least once.
 
 This module is dependency-free (stdlib only) on purpose: the gates must
 stay runnable — and unit-testable — without importing jax.
@@ -107,12 +111,36 @@ REQUIRED_SECTIONS: Dict[str, tuple] = {
         "batch_encode_speedup",
         "thumbnail_bytes_fraction",
     ),
+    "observability": (
+        "overhead_x",
+        "events",
+        "event_total",
+        "metric_subsystems",
+        "span_subsystems",
+    ),
 }
 
 # batch-level response encode (one WZRC container per micro-batch) must
 # amortize the per-request coder overhead by at least this much on the
 # bench workload — the reason PR 8 moved the encode to the batch level
 MIN_BATCH_ENCODE_SPEEDUP = 1.5
+
+# instrumentation must be cheap enough to leave on in production: the
+# serve throughput workload with the obs layer live may cost at most
+# this much over the obs.disabled() bare arm (drift-cancelled pairs)
+MAX_OBS_OVERHEAD = 1.10
+
+# every subsystem the obs layer must cover (metric series AND spans),
+# and every event kind one seeded chaos run must produce at least once
+OBS_SUBSYSTEMS = ("ckpt", "codec", "collectives", "kernels", "serve")
+OBS_EVENT_KINDS = (
+    "AdmissionEvent",
+    "DegradeEvent",
+    "DispatchEvent",
+    "FaultEvent",
+    "HealEvent",
+    "RetryEvent",
+)
 
 # every engine the checked mode must cover; a wrap-capable input through
 # any of them must surface as IntegerOverflowError ("typed-error"), never
@@ -489,6 +517,48 @@ def check_serve(bench: dict) -> List[str]:
     return fails
 
 
+def check_obs(bench: dict) -> List[str]:
+    """Gates over the observability section.
+
+    Pins the obs-layer acceptance claims at the bench layer: the
+    instrumentation costs at most MAX_OBS_OVERHEAD on the serve
+    throughput workload (vs the ``obs.disabled()`` bare arm), every
+    subsystem shows up with live metric series AND recorded spans after
+    one seeded chaos run, and that run produces at least one event of
+    every kind in the taxonomy — a silent instrumentation regression
+    (a subsystem dropping off the registry, an event site going dark)
+    fails here, not in production."""
+    fails = []
+    o = bench["observability"]
+    ratio = o["overhead_x"]
+    if not (isinstance(ratio, (int, float)) and 0 < ratio <= MAX_OBS_OVERHEAD):
+        fails.append(
+            f"observability: instrumentation overhead {ratio!r}x exceeds "
+            f"{MAX_OBS_OVERHEAD}x on the serve throughput workload — "
+            "too expensive to leave on"
+        )
+    for key in ("metric_subsystems", "span_subsystems"):
+        got = set(o[key])
+        missing = [s for s in OBS_SUBSYSTEMS if s not in got]
+        if missing:
+            fails.append(
+                f"observability: {key} missing {missing} after the "
+                "seeded chaos run (instrumentation went dark)"
+            )
+    for kind in OBS_EVENT_KINDS:
+        if o["events"].get(kind, 0) < 1:
+            fails.append(
+                f"observability: chaos run produced no {kind} — that "
+                "event site stopped emitting"
+            )
+    if o["event_total"] < sum(o["events"].values()):
+        fails.append(
+            f"observability: event_total {o['event_total']} below the "
+            "in-ring count — the unbounded total regressed"
+        )
+    return fails
+
+
 def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
     """Every gate failure, most structural first.  ANY schema failure
     stops before the behavioural gates: those index the payload freely
@@ -505,6 +575,7 @@ def gate_failures(rows: Dict[str, str], bench: dict) -> List[str]:
         + check_resilience(bench)
         + check_ranges(bench)
         + check_serve(bench)
+        + check_obs(bench)
     )
 
 
@@ -533,7 +604,10 @@ def summary(bench: dict) -> str:
         f"p99={bench['serve']['p99_ms']}ms "
         f"hit-rate={bench['serve']['cache_hit_rate']} "
         f"batch-enc={bench['serve']['batch_encode_speedup']}x "
-        f"thumb={bench['serve']['thumbnail_bytes_fraction']} "
+        f"thumb={bench['serve']['thumbnail_bytes_fraction']}; "
+        f"obs overhead={bench['observability']['overhead_x']}x "
+        f"subsystems={len(bench['observability']['metric_subsystems'])} "
+        f"events={bench['observability']['event_total']} "
         f"(backend={bench['default_backend']}, platform={bench['platform']})"
     )
 

@@ -68,7 +68,7 @@ import json
 import os
 import shutil
 import threading
-import warnings
+import time
 import zlib
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
@@ -76,6 +76,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import obs
 from repro import kernels as K
 from repro.core import compression as C
 from repro.resilience import inject
@@ -497,6 +498,13 @@ class CheckpointManager:
             raise exc
 
     def _save_impl(self, step: int, tree: PyTree) -> None:
+        t0 = time.perf_counter()
+        with obs.span("ckpt.save", subsystem="ckpt", step=step):
+            self._save_inner(step, tree)
+        obs.counter("ckpt.saves").inc()
+        obs.histogram("ckpt.save_ms").observe((time.perf_counter() - t0) * 1e3)
+
+    def _save_inner(self, step: int, tree: PyTree) -> None:
         step_dir = self.directory / f"step_{step:010d}"
         tmp_dir = self.directory / f".tmp_step_{step:010d}_{self.host_id}"
         if tmp_dir.exists():
@@ -598,11 +606,21 @@ class CheckpointManager:
                     m["codec"], m["meta"],
                 )
             except Exception as e:
+                obs.counter("ckpt.integrity_failures").inc()
+                obs.emit(obs.FaultEvent(
+                    subsystem="ckpt", error="CheckpointIntegrityError",
+                    site="ckpt.restore", detail=f"leaf {name} step {step}",
+                ))
                 raise CheckpointIntegrityError(
                     f"checksum mismatch for {name} in step {step} "
                     f"(container could not self-heal: {e})"
                 ) from e
-            warnings.warn(
+            obs.counter("ckpt.heals").inc()
+            obs.warn_event(
+                obs.HealEvent(
+                    subsystem="ckpt", mechanism="parity",
+                    detail=f"leaf {name} step {step} healed past a bad sha256",
+                ),
                 DegradedRestoreWarning(
                     f"leaf {name} in step {step} failed its sha256 but "
                     "decoded via the container's per-band CRC/parity path"
@@ -610,6 +628,11 @@ class CheckpointManager:
                 stacklevel=3,
             )
             return healed
+        obs.counter("ckpt.integrity_failures").inc()
+        obs.emit(obs.FaultEvent(
+            subsystem="ckpt", error="CheckpointIntegrityError",
+            site="ckpt.restore", detail=f"leaf {name} step {step}",
+        ))
         raise CheckpointIntegrityError(
             f"checksum mismatch for {name} in step {step}"
         )
@@ -620,11 +643,17 @@ class CheckpointManager:
             if step is None:
                 raise FileNotFoundError(f"no checkpoint in {self.directory}")
         step_dir = self.directory / f"step_{step:010d}"
-        info = json.loads((step_dir / "manifest.json").read_text())
-        leaves: Dict[str, np.ndarray] = {}
-        for name, m in info["leaves"].items():
-            data = (step_dir / m["file"]).read_bytes()
-            leaves[name] = self._restore_leaf(name, step, data, m)
+        t0 = time.perf_counter()
+        with obs.span("ckpt.restore", subsystem="ckpt", step=step):
+            info = json.loads((step_dir / "manifest.json").read_text())
+            leaves: Dict[str, np.ndarray] = {}
+            for name, m in info["leaves"].items():
+                data = (step_dir / m["file"]).read_bytes()
+                leaves[name] = self._restore_leaf(name, step, data, m)
+        obs.counter("ckpt.restores").inc()
+        obs.histogram("ckpt.restore_ms").observe(
+            (time.perf_counter() - t0) * 1e3
+        )
         if template is not None:
             flat = _leaf_paths(template)
             vals = [leaves[n] for n, _ in flat]

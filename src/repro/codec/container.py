@@ -64,6 +64,7 @@ path and the parity reconstruction all lean on.
 from __future__ import annotations
 
 import struct
+import time
 import zlib
 from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -71,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.codec import rice
 from repro.codec.errors import (
     CodecError,
@@ -241,7 +243,52 @@ def _xor_parity(blobs: Sequence[bytes], plen: int) -> bytes:
 # ---------------------------------------------------------------------------
 
 
+def _raw_nbytes(pyr: Any) -> int:
+    """Uncompressed band bytes, from shape/dtype metadata only (never
+    touches band data — no device sync)."""
+    return sum(
+        int(leaf.size) * np.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree_util.tree_leaves(pyr)
+        if hasattr(leaf, "size") and hasattr(leaf, "dtype")
+    )
+
+
 def encode_pyramid(
+    pyr: Any,
+    scheme: str = "cdf53",
+    mode: str = "paper",
+    *,
+    ndim: Optional[int] = None,
+    backend: Optional[str] = None,
+    checksum: bool = True,
+    parity: bool = False,
+    version: int = FORMAT_VERSION,
+    checked: Optional[bool] = None,
+) -> bytes:
+    """Serialize an integer wavelet pyramid (see :func:`_encode_impl`).
+
+    Instrumented entry point: records encode duration, coded bytes, and
+    the raw/coded compression ratio in the process-wide obs registry
+    (``codec.encode_*``) around the actual encoder.
+    """
+    t0 = time.perf_counter()
+    with obs.span("codec.encode_pyramid", subsystem="codec"):
+        out = _encode_impl(
+            pyr, scheme, mode, ndim=ndim, backend=backend,
+            checksum=checksum, parity=parity, version=version,
+            checked=checked,
+        )
+    dur_ms = (time.perf_counter() - t0) * 1e3
+    obs.counter("codec.encode_calls").inc()
+    obs.counter("codec.encode_bytes").inc(len(out))
+    obs.histogram("codec.encode_ms").observe(dur_ms)
+    raw = _raw_nbytes(pyr)
+    if raw and out:
+        obs.gauge("codec.compression_ratio").set(raw / len(out))
+    return out
+
+
+def _encode_impl(
     pyr: Any,
     scheme: str = "cdf53",
     mode: str = "paper",
@@ -638,8 +685,20 @@ def _decode_common(data: bytes, partial: bool):
             jnp.asarray(flat.astype(h.dtype).reshape(h.lead + shp))
         )
 
+    healed = sum(1 for s in status if s == BAND_RECONSTRUCTED)
+    if healed:
+        obs.counter("codec.bands_healed").inc(healed)
+        obs.emit(obs.HealEvent(
+            subsystem="codec", mechanism="parity",
+            detail=f"{healed} band(s) reconstructed from the parity group",
+        ))
     damaged = [i for i, s in enumerate(status) if s == BAND_CORRUPT]
     if damaged and not partial:
+        obs.counter("codec.decode_corrupt").inc()
+        obs.emit(obs.FaultEvent(
+            subsystem="codec", error="CorruptBandError", site="codec.decode",
+            detail=f"bands {damaged} unrecoverable",
+        ))
         raise CorruptBandError(
             f"WZRC band(s) {damaged} corrupt and unrecoverable "
             f"({'parity absent' if not h.parity_len else 'parity could not heal'}); "
@@ -647,6 +706,19 @@ def _decode_common(data: bytes, partial: bool):
             band_status=status,
         )
     return h, _assemble(h, bands), tuple(status)
+
+
+def _timed_decode(data: bytes, partial: bool):
+    """Instrumented wrapper around :func:`_decode_common`: span +
+    duration/byte metrics (``codec.decode_*``) per container decode."""
+    t0 = time.perf_counter()
+    name = "codec.decode_pyramid_partial" if partial else "codec.decode_pyramid"
+    with obs.span(name, subsystem="codec"):
+        out = _decode_common(data, partial=partial)
+    obs.counter("codec.decode_calls").inc()
+    obs.counter("codec.decode_bytes").inc(len(data))
+    obs.histogram("codec.decode_ms").observe((time.perf_counter() - t0) * 1e3)
+    return out
 
 
 def decode_pyramid(data: bytes) -> DecodedPyramid:
@@ -657,7 +729,7 @@ def decode_pyramid(data: bytes) -> DecodedPyramid:
     that cannot heal raises :class:`CorruptBandError`; use
     :func:`decode_pyramid_partial` to recover the intact bands instead.
     """
-    h, pyr, status = _decode_common(data, partial=False)
+    h, pyr, status = _timed_decode(data, partial=False)
     return DecodedPyramid(
         pyramid=pyr,
         kind=h.kind,
@@ -680,7 +752,7 @@ def decode_pyramid_partial(data: bytes) -> PartialDecode:
     and every other band is bit-exact.  v1 blobs carry no per-band
     CRCs, so for them this is equivalent to :func:`decode_pyramid`.
     """
-    h, pyr, status = _decode_common(data, partial=True)
+    h, pyr, status = _timed_decode(data, partial=True)
     return PartialDecode(
         pyramid=pyr,
         kind=h.kind,

@@ -36,6 +36,8 @@ from typing import Iterator, Optional, Tuple
 
 import jax
 
+from repro import obs
+
 VALID_BACKENDS = ("pallas", "xla", "interpret")
 
 # "auto" in REPRO_DWT_BACKEND means: ignore the env var, use the platform
@@ -104,17 +106,18 @@ def resolve_backend(
             "off-accelerator: no compiled Pallas target on "
             f"platform={platform()!r}; running the same kernels emulated",
         )
+        _note_dispatch(name, "interpret", "degraded:off-accelerator")
         return ("interpret", "degraded:off-accelerator") if explain else "interpret"
-    if explain:
-        if backend:
-            return name, "explicit"
-        if _override:
-            return name, "context-override"
-        env = os.environ.get(_ENV_VAR, "").strip().lower()
-        if env and env != "auto":
-            return name, "env-var"
-        return name, "platform-default"
-    return name
+    if backend:
+        reason = "explicit"
+    elif _override:
+        reason = "context-override"
+    elif os.environ.get(_ENV_VAR, "").strip().lower() not in ("", "auto"):
+        reason = "env-var"
+    else:
+        reason = "platform-default"
+    _note_dispatch(backend or "", name, reason)
+    return (name, reason) if explain else name
 
 
 def resolve(backend: Optional[str] = None) -> str:
@@ -135,12 +138,40 @@ class BackendDegradeWarning(RuntimeWarning):
 
 # one-time degrade warnings: a silently-degraded request warns ONCE per
 # distinct (requested, resolved, reason) so production logs name the
-# cliff without spamming per-call.
+# cliff without spamming per-call.  The metrics registry counts EVERY
+# occurrence (obs counter ``kernels.degrades``) and the event log gets a
+# DegradeEvent per occurrence — dedupe applies to the warning only.
 _warned_degrades: set = set()
+
+# dispatch DECISIONS land in the event log once per distinct outcome;
+# dispatch VOLUME is the ``kernels.dispatch`` counter (per-call events
+# would crowd real transitions out of the bounded ring).
+_seen_dispatches: set = set()
+
+
+def _note_dispatch(requested: str, resolved: str, reason: str) -> None:
+    obs.counter("kernels.dispatch", resolved=resolved, reason=reason).inc()
+    key = (requested, resolved, reason)
+    if key not in _seen_dispatches:
+        _seen_dispatches.add(key)
+        obs.emit(obs.DispatchEvent(
+            subsystem="kernels", requested=requested, resolved=resolved,
+            reason=reason,
+        ))
 
 
 def note_degrade(requested: str, resolved: str, reason: str) -> None:
-    """Warn (once per (requested, resolved, reason)) about a degrade."""
+    """Record a degrade: count + event EVERY time, warn once per key.
+
+    The counter answers "how many times has this path degraded" (lost
+    under the old one-shot dedupe); the warning still fires exactly once
+    per distinct (requested, resolved, reason) so logs stay readable.
+    """
+    obs.counter("kernels.degrades", requested=requested, resolved=resolved).inc()
+    obs.emit(obs.DegradeEvent(
+        subsystem="kernels", requested=requested, resolved=resolved,
+        reason=reason,
+    ))
     key = (requested, resolved, reason)
     if key in _warned_degrades:
         return
@@ -150,6 +181,23 @@ def note_degrade(requested: str, resolved: str, reason: str) -> None:
         BackendDegradeWarning,
         stacklevel=3,
     )
+
+
+def _host_span(label: str):
+    """A kernels-subsystem span — but ONLY outside any jax trace.
+
+    ``pallas_guard`` runs both host-side (direct wrapper calls) and at
+    trace time (under a caller's ``jax.jit``); a span recorded during
+    tracing would measure compile time once and nothing thereafter, so
+    inside a trace this is a null context instead.
+    """
+    try:
+        clean = jax.core.trace_state_clean()
+    except Exception:  # noqa: BLE001 - jax internals moved; skip the span
+        return contextlib.nullcontext()
+    if not clean:
+        return contextlib.nullcontext()
+    return obs.span(label, subsystem="kernels")
 
 
 def pallas_guard(resolved: str, label: str, kernel_thunk, xla_thunk):
@@ -172,11 +220,16 @@ def pallas_guard(resolved: str, label: str, kernel_thunk, xla_thunk):
     from repro.resilience import inject
 
     if resolved == "xla":
-        return xla_thunk()
+        with _host_span(label):
+            return xla_thunk()
     try:
         inject.check("kernels.pallas")
-        return kernel_thunk()
+        with _host_span(label):
+            return kernel_thunk()
     except Exception as e:  # noqa: BLE001 - any lowering/launch failure
+        obs.emit(obs.FaultEvent(
+            subsystem="kernels", error=type(e).__name__, site=label,
+        ))
         note_degrade(
             resolved, "xla",
             f"{label}: kernel path failed ({type(e).__name__}: {e}); "

@@ -38,12 +38,14 @@ from __future__ import annotations
 
 import functools
 import threading
+import time
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro import obs
 from repro import sharding as SH
 from repro.core import ranges as _ranges
 from repro.core import schemes as S
@@ -74,8 +76,11 @@ def _watchdogged(thunk, label: str, timeout_s: Optional[float]):
     (a delay fault) without a real multi-host hang.
     """
     if timeout_s is None:
-        inject.check("sharded.collective")
-        return thunk()
+        # fast path: host dispatch only — the span measures launch cost,
+        # never a device sync (async dispatch returns before completion)
+        with obs.span(label, subsystem="collectives"):
+            inject.check("sharded.collective")
+            return thunk()
     result: list = []
     failure: list = []
 
@@ -88,14 +93,26 @@ def _watchdogged(thunk, label: str, timeout_s: Optional[float]):
             failure.append(e)
 
     worker = threading.Thread(target=_run, daemon=True)
-    worker.start()
-    worker.join(timeout_s)
+    t0 = time.perf_counter()
+    # watchdogged path: the worker blocks to completion anyway (that is
+    # the watchdog's job), so the span IS end-to-end collective time
+    with obs.span(label, subsystem="collectives", timeout_s=timeout_s):
+        worker.start()
+        worker.join(timeout_s)
     if worker.is_alive():
+        obs.counter("collectives.watchdog_trips").inc()
+        obs.emit(obs.FaultEvent(
+            subsystem="collectives", error="CollectiveTimeoutError",
+            site=label, detail=f"no completion within {timeout_s}s",
+        ))
         raise CollectiveTimeoutError(
             f"{label}: collective did not complete within {timeout_s}s — "
             "a mesh participant looks stuck (dead host or wedged "
             "interconnect); evict or reshard before retrying"
         )
+    obs.histogram("collectives.exchange_ms").observe(
+        (time.perf_counter() - t0) * 1e3
+    )
     if failure:
         raise failure[0]
     return result[0]

@@ -24,7 +24,6 @@ outside the data, so reconstruction stays bit-exact.
 from __future__ import annotations
 
 import time
-import warnings
 from dataclasses import dataclass, field
 from typing import Any, List, Optional, Sequence, Tuple
 
@@ -32,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import ranges as _ranges
 from repro.resilience import inject
 from repro.resilience.errors import (
@@ -266,16 +266,29 @@ class WaveletServeEngine:
         for attempt in range(attempts):
             try:
                 inject.check("serve.transform")
-                return self.executor.transform(
+                out = self.executor.transform(
                     jnp.asarray(batch_np), key, self.mesh
                 )
             except Exception as e:  # noqa: BLE001 - transient device faults
                 if attempt + 1 >= attempts:
+                    obs.counter("serve.retries_exhausted").inc()
+                    obs.emit(obs.FaultEvent(
+                        subsystem="serve", error=type(e).__name__,
+                        site="serve.transform",
+                    ))
                     raise RetryExhaustedError(
                         f"transform failed after {attempts} attempts: "
                         f"{type(e).__name__}: {e}"
                     ) from e
-                warnings.warn(
+                obs.counter("serve.retry_attempts").inc()
+                # RetryWarning (same category/stacklevel as the old direct
+                # warn) + a RetryEvent per attempt — the warning keeps CI's
+                # -W error::RuntimeWarning behaviour, the event keeps count
+                obs.warn_event(
+                    obs.RetryEvent(
+                        subsystem="serve", attempt=attempt + 1,
+                        attempts=attempts, error=type(e).__name__,
+                    ),
                     RetryWarning(
                         f"transform attempt {attempt + 1}/{attempts} failed "
                         f"({type(e).__name__}: {e}); retrying"
@@ -283,6 +296,13 @@ class WaveletServeEngine:
                     stacklevel=3,
                 )
                 time.sleep(self.retry_backoff_s * (2 ** attempt))
+            else:
+                if attempt:
+                    obs.emit(obs.HealEvent(
+                        subsystem="serve", mechanism="retry",
+                        detail=f"succeeded on attempt {attempt + 1}/{attempts}",
+                    ))
+                return out
 
     def _encode_batch(self, active: List[TransformRequest], pyr) -> None:
         """Batch-level response encode: ONE WZRC container per micro-batch.
@@ -304,7 +324,13 @@ class WaveletServeEngine:
                 backend=self.backend,
             )
         except Exception as e:  # noqa: BLE001 - degrade to per-request
-            warnings.warn(
+            obs.counter("serve.encode_degrades").inc()
+            obs.warn_event(
+                obs.DegradeEvent(
+                    subsystem="serve", requested="batch-encode",
+                    resolved="per-request-encode",
+                    reason=f"{type(e).__name__}: {e}",
+                ),
                 ResilienceWarning(
                     f"batch-level response encode failed "
                     f"({type(e).__name__}: {e}); degrading to per-request "
@@ -327,7 +353,13 @@ class WaveletServeEngine:
                 r.batch_index = None
             except Exception as e:  # noqa: BLE001 - quarantine per request
                 r.error = e
-                warnings.warn(
+                obs.counter("serve.encode_quarantines").inc()
+                obs.warn_event(
+                    obs.FaultEvent(
+                        subsystem="serve", error=type(e).__name__,
+                        site="serve.encode",
+                        detail=f"request {r.uid} quarantined",
+                    ),
                     ResilienceWarning(
                         f"response encode failed for request {r.uid} "
                         f"({type(e).__name__}: {e}); serving the "
@@ -347,6 +379,8 @@ class WaveletServeEngine:
         bucket, active = self.scheduler.next_batch(self.batch_slots)
         if bucket is None:
             return overdue
+        bucket_label = "x".join(str(s) for s in bucket)
+        t0 = time.perf_counter()
         # static batch shape: the executable is compiled for
         # (batch_slots,) + bucket, so unfilled slots — and the padding
         # margin of undersized requests — are ZERO-filled (zeros ride the
@@ -355,24 +389,31 @@ class WaveletServeEngine:
         for i, r in enumerate(active):
             batch[(i,) + tuple(slice(0, s) for s in r.image.shape)] = r.image
         key = self._exec_key(bucket)
-        try:
-            pyr = self._transform_with_retry(batch, key)
-        except RetryExhaustedError:
-            # no live request is lost: the batch goes back to its queue
-            # head while the error reaches the caller.  Requests whose
-            # deadline passed DURING the failed attempts are expired here
-            # — a re-queued batch must not serve already-overdue work —
-            # and delivered (typed error attached) by the next step()
-            expired, live = self.scheduler.expire_batch(active)
-            self._expired_out.extend(expired)
-            self.scheduler.requeue_front(bucket, live)
-            raise
-        for i, r in enumerate(active):
-            r.pyramid = jax.tree_util.tree_map(lambda b, i=i: b[i], pyr)
-        if self.encode_response and active:
-            self._encode_batch(active, pyr)
+        with obs.span("serve.step", subsystem="serve", bucket=bucket_label,
+                      n=len(active)):
+            try:
+                pyr = self._transform_with_retry(batch, key)
+            except RetryExhaustedError:
+                # no live request is lost: the batch goes back to its queue
+                # head while the error reaches the caller.  Requests whose
+                # deadline passed DURING the failed attempts are expired here
+                # — a re-queued batch must not serve already-overdue work —
+                # and delivered (typed error attached) by the next step()
+                expired, live = self.scheduler.expire_batch(active)
+                self._expired_out.extend(expired)
+                self.scheduler.requeue_front(bucket, live)
+                raise
+            for i, r in enumerate(active):
+                r.pyramid = jax.tree_util.tree_map(lambda b, i=i: b[i], pyr)
+            if self.encode_response and active:
+                self._encode_batch(active, pyr)
         for r in active:
             r.done = True
+        obs.histogram("serve.batch_latency_ms", bucket=bucket_label).observe(
+            (time.perf_counter() - t0) * 1e3
+        )
+        obs.counter("serve.requests_served").inc(len(active))
+        obs.counter("serve.batches").inc()
         return overdue + active
 
     def run(self, requests: List[TransformRequest]) -> List[TransformRequest]:

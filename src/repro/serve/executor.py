@@ -37,6 +37,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 
+from repro import obs
 from repro.kernels import backend as _backend
 
 Shape = Tuple[int, ...]
@@ -132,15 +133,26 @@ class TransformExecutor:
         fn = self._cache.get(key)
         if fn is None:
             self.misses += 1
+            obs.counter("serve.executor_cache", outcome="miss").inc()
             fn = self._build(key, mesh)
             self._cache[key] = fn
         else:
             self.hits += 1
+            obs.counter("serve.executor_cache", outcome="hit").inc()
+        obs.gauge("serve.executor_hit_rate").set(self.hit_rate())
         return fn
 
     def transform(self, batch, key: ExecKey, mesh: Optional[Any] = None):
-        """Run the batch through the key's compiled executable."""
-        return self.executable(key, mesh)(batch)
+        """Run the batch through the key's compiled executable.
+
+        The span measures HOST dispatch wall time (async dispatch —
+        no added sync); the executable itself is jit-cached, so the
+        span also brackets compile time on a cache miss.
+        """
+        fn = self.executable(key, mesh)
+        bucket = "x".join(str(s) for s in key.bucket)
+        with obs.span("serve.transform", subsystem="serve", bucket=bucket):
+            return fn(batch)
 
     def warmup(self, keys, mesh: Optional[Any] = None) -> int:
         """Pre-build executables for ``keys``; returns how many were new.
@@ -152,6 +164,7 @@ class TransformExecutor:
         for key in keys:
             if key not in self._cache:
                 self.misses += 1
+                obs.counter("serve.executor_cache", outcome="miss").inc()
                 self._cache[key] = self._build(key, mesh)
                 new += 1
         return new

@@ -36,9 +36,20 @@ import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.resilience.errors import DeadlineExceededError, LoadShedError
 
 Shape = Tuple[int, ...]
+
+
+def _note_admission(outcome: str, uid, bucket: Optional[Shape]) -> None:
+    """Count + log one admission outcome (admitted / shed /
+    deadline-expired), labelled by bucket for per-shape rates."""
+    b = "x".join(str(s) for s in bucket) if bucket else ""
+    obs.counter("serve.admission", outcome=outcome, bucket=b).inc()
+    obs.emit(obs.AdmissionEvent(
+        subsystem="serve", outcome=outcome, uid=uid, bucket=b,
+    ))
 
 
 def _as_bucket(shape: Sequence[int]) -> Shape:
@@ -126,6 +137,7 @@ class BucketScheduler:
         """Admit a request: route, shed, stamp, enqueue.  Returns the bucket."""
         bucket = self.route(req.image.shape)
         if self.pending() >= self.max_queue:
+            _note_admission("shed", req.uid, bucket)
             raise LoadShedError(
                 f"serve queue at its admission budget ({self.max_queue} "
                 f"requests); request {req.uid} shed — back off and resubmit"
@@ -133,6 +145,8 @@ class BucketScheduler:
         req.submitted_at = time.monotonic()
         req.bucket = bucket
         self._queues[bucket].append(req)
+        _note_admission("admitted", req.uid, bucket)
+        obs.gauge("serve.queue_depth").set(self.pending())
         return bucket
 
     def _expire(self, reqs, now: float):
@@ -161,6 +175,10 @@ class BucketScheduler:
             if overdue:
                 all_overdue.extend(overdue)
                 self._queues[bucket] = deque(live)
+                for r in overdue:
+                    _note_admission("deadline-expired", r.uid, bucket)
+        if all_overdue:
+            obs.gauge("serve.queue_depth").set(self.pending())
         return all_overdue
 
     def expire_batch(self, reqs) -> Tuple[List, List]:
@@ -172,7 +190,10 @@ class BucketScheduler:
         """
         if self.deadline_s is None:
             return [], list(reqs)
-        return self._expire(reqs, time.monotonic())
+        overdue, live = self._expire(reqs, time.monotonic())
+        for r in overdue:
+            _note_admission("deadline-expired", r.uid, r.bucket)
+        return overdue, live
 
     def next_batch(self, batch_slots: int) -> Tuple[Optional[Shape], List]:
         """Draw the next micro-batch: up to ``batch_slots`` requests, FIFO,
@@ -193,6 +214,7 @@ class BucketScheduler:
             return None, []
         q = self._queues[head_bucket]
         batch = [q.popleft() for _ in range(min(batch_slots, len(q)))]
+        obs.gauge("serve.queue_depth").set(self.pending())
         return head_bucket, batch
 
     def requeue_front(self, bucket: Shape, reqs: Sequence) -> None:

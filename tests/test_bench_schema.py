@@ -103,6 +103,32 @@ def test_serve_section_shape_and_invariants():
     assert gate.check_serve(_bench()) == []
 
 
+def test_observability_section_shape_and_invariants():
+    """The checked-in observability section must carry the measured obs
+    acceptance numbers: an instrumentation overhead inside the gate
+    budget, every subsystem covered by metric series AND spans after
+    the seeded chaos run, and at least one event of every kind in the
+    taxonomy from that run."""
+    o = _bench()["observability"]
+    assert 0 < o["overhead_x"] <= gate.MAX_OBS_OVERHEAD
+    for key in ("metric_subsystems", "span_subsystems"):
+        assert set(gate.OBS_SUBSYSTEMS) <= set(o[key]), key
+    for kind in gate.OBS_EVENT_KINDS:
+        assert o["events"].get(kind, 0) >= 1, kind
+    assert o["event_total"] >= sum(o["events"].values())
+    assert gate.check_obs(_bench()) == []
+
+
+def test_gate_event_taxonomy_matches_registry():
+    """gate.py is stdlib-only, so its event-kind expectations are a
+    literal — keep it in lockstep with the live obs event taxonomy."""
+    from repro import obs
+
+    assert set(gate.OBS_EVENT_KINDS) == {
+        t.__name__ for t in obs.EVENT_TYPES
+    }
+
+
 def test_gate_fault_taxonomy_matches_registry():
     """gate.py is stdlib-only, so its fault-class expectations are a
     literal — keep it in lockstep with the live injection taxonomy."""

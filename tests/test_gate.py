@@ -130,6 +130,13 @@ def _good_bench() -> dict:
             "overhead_off_x": 1.01,
             "overhead_on_x": 4.0,
         },
+        "observability": {
+            "overhead_x": 1.01,
+            "events": {k: 2 for k in gate.OBS_EVENT_KINDS},
+            "event_total": 12,
+            "metric_subsystems": list(gate.OBS_SUBSYSTEMS),
+            "span_subsystems": list(gate.OBS_SUBSYSTEMS),
+        },
     }
 
 
@@ -448,6 +455,64 @@ def test_serve_missing_section_fails_schema():
 def test_summary_mentions_serve():
     s = gate.summary(_good_bench())
     assert "serve 100.0 req/s" in s and "hit-rate=1.0" in s
+
+
+def test_obs_overhead_over_budget_fails():
+    """Instrumentation costing more than the gate budget on the serve
+    workload means it is no longer cheap enough to leave on."""
+    bench = _good_bench()
+    bench["observability"]["overhead_x"] = 1.25
+    fails = gate.check_obs(bench)
+    assert any("too expensive to leave on" in f for f in fails)
+
+
+def test_obs_subsystem_going_dark_fails():
+    bench = _good_bench()
+    bench["observability"]["metric_subsystems"].remove("codec")
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any(
+        "metric_subsystems" in f and "codec" in f for f in fails
+    )
+
+
+def test_obs_span_coverage_checked_separately():
+    bench = _good_bench()
+    bench["observability"]["span_subsystems"] = ["serve"]
+    fails = gate.check_obs(bench)
+    assert any("span_subsystems" in f for f in fails)
+    assert not any("metric_subsystems" in f for f in fails)
+
+
+def test_obs_silent_event_site_fails():
+    """A chaos run that produces zero events of a kind means that event
+    site stopped emitting — the instrumentation analogue of silent
+    corruption."""
+    bench = _good_bench()
+    bench["observability"]["events"]["RetryEvent"] = 0
+    fails = gate.check_obs(bench)
+    assert any("no RetryEvent" in f for f in fails)
+    bench["observability"]["events"].pop("HealEvent")
+    fails = gate.check_obs(bench)
+    assert any("no HealEvent" in f for f in fails)
+
+
+def test_obs_event_total_below_ring_count_fails():
+    bench = _good_bench()
+    bench["observability"]["event_total"] = 3
+    fails = gate.check_obs(bench)
+    assert any("unbounded total regressed" in f for f in fails)
+
+
+def test_obs_missing_section_fails_schema():
+    bench = _good_bench()
+    del bench["observability"]
+    fails = gate.gate_failures(_good_rows(), bench)
+    assert any("missing section 'observability'" in f for f in fails)
+
+
+def test_summary_mentions_obs():
+    s = gate.summary(_good_bench())
+    assert "obs overhead=1.01x" in s and "subsystems=5" in s
 
 
 def test_main_exit_codes(tmp_path):
